@@ -1,0 +1,193 @@
+"""§Perf hillclimb driver: lower a cell under a named variant, report
+the three roofline terms, and append the record to
+``benchmarks/hillclimb_results/``.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb \
+      --cell phi3-medium-14b/train_4k/single --variant sp_rs
+
+Variants (composable with +):
+  baseline   — paper-faithful sharding as in the main dry-run
+  sp_rs      — explicit shard_map reduce-scatter SP boundaries
+  no_fsdp    — params sharded over model only (no ZeRO-3 gathers)
+  no_pad     — exact head counts (no TP padding; exact-size KV caches)
+  kv8        — float8 KV cache
+  cap10      — MoE capacity factor 1.0 (from 1.25)
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") +
+    " --xla_force_host_platform_device_count=" +
+    os.environ.get("REPRO_DRYRUN_DEVICES", "512") +
+    " --xla_disable_hlo_passes=while-loop-invariant-code-motion,"
+    "while-loop-expensive-invariant-code-motion").strip()
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def apply_variant(cfg, variant: str):
+    opts = {"fsdp": True, "sp_rs": False, "ep2": False}
+    for v in variant.split("+"):
+        if v == "baseline":
+            continue
+        elif v == "sp_rs":
+            opts["sp_rs"] = True
+        elif v == "no_fsdp":
+            opts["fsdp"] = False
+        elif v == "no_pad":
+            cfg = dataclasses.replace(cfg, pad_heads=False)
+        elif v == "kv8":
+            cfg = dataclasses.replace(cfg,
+                                      kv_cache_dtype=jnp.float8_e4m3fn)
+        elif v == "cap10":
+            cfg = dataclasses.replace(cfg, capacity_factor=1.0)
+        elif v == "ep2":
+            opts["ep2"] = True
+        elif v == "remat_dots":
+            cfg = dataclasses.replace(cfg, remat_policy="dots")
+        else:
+            raise ValueError(f"unknown variant {v!r}")
+    return cfg, opts
+
+
+def run(cell: str, variant: str, out_dir: str):
+    from repro.analysis.memory_model import (activation_allowance,
+                                             sharded_bytes_per_chip)
+    from repro.analysis.roofline import build_roofline
+    from repro.configs import SHAPES, get_config
+    from repro.launch import steps as steps_mod
+    from repro.launch.dryrun import _replicated
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.api import build
+    from repro.parallel import axes as axes_mod
+    from repro.parallel import sharding as sh
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    arch, shape_name, mesh_kind = cell.split("/")
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    mesh_name = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+    shape = SHAPES[shape_name]
+    cfg, opts = apply_variant(get_config(arch), variant)
+    if opts["ep2"] and cfg.n_experts:
+        total = 1
+        for a in mesh.axis_names:
+            total *= mesh.shape[a]
+        cfg = dataclasses.replace(
+            cfg, moe_ep_data=True,
+            moe_tpe=max(1, total // cfg.n_experts))
+    tp = mesh.shape["model"]
+    chips = 1
+    for a in mesh.axis_names:
+        chips *= mesh.shape[a]
+    api = build(cfg, tp=tp)
+    rules = sh.axis_rules(mesh, shape.global_batch, shape.seq_len,
+                          fsdp=opts["fsdp"], sp_rs=opts["sp_rs"])
+    t0 = time.time()
+    with axes_mod.axis_rules(rules, mesh):
+        specs = api.input_specs(shape)
+        batch_shardings = sh.batch_shardings(specs, mesh, rules)
+        if shape.kind == "train":
+            state_shape = jax.eval_shape(
+                lambda: steps_mod.init_train_state(api,
+                                                   jax.random.PRNGKey(0)))
+            ps = lambda t: sh.param_shardings(t, mesh, fsdp=opts["fsdp"],
+                                              moe_ep_data=opts["ep2"])
+            state_shardings = steps_mod.TrainState(
+                params=ps(state_shape.params),
+                opt=type(state_shape.opt)(m=ps(state_shape.opt.m),
+                                          v=ps(state_shape.opt.v),
+                                          step=_replicated(mesh)),
+                step=_replicated(mesh))
+            jitted = jax.jit(steps_mod.make_train_step(api),
+                             in_shardings=(state_shardings,
+                                           batch_shardings),
+                             out_shardings=(state_shardings, None),
+                             donate_argnums=(0,))
+            compiled = jitted.lower(state_shape, specs).compile()
+            state_b = sharded_bytes_per_chip(state_shape,
+                                             state_shardings, mesh)
+        elif shape.kind == "prefill":
+            params_shape = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+            p_shard = sh.param_shardings(params_shape, mesh,
+                                         fsdp=opts["fsdp"],
+                                         moe_ep_data=opts["ep2"])
+            cache_shape = jax.eval_shape(
+                lambda: api.init_cache(shape.global_batch,
+                                       shape.seq_len))
+            _, cache_sh = sh.output_shardings_for_decode(mesh, rules,
+                                                         cache_shape)
+            logits_sh = NamedSharding(mesh, P(rules["batch"], "model"))
+            jitted = jax.jit(steps_mod.make_prefill_step(
+                api, max_seq=shape.seq_len),
+                in_shardings=(p_shard, batch_shardings),
+                out_shardings=(logits_sh, cache_sh))
+            compiled = jitted.lower(params_shape, specs).compile()
+            state_b = sharded_bytes_per_chip(params_shape, p_shard,
+                                             mesh) \
+                + sharded_bytes_per_chip(cache_shape, cache_sh, mesh)
+        else:
+            params_shape = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+            p_shard = sh.param_shardings(params_shape, mesh,
+                                         fsdp=opts["fsdp"],
+                                         moe_ep_data=opts["ep2"])
+            logits_sh, cache_sh = sh.output_shardings_for_decode(
+                mesh, rules, specs["caches"])
+            jitted = jax.jit(steps_mod.make_serve_step(api),
+                             in_shardings=(p_shard, cache_sh,
+                                           batch_shardings["token"],
+                                           batch_shardings["cur_pos"]),
+                             out_shardings=(logits_sh, cache_sh),
+                             donate_argnums=(1,))
+            compiled = jitted.lower(params_shape, specs["caches"],
+                                    specs["token"],
+                                    specs["cur_pos"]).compile()
+            state_b = sharded_bytes_per_chip(params_shape, p_shard,
+                                             mesh) \
+                + sharded_bytes_per_chip(specs["caches"], cache_sh, mesh)
+
+    rl = build_roofline(arch, shape.name, mesh_name, compiled, cfg,
+                        shape.kind, shape.seq_len, shape.global_batch,
+                        chips)
+    act_b = activation_allowance(cfg, shape.seq_len, shape.global_batch,
+                                 mesh, shape.kind)
+    rec = {
+        "cell": cell, "variant": variant,
+        "elapsed_s": round(time.time() - t0, 1),
+        "t_compute_ms": round(rl.t_compute * 1e3, 2),
+        "t_memory_ms": round(rl.t_memory * 1e3, 2),
+        "t_collective_ms": round(rl.t_collective * 1e3, 2),
+        "bottleneck": rl.bottleneck,
+        "step_bound_ms": round(rl.step_time_bound * 1e3, 2),
+        "useful_flops_fraction": round(rl.useful_flops_fraction, 3),
+        "roofline_fraction": round(rl.roofline_fraction, 4),
+        "coll_detail_GB": {k: round(v / 1e9, 2)
+                           for k, v in (rl.coll_detail or {}).items()},
+        "analytic_memory_gb": round((state_b + act_b) / 1e9, 2),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    tag = cell.replace("/", "_") + "__" + variant
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    help="arch/shape/single|multi")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "hillclimb_results"))
+    args = ap.parse_args()
+    run(args.cell, args.variant, args.out)
+
+
+if __name__ == "__main__":
+    main()

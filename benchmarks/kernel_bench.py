@@ -1,0 +1,71 @@
+"""Kernel micro-benchmarks: wall time of the interpret-mode kernels
+(correctness-weighted) + the analytic HBM-traffic model per block shape
+(the quantity the paper's technique optimizes — measurable without TPU).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tpu_adapter import (BlockShape, arithmetic_intensity,
+                                    hbm_traffic_model, lb_block_shape)
+
+
+def _time_call(fn, *args, reps=3):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_matmul_traffic():
+    """Eq.(14) HBM bytes for naive vs lower-bound block shapes."""
+    rows = []
+    for m, n, k in [(4096, 4096, 4096), (8192, 8192, 8192),
+                    (32768, 5120, 5120)]:
+        naive = BlockShape(bm=128, bn=128, bk=128)
+        lb = lb_block_shape(m, n, k)
+        t_n = hbm_traffic_model(m, n, k, naive)
+        t_l = hbm_traffic_model(m, n, k, lb)
+        rows.append((f"kernels/matmul_{m}x{n}x{k}/naive_GB", 0.0,
+                     round(t_n / 1e9, 2)))
+        rows.append((f"kernels/matmul_{m}x{n}x{k}/lb_GB", 0.0,
+                     round(t_l / 1e9, 2)))
+        rows.append((f"kernels/matmul_{m}x{n}x{k}/reduction_x", 0.0,
+                     round(t_n / t_l, 2)))
+        rows.append((f"kernels/matmul_{m}x{n}x{k}/arith_intensity", 0.0,
+                     round(arithmetic_intensity(m, n, k, lb), 1)))
+    return rows
+
+
+def bench_kernel_walltime():
+    """Interpret-mode sanity timings (not TPU performance)."""
+    from repro.kernels.attention_block.ops import flash_attention
+    from repro.kernels.conv_lb.ops import conv2d_lb
+    from repro.kernels.matmul_lb.ops import matmul_lb
+
+    rows = []
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 256))
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 256))
+    rows.append(("kernels/matmul_lb_256_interp_us",
+                 _time_call(lambda a, b: matmul_lb(a, b), x, w), 0))
+    xi = jax.random.normal(jax.random.PRNGKey(0), (1, 16, 16, 8))
+    wi = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 8, 16))
+    rows.append(("kernels/conv_lb_16_interp_us",
+                 _time_call(lambda a, b: conv2d_lb(a, b, padding=1),
+                            xi, wi), 0))
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 128, 4, 16))
+    kk = jax.random.normal(jax.random.PRNGKey(1), (1, 128, 2, 16))
+    rows.append(("kernels/flash_attn_128_interp_us",
+                 _time_call(lambda a, b: flash_attention(a, b, b,
+                                                         bq=64, bk=64),
+                            q, kk), 0))
+    return rows
+
+
+ALL_KERNELS = [bench_matmul_traffic, bench_kernel_walltime]

@@ -1,0 +1,82 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run JSON records (run after repro.launch.dryrun)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "dryrun_results")
+HILL = os.path.join(os.path.dirname(__file__), "hillclimb_results")
+
+
+def load(d):
+    out = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def dryrun_table(recs) -> str:
+    rows = ["| arch | shape | mesh | lower+compile (s) | HLO GFLOPs/chip "
+            "| HBM GB/chip | coll GB/chip | state+act GB/chip (analytic) "
+            "| cpu-BA GB/chip |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"],
+                                         r["mesh"])):
+        ma = r.get("memory_analysis") or {}
+        cpu_gb = ((ma.get("temp_size_in_bytes") or 0)
+                  + (ma.get("argument_size_in_bytes") or 0)) / 1e9
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['lower_s'] + r['compile_s']:.0f} "
+            f"| {r['flops_per_chip']/1e9:,.0f} "
+            f"| {r['hbm_bytes_per_chip']/1e9:.1f} "
+            f"| {r['coll_bytes_per_chip']/1e9:.2f} "
+            f"| {r.get('analytic_memory_gb', 0):.1f} "
+            f"| {cpu_gb:.1f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs, mesh="16x16") -> str:
+    rows = ["| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) "
+            "| bottleneck | MODEL/HLO flops | roofline fraction |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in sorted([r for r in recs if r["mesh"] == mesh],
+                    key=lambda r: (r["arch"], r["shape"])):
+        rows.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['t_compute_ms']:.1f} | {r['t_memory_ms']:.1f} "
+            f"| {r['t_collective_ms']:.1f} | {r['bottleneck']} "
+            f"| {r['useful_flops_fraction']:.2f} "
+            f"| {r['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def hillclimb_table(recs) -> str:
+    rows = ["| cell | variant | t_comp | t_mem | t_coll | bound (ms) "
+            "| roofline | mem GB |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        rows.append(
+            f"| {r['cell']} | {r['variant']} | {r['t_compute_ms']:.0f} "
+            f"| {r['t_memory_ms']:.0f} | {r['t_collective_ms']:.0f} "
+            f"| {r['step_bound_ms']:.0f} | {r['roofline_fraction']:.4f} "
+            f"| {r['analytic_memory_gb']:.1f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    recs = load(RESULTS)
+    print("## Dry-run table\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(recs))
+    print("\n## Roofline (multi-pod)\n")
+    print(roofline_table(recs, mesh="2x16x16"))
+    hc = load(HILL)
+    if hc:
+        print("\n## Hillclimb\n")
+        print(hillclimb_table(hc))

@@ -1,0 +1,211 @@
+"""Paper table/figure reproductions (one function per table/figure).
+
+Every function returns a list of (name, us_per_call, derived) rows for
+the ``benchmarks.run`` CSV contract; "derived" carries the headline
+quantity the paper reports (MB of traffic, pJ/MAC, ratios, ...).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.dataflow import OursDataflow, dataflow_zoo, found_minimum, \
+    network_traffic
+from repro.core.energy import IMPLEMENTATIONS
+from repro.core.lower_bound import (energy_lower_bound_pj,
+                                    q_dram_practical,
+                                    reg_lower_bound_writes)
+from repro.core.mapping import fit_tiling_to_array, map_iteration
+from repro.core.simulator import simulate_layer, simulate_network
+from repro.core.vgg import vgg16_conv_layers
+
+MB = 2 / 1e6          # 16-bit words -> MB
+EYERISS_S = int(173.5 * 1024 // 2)
+EYERISS_DRAM_COMPR_MB = 321.3      # published, Eyeriss w/ compression
+EYERISS_DRAM_UNCOMPR_MB = 528.8    # published, w/o compression
+EYERISS_GBUF_MB = 3436.0           # published GBuf traffic
+FLEXFLOW_DRAM_PER_MAC = 0.0049     # published, 192KB on-chip
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def fig13_dataflow_comparison():
+    """Fig. 13: DRAM access vs effective on-chip memory, all dataflows."""
+    layers = vgg16_conv_layers(3)
+    rows = []
+    for kb in (33.25, 66.5, 133, 173.5, 266):
+        s = int(kb * 1024 // 2)
+        lb = sum(q_dram_practical(l, s) for l in layers) * MB
+        rows.append((f"fig13/lower_bound/{kb}KB", 0.0, round(lb, 1)))
+        for df in dataflow_zoo():
+            q, us = _timed(lambda df=df: network_traffic(layers, s, df))
+            rows.append((f"fig13/{df.name}/{kb}KB", us,
+                         round(q.total * MB, 1)))
+        fm, us = _timed(
+            lambda: sum(found_minimum(l, s)[2].total for l in layers))
+        rows.append((f"fig13/found_minimum/{kb}KB", us,
+                     round(fm * MB, 1)))
+    return rows
+
+
+def fig14_per_layer():
+    """Fig. 14: per-layer DRAM volume at 66.5KB (ours vs LB vs 2nd/3rd)."""
+    layers = vgg16_conv_layers(3)
+    s = int(66.5 * 1024 // 2)
+    ours = OursDataflow()
+    rows = []
+    for layer in layers:
+        lb = q_dram_practical(layer, s) * MB
+        (t, q), us = _timed(lambda l=layer: ours.search(l, s))
+        rows.append((f"fig14/{layer.name}/lower_bound", 0.0,
+                     round(lb, 1)))
+        rows.append((f"fig14/{layer.name}/ours", us,
+                     round(q.total * MB, 1)))
+    return rows
+
+
+def fig15_table3_eyeriss():
+    """Fig. 15 / Table III: DRAM traffic vs Eyeriss at 173.5KB."""
+    layers = vgg16_conv_layers(3)
+    (ours, us) = _timed(
+        lambda: network_traffic(layers, EYERISS_S, OursDataflow()))
+    lb = sum(q_dram_practical(l, EYERISS_S) for l in layers)
+    macs = sum(l.macs for l in layers)
+    rows = [
+        ("table3/lower_bound_MB", 0.0, round(lb * MB, 1)),
+        ("table3/ours_MB", us, round(ours.total * MB, 1)),
+        ("table3/eyeriss_compressed_MB", 0.0, EYERISS_DRAM_COMPR_MB),
+        ("table3/eyeriss_uncompressed_MB", 0.0, EYERISS_DRAM_UNCOMPR_MB),
+        ("table3/ours_dram_per_mac", 0.0,
+         round(ours.total / macs, 4)),
+        ("table3/flexflow_dram_per_mac", 0.0, FLEXFLOW_DRAM_PER_MAC),
+        ("table3/reduction_vs_uncompressed_pct", 0.0,
+         round((1 - ours.total * MB / EYERISS_DRAM_UNCOMPR_MB) * 100, 1)),
+    ]
+    return rows
+
+
+def table4_gbuf_ratios():
+    """Table IV: GBuf-to-DRAM ratios for implementation 1."""
+    layers = vgg16_conv_layers(3)
+    impl = IMPLEMENTATIONS[0]
+    df = OursDataflow()
+    tot = {"dr_in": 0.0, "dr_w": 0.0, "dr_out": 0.0,
+           "gr_in": 0.0, "gw_in": 0.0, "gr_w": 0.0, "gw_w": 0.0}
+    t0 = time.perf_counter()
+    for layer in layers:
+        t = fit_tiling_to_array(layer, impl.array)
+        dram = df.traffic(layer, t)
+        rep = map_iteration(layer, t, impl.array, dram)
+        tot["dr_in"] += dram.reads_in
+        tot["dr_w"] += dram.reads_w
+        tot["dr_out"] += dram.writes_out
+        tot["gr_in"] += rep.gbuf_reads_in
+        tot["gw_in"] += rep.gbuf_writes_in
+        tot["gr_w"] += rep.gbuf_reads_w
+        tot["gw_w"] += rep.gbuf_writes_w
+    us = (time.perf_counter() - t0) * 1e6
+    return [
+        ("table4/dram_read_in_MB", us, round(tot["dr_in"] * MB, 1)),
+        ("table4/dram_read_w_MB", 0.0, round(tot["dr_w"] * MB, 1)),
+        ("table4/dram_write_out_MB", 0.0, round(tot["dr_out"] * MB, 1)),
+        ("table4/gbuf_read_in_ratio", 0.0,
+         round(tot["gr_in"] / tot["dr_in"], 2)),
+        ("table4/gbuf_write_in_ratio", 0.0,
+         round(tot["gw_in"] / tot["dr_in"], 2)),
+        ("table4/gbuf_read_w_ratio", 0.0,
+         round(tot["gr_w"] / tot["dr_w"], 2)),
+        ("table4/gbuf_write_w_ratio", 0.0,
+         round(tot["gw_w"] / tot["dr_w"], 2)),
+    ]
+
+
+def fig16_gbuf_vs_eyeriss():
+    """Fig. 16: GBuf traffic vs Eyeriss (log scale in the paper)."""
+    layers = vgg16_conv_layers(3)
+    rows = []
+    for impl in IMPLEMENTATIONS:
+        r, us = _timed(lambda impl=impl: simulate_network(layers, impl))
+        rows.append((f"fig16/{impl.name}_gbuf_MB", us,
+                     round(r.gbuf_mb, 1)))
+        rows.append((f"fig16/{impl.name}_reduction_x", 0.0,
+                     round(EYERISS_GBUF_MB / r.gbuf_mb, 1)))
+    return rows
+
+
+def fig17_reg_access():
+    """Fig. 17: Reg access vs the #MACs lower bound."""
+    layers = vgg16_conv_layers(3)
+    lb = sum(reg_lower_bound_writes(l) for l in layers)
+    rows = [("fig17/lower_bound_Gaccess", 0.0, round(lb / 1e9, 2))]
+    for impl in IMPLEMENTATIONS:
+        r, us = _timed(lambda impl=impl: simulate_network(layers, impl))
+        rows.append((f"fig17/{impl.name}_Gaccess", us,
+                     round(r.reg_accesses / 1e9, 2)))
+        rows.append((f"fig17/{impl.name}_over_bound_pct", 0.0,
+                     round((r.reg_accesses / lb - 1) * 100, 1)))
+    return rows
+
+
+def fig18_energy():
+    """Fig. 18: pJ/MAC vs theoretical best (paper: gap 37-87%)."""
+    layers = vgg16_conv_layers(3)
+    macs = sum(l.macs for l in layers)
+    rows = []
+    lreg_pj = {256: 3.39, 128: 1.92, 64: 1.16}
+    for impl in IMPLEMENTATIONS:
+        r, us = _timed(lambda impl=impl: simulate_network(layers, impl))
+        lb = sum(energy_lower_bound_pj(
+            l, impl.array.effective_s, dram_pj=427.9, mac_pj=4.16,
+            reg_pj=lreg_pj[impl.lreg_bytes]) for l in layers)
+        rows.append((f"fig18/{impl.name}_pj_per_mac", us,
+                     round(r.pj_per_mac, 2)))
+        rows.append((f"fig18/{impl.name}_lb_pj_per_mac", 0.0,
+                     round(lb / macs, 2)))
+        rows.append((f"fig18/{impl.name}_gap_pct", 0.0,
+                     round((r.pj_per_mac / (lb / macs) - 1) * 100, 1)))
+    return rows
+
+
+def fig19_perf():
+    """Fig. 19: performance/power across implementations."""
+    layers = vgg16_conv_layers(3)
+    rows = []
+    for impl in IMPLEMENTATIONS:
+        r, us = _timed(lambda impl=impl: simulate_network(layers, impl))
+        rows.append((f"fig19/{impl.name}_time_ms", us,
+                     round(r.total_time_s * 1e3, 1)))
+        rows.append((f"fig19/{impl.name}_gops", 0.0, round(r.gops, 1)))
+    return rows
+
+
+def fig20_utilization():
+    """Fig. 20: memory/PE utilization."""
+    layers = vgg16_conv_layers(3)
+    df = OursDataflow()
+    rows = []
+    for impl in IMPLEMENTATIONS:
+        pe_u, lreg_u = [], []
+        t0 = time.perf_counter()
+        for layer in layers:
+            t = fit_tiling_to_array(layer, impl.array)
+            rep = map_iteration(layer, t, impl.array,
+                                df.traffic(layer, t))
+            pe_u.append(rep.pe_utilization)
+            lreg_u.append(rep.lreg_utilization)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"fig20/{impl.name}_pe_util", us,
+                     round(sum(pe_u) / len(pe_u), 3)))
+        rows.append((f"fig20/{impl.name}_lreg_util", 0.0,
+                     round(sum(lreg_u) / len(lreg_u), 3)))
+    return rows
+
+
+ALL_TABLES = [fig13_dataflow_comparison, fig14_per_layer,
+              fig15_table3_eyeriss, table4_gbuf_ratios,
+              fig16_gbuf_vs_eyeriss, fig17_reg_access, fig18_energy,
+              fig19_perf, fig20_utilization]

@@ -1,0 +1,44 @@
+"""Roofline summary from the dry-run artifacts (deliverable g).
+
+Reads the per-cell JSON records produced by ``repro.launch.dryrun`` and
+emits the three roofline terms + bottleneck + useful-FLOPs ratio per
+(arch x shape x mesh).  Run the dry-run first; cells without records
+are reported as missing rather than silently skipped.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "dryrun_results")
+
+
+def load_records(results_dir: str = RESULTS_DIR) -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def bench_roofline():
+    recs = load_records()
+    if not recs:
+        return [("roofline/NO_DRYRUN_RECORDS_RUN_dryrun_first", 0.0, 0)]
+    rows = []
+    for r in recs:
+        cell = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        rows.append((f"roofline/{cell}/t_compute_ms", 0.0,
+                     round(r["t_compute_ms"], 2)))
+        rows.append((f"roofline/{cell}/t_memory_ms", 0.0,
+                     round(r["t_memory_ms"], 2)))
+        rows.append((f"roofline/{cell}/t_collective_ms", 0.0,
+                     round(r["t_collective_ms"], 2)))
+        rows.append((f"roofline/{cell}/bottleneck={r['bottleneck']}",
+                     0.0, round(r["roofline_fraction"], 3)))
+    return rows
+
+
+ALL_ROOFLINE = [bench_roofline]

@@ -1,0 +1,34 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark function names")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks.kernel_bench import ALL_KERNELS
+    from benchmarks.paper_tables import ALL_TABLES
+    from benchmarks.roofline_bench import ALL_ROOFLINE
+
+    benches = ALL_TABLES + ALL_KERNELS
+    if not args.skip_roofline:
+        benches = benches + ALL_ROOFLINE
+
+    print("name,us_per_call,derived")
+    for fn in benches:
+        if args.only and args.only not in fn.__name__:
+            continue
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            print(f"{fn.__name__}/ERROR,0.0,{e!r}", file=sys.stderr)
+            raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""The paper's analysis, end to end, for any conv layer you type in.
+
+Computes the communication lower bound (Thm 2 / Eq 15), searches the
+bound-attaining tiling, compares the dataflow zoo, maps the layer onto
+the Table-I accelerator, and prints the TPU-adapted Pallas block shape
+the same theory picks for an equivalent matmul.
+
+  PYTHONPATH=src python examples/accelerator_analysis.py \
+      --ci 128 --co 256 --hw 56 --batch 3 --s-kb 66.5
+"""
+
+import argparse
+
+from repro.core import (ConvLayer, IMPLEMENTATIONS, OursDataflow,
+                        dataflow_zoo, lb_block_shape, q_dram_ideal,
+                        q_dram_naive, q_dram_practical, simulate_layer)
+from repro.core.lower_bound import optimal_block
+
+MB = 2 / 1e6
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=3)
+    ap.add_argument("--ci", type=int, default=128)
+    ap.add_argument("--co", type=int, default=256)
+    ap.add_argument("--hw", type=int, default=56)
+    ap.add_argument("--k", type=int, default=3)
+    ap.add_argument("--stride", type=int, default=1)
+    ap.add_argument("--s-kb", type=float, default=66.5)
+    args = ap.parse_args()
+
+    layer = ConvLayer("user", args.batch, args.ci, args.co, args.hw,
+                      args.hw, args.k, args.k, stride=args.stride,
+                      pad=args.k // 2)
+    s = int(args.s_kb * 1024 // 2)
+    print(f"layer: {layer}")
+    print(f"  MACs {layer.macs/1e6:.1f}M   WndR reuse R = "
+          f"{layer.reuse_r:.2f}   on-chip S = {args.s_kb}KB\n")
+
+    print("off-chip communication (MB):")
+    print(f"  naive (no reuse)      {q_dram_naive(layer)*MB:10.1f}")
+    print(f"  lower bound (Eq.15)   {q_dram_practical(layer, s)*MB:10.1f}")
+    print(f"  ideal (infinite S)    {q_dram_ideal(layer)*MB:10.1f}\n")
+
+    blk = optimal_block(s, layer.reuse_r)
+    print(f"bound-attaining block (Sec IV-C): u={blk.u} z={blk.z} "
+          f"(u/z={blk.u/blk.z:.1f} ~ R={layer.reuse_r:.1f})\n")
+
+    print("dataflow zoo at this S:")
+    for df in dataflow_zoo():
+        t, q = df.search(layer, s)
+        star = " <== ours" if df.name == "ours" else ""
+        print(f"  {df.name:8s} {q.total*MB:10.1f} MB  "
+              f"(b{t.b} z{t.z} y{t.y} x{t.x} k{t.k}){star}")
+
+    impl = IMPLEMENTATIONS[0]
+    r = simulate_layer(layer, impl)
+    print(f"\non Table-I implementation 1 (16x16 PEs, 66.5KB):")
+    print(f"  DRAM {r.dram.total*MB:.1f} MB   GBuf "
+          f"{r.mapping.gbuf_total*MB:.1f} MB   "
+          f"Regs {r.mapping.reg_total/1e6:.0f}M accesses")
+    print(f"  energy {r.pj_per_mac:.2f} pJ/MAC   time {r.time_s*1e3:.1f} ms"
+          f"   PE util {r.mapping.pe_utilization:.2f}")
+
+    m, n, k = layer.mm_m, layer.mm_n, layer.mm_k
+    pall = lb_block_shape(m, n, k)
+    print(f"\nTPU adaptation (conv as {m}x{k} @ {k}x{n} matmul):")
+    print(f"  Pallas BlockSpec bm={pall.bm} bn={pall.bn} bk={pall.bk} "
+          f"(VMEM {pall.vmem_bytes(2)/1e6:.1f} MB, psums "
+          f"{pall.psum_bytes/1e6:.1f} MB)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: train a tiny LM, checkpoint it, and greedy-decode.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.data.synthetic import DataConfig, global_batch_at
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import make_trainer
+from repro.models.api import build
+
+
+def main():
+    cfg = reduced(get_config("minitron-4b"), d_model=64, vocab=64,
+                  n_layers=2, attn_chunk=32)
+    mesh = make_host_mesh()
+    run_step, state, api, rules = make_trainer(
+        cfg, mesh, global_batch=8, seq_len=64, peak_lr=3e-3,
+        total_steps=40)
+    dc = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8)
+
+    print(f"training {cfg.name} (reduced) on {mesh.devices.size} "
+          f"device(s)")
+    for step in range(40):
+        state, metrics = run_step(state, global_batch_at(dc, step))
+        if step % 10 == 0 or step == 39:
+            print(f"  step {step:3d}  loss {float(metrics['loss']):.4f}")
+
+    # greedy decode a continuation
+    prompt = global_batch_at(dc, 999)["tokens"][:2, :16]
+    logits, caches = api.prefill(state.params, {"tokens": prompt},
+                                 max_seq=32)
+    toks = [int(jnp.argmax(logits[0]))]
+    for i in range(8):
+        logits, caches = api.decode_step(
+            state.params, caches,
+            jnp.array([[toks[-1]], [toks[-1]]], jnp.int32),
+            jnp.asarray(16 + i, jnp.int32))
+        toks.append(int(jnp.argmax(logits[0])))
+    print("greedy continuation:", toks)
+    # the synthetic corpus follows t' = 31t+7 mod V most of the time —
+    # a trained model should have picked that up for some steps
+    follows = sum((toks[i + 1] == (toks[i] * 31 + 7) % cfg.vocab)
+                  for i in range(len(toks) - 1))
+    print(f"markov-rule hits: {follows}/{len(toks) - 1}")
+
+
+if __name__ == "__main__":
+    main()

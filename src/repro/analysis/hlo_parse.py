@@ -1,0 +1,106 @@
+"""Collective-traffic extraction from post-SPMD HLO text.
+
+``cost_analysis`` does not expose collective bytes, so we parse the
+partitioned module: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute line contributes per-chip link traffic
+under a ring model:
+
+  all-reduce      2 * B * (g-1)/g        (B = result bytes)
+  all-gather      B * (g-1)/g
+  reduce-scatter  B_operand * (g-1)/g
+  all-to-all      B * (g-1)/g
+  collective-permute  B
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^=]*\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # conservative default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Per-chip link bytes from one partition's HLO module text."""
+    by_kind: dict[str, float] = defaultdict(float)
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_type, kind = m.group(1), m.group(2)
+        b = _shape_bytes(result_type)
+        g = _group_size(line)
+        ring = (g - 1) / g if g > 1 else 0.0
+        if kind == "all-reduce":
+            vol = 2.0 * b * ring
+        elif kind == "all-gather":
+            vol = b * ring
+        elif kind == "reduce-scatter":
+            # operand bytes: result * group (operand was unscattered)
+            vol = b * g * ring
+        elif kind == "all-to-all":
+            vol = b * ring
+        else:  # collective-permute
+            vol = float(b)
+        by_kind[kind] += vol
+        counts[kind] += 1
+    return CollectiveStats(dict(by_kind), dict(counts))
+
+
+def op_histogram(hlo_text: str, ops: tuple[str, ...] = (
+        "fusion", "all-reduce", "all-gather", "reduce-scatter",
+        "all-to-all", "collective-permute", "dot", "convolution",
+        "dynamic-slice", "dynamic-update-slice", "copy")) -> dict:
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        for op in ops:
+            if f" {op}(" in line or f" {op}-start(" in line:
+                counts[op] += 1
+    return dict(counts)

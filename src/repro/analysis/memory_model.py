@@ -1,0 +1,78 @@
+"""Analytic per-chip HBM model for the dry-run records.
+
+The CPU backend's ``memory_analysis()`` systematically overestimates
+TPU memory for bf16 models: XLA-CPU promotes every bf16 dot to f32
+(2x operands + f32 results) and its single-core list scheduler keeps
+dozens of such buffers live simultaneously; TPU executes bf16 natively
+and serializes the layer pipeline.  This module computes the exact
+sharded state footprint (params / optimizer / caches / inputs from
+their ShapeDtypeStructs and PartitionSpecs) plus a transient-activation
+allowance, which is the number the "does it fit 16 GB" judgment uses.
+Both numbers are recorded (EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+
+def _shards(spec, mesh: Mesh) -> int:
+    n = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        for a in axes:
+            n *= mesh.shape[a]
+    return n
+
+
+def sharded_bytes_per_chip(shapes: Any, shardings: Any, mesh: Mesh) -> int:
+    """Sum of leaf bytes divided by each leaf's shard count."""
+    total = 0
+    for leaf, sh in zip(jax.tree_util.tree_leaves(shapes),
+                        jax.tree_util.tree_leaves(
+                            shardings,
+                            is_leaf=lambda x: isinstance(x,
+                                                         NamedSharding))):
+        size = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        if isinstance(sh, NamedSharding):
+            size //= max(1, _shards(sh.spec, mesh))
+        total += size
+    return total
+
+
+def activation_allowance(cfg, seq_len: int, global_batch: int,
+                         mesh: Mesh, kind: str) -> int:
+    """Residual-stack (remat-saved) + transient working-set estimate.
+
+    train:   nb x (B_l, S_l, d) bf16 saved block boundaries
+             + ~6 live full-seq activations of the widest layer dim
+    prefill: same transient, no saved stack (no backward)
+    decode:  negligible activations (counted in the transient term).
+    """
+    from repro.models.transformer import n_blocks
+    mp = mesh.shape.get("model", 1)
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape and global_batch % (dp * mesh.shape[a]) == 0:
+            dp *= mesh.shape[a]
+    b_l = max(1, global_batch // dp)
+    # wide layer outputs (d_ff, conv_dim, heads) are model-sharded; only
+    # the d_model residual is ever live at full width per chip
+    widest = max(cfg.d_model,
+                 ((cfg.d_inner + 2 * cfg.ssm_state) if cfg.ssm_state
+                  else 0) // mp,
+                 2 * cfg.d_ff // max(1, mp))
+    if kind == "decode":
+        return 6 * b_l * widest * 4
+    transient = 6 * b_l * seq_len * widest * 2          # bf16 live set
+    if kind == "prefill":
+        return transient
+    nb = n_blocks(cfg) if cfg.family != "encdec" else cfg.n_layers
+    stack = nb * b_l * (seq_len // mp) * cfg.d_model * 2
+    return stack + transient

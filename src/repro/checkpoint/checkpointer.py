@@ -1,0 +1,179 @@
+"""Atomic, versioned, multi-host-aware checkpointing.
+
+Layout: ``<dir>/step_<N>/`` containing one ``.npz`` per host-shard plus
+a ``manifest.json`` (pytree structure, dtypes, step, timestamp).  A
+checkpoint directory is written under a temp name and atomically
+renamed, so a crash mid-save never corrupts the latest checkpoint;
+``restore_latest`` picks the newest *complete* step.
+
+``AsyncCheckpointer`` runs saves on a background thread: the step loop
+hands over jax.Arrays (device->host copy happens on the worker), so
+training never blocks on the filesystem.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def tree_paths(tree: Any) -> list[str]:
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path) for path, _ in paths]
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, host_id: int = 0,
+         n_hosts: int = 1) -> str:
+    """Write one checkpoint step atomically.  Returns the final path."""
+    leaves, _ = _flatten(tree)
+    names = tree_paths(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + f".tmp_{host_id}"
+    os.makedirs(tmp, exist_ok=True)
+
+    def to_np(l):
+        a = np.asarray(l)
+        if a.dtype.name == "bfloat16":      # npz has no bf16: widen
+            a = a.astype(np.float32)
+        return a
+
+    arrays = {f"leaf_{i}": to_np(l) for i, (l, n)
+              in enumerate(zip(leaves, names))
+              if i % n_hosts == host_id}
+    np.savez(os.path.join(tmp, f"shard_{host_id}.npz"), **arrays)
+    manifest = {
+        "step": step, "time": time.time(), "n_hosts": n_hosts,
+        "names": names,
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        "shapes": [list(l.shape) for l in leaves],
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if host_id == 0:
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    return final
+
+
+def _complete(path: str) -> bool:
+    return os.path.exists(os.path.join(path, "manifest.json"))
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and "tmp" not in d
+             and _complete(os.path.join(ckpt_dir, d))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any, *, host_id: int = 0,
+            n_hosts: int = 1) -> Any:
+    """Restore into the structure of ``like`` (shapes validated)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = _flatten(like)
+    out = list(leaves)
+    for h in range(manifest["n_hosts"]):
+        f = os.path.join(path, f"shard_{h}.npz")
+        if not os.path.exists(f):
+            continue
+        data = np.load(f)
+        for key in data.files:
+            i = int(key.split("_")[1])
+            arr = data[key]
+            if list(arr.shape) != list(leaves[i].shape):
+                raise ValueError(
+                    f"shape mismatch restoring leaf {i}: "
+                    f"{arr.shape} vs {leaves[i].shape}")
+            # use dtype METADATA only: `like` leaves may be donated
+            # device buffers whose data is long gone
+            out[i] = arr.astype(manifest["dtypes"][i])
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_latest(ckpt_dir: str, like: Any, **kw) -> tuple[Any, int] | None:
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None
+    return restore(ckpt_dir, step, like, **kw), step
+
+
+class AsyncCheckpointer:
+    """Non-blocking saves; at most one in flight, newest wins."""
+
+    def __init__(self, ckpt_dir: str, *, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._pending: tuple[int, Any] | None = None
+        self._lock = threading.Lock()
+        self._event = threading.Event()
+        self._stop = False
+        self._last_saved: int | None = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def submit(self, step: int, tree: Any):
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)
+        with self._lock:
+            self._pending = (step, host_tree)
+        self._event.set()
+
+    def _worker(self):
+        while True:
+            self._event.wait()
+            self._event.clear()
+            if self._stop and self._pending is None:
+                return
+            with self._lock:
+                job, self._pending = self._pending, None
+            if job is None:
+                if self._stop:
+                    return
+                continue
+            step, tree = job
+            save(self.ckpt_dir, step, tree)
+            self._last_saved = step
+            self._gc()
+            if self._stop:
+                return
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.ckpt_dir)
+            if d.startswith("step_") and "tmp" not in d)
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir,
+                                       f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def wait(self, timeout: float = 30.0):
+        t0 = time.time()
+        while self._pending is not None and time.time() - t0 < timeout:
+            time.sleep(0.01)
+        # wait for worker to drain the last job
+        while self._last_saved is None and time.time() - t0 < timeout \
+                and latest_step(self.ckpt_dir) is None:
+            time.sleep(0.01)
+
+    def close(self):
+        self._stop = True
+        self._event.set()
+        self._thread.join(timeout=30)

@@ -1,0 +1,34 @@
+# The paper's primary contribution as an executable library:
+# communication lower bounds (Sec. III), the bound-attaining dataflow
+# and its competitors (Sec. IV-A), the on-chip mapping model (Sec. IV-B),
+# the energy/performance model (Sec. V/VI), and the TPU adaptation of
+# the optimality conditions used by the Pallas kernels.
+
+from repro.core.layer import (ConvLayer, fc_layer, matmul_layer)
+from repro.core.lower_bound import (
+    energy_lower_bound_pj, optimal_block, q_dram_ideal, q_dram_naive,
+    q_dram_practical, q_dram_theorem2, reg_lower_bound_writes,
+    terms_upper_bound)
+from repro.core.dataflow import (
+    Dataflow, OursDataflow, Tiling, Traffic, dataflow_zoo, found_minimum,
+    network_traffic)
+from repro.core.mapping import (PEArray, fit_tiling_to_array, map_iteration)
+from repro.core.energy import (IMPLEMENTATIONS, Implementation, layer_energy)
+from repro.core.simulator import (simulate_layer, simulate_network)
+from repro.core.tpu_adapter import (BlockShape, balanced_shard_plan,
+                                    lb_block_shape)
+from repro.core.vgg import vgg16_conv_layers, vgg16_fc_layers
+
+__all__ = [
+    "ConvLayer", "fc_layer", "matmul_layer",
+    "energy_lower_bound_pj", "optimal_block", "q_dram_ideal",
+    "q_dram_naive", "q_dram_practical", "q_dram_theorem2",
+    "reg_lower_bound_writes", "terms_upper_bound",
+    "Dataflow", "OursDataflow", "Tiling", "Traffic", "dataflow_zoo",
+    "found_minimum", "network_traffic",
+    "PEArray", "fit_tiling_to_array", "map_iteration",
+    "IMPLEMENTATIONS", "Implementation", "layer_energy",
+    "simulate_layer", "simulate_network",
+    "BlockShape", "balanced_shard_plan", "lb_block_shape",
+    "vgg16_conv_layers", "vgg16_fc_layers",
+]

@@ -1,0 +1,132 @@
+"""Layer-wise off-chip communication lower bound (paper Sec. III).
+
+Implements:
+  * Theorem 2  — asymptotic bound  Q_DRAM = Omega(#MACs / sqrt(R*S))
+  * Eq. (15)   — the practical/attainable form used for every "Lower
+                 bound" curve in the paper's evaluation:
+                    Q ~= 2*#MACs/sqrt(R*S) + |outputs|
+  * T(S) bound — Lemma 2's maximum number of terms O(S*sqrt(R*S)),
+                 with the exact constant S*sqrt(R*S)/(3*sqrt(3)).
+  * the optimal tile aspect ratio  u = R*z,  u*z = S (Sec. IV-C's two
+    key conditions), used by the dataflow and by the Pallas block-shape
+    chooser in :mod:`repro.core.tpu_adapter`.
+
+All volumes are in *elements* (words); multiply by dtype bytes for bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.layer import ConvLayer
+
+
+def terms_upper_bound(s: int, r: float) -> float:
+    """Lemma 2: max #terms producible from S memory in <=S add trees.
+
+    T(S) <= S*sqrt(R*S) / (3*sqrt(3)), equality iff the output block is
+    a single u x z block with u = R*z and the three operand footprints
+    are balanced (u*k/R = z*k = u*z).
+    """
+    return s * math.sqrt(r * s) / (3.0 * math.sqrt(3.0))
+
+
+def min_partitions(layer: ConvLayer, s: int) -> float:
+    """Eq. (12): P(S) = Omega(#internal+output nodes / (2T(S)+S)).
+
+    Lemma 1 counts 2*#MACs internal+output nodes; Lemma 3 caps each
+    subset at 2T(S)+S nodes.
+    """
+    nodes = 2.0 * layer.macs
+    return nodes / (2.0 * terms_upper_bound(s, layer.reuse_r) + s)
+
+
+def q_dram_theorem2(layer: ConvLayer, s: int) -> float:
+    """Theorem 2 asymptotic lower bound via Theorem 1: Q >= S*(P(2S)-1)."""
+    return s * max(0.0, min_partitions(layer, 2 * s) - 1.0)
+
+
+def q_dram_practical(layer: ConvLayer, s: int) -> float:
+    """Eq. (15): attainable lower bound with u*z ~= S and u ~= R*z.
+
+      Q ~= 2 * B*Wo*Ho*Co*Wk*Hk*Ci / sqrt(R*S)  +  B*Wo*Ho*Co
+
+    The second term is the mandatory write-back of every output.  The
+    paper's Figs. 13-15 plot exactly this quantity as "Lower bound".
+    """
+    r = layer.reuse_r
+    read = 2.0 * layer.macs / math.sqrt(r * s)
+    write = float(layer.n_outputs)
+    # The bound can never require less than reading every input+weight
+    # once and writing every output once (the "ideal case", Sec. III-B).
+    return max(read + write, q_dram_ideal(layer))
+
+
+def q_dram_naive(layer: ConvLayer) -> float:
+    """No-reuse implementation: 2 accesses per MAC (Sec. III-B)."""
+    return 2.0 * layer.macs
+
+
+def q_dram_ideal(layer: ConvLayer) -> float:
+    """Every tensor touched exactly once (needs unbounded on-chip mem).
+
+    Inputs count only *touched* pixels (a strided conv never reads the
+    skipped rows/cols), i.e. the clipped union of all sliding windows."""
+    touched_in = (layer.batch * layer.ci
+                  * layer.fetched_area(layer.wo, layer.ho))
+    return float(touched_in + layer.n_weights + layer.n_outputs)
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimalTiles:
+    """The bound-attaining block geometry of Sec. IV-C."""
+
+    u: int   # output-block rows  (= b*x*y in conv space)
+    z: int   # output-block cols  (= #kernels resident)
+    k: int   # reduction slice streamed per pass (paper: k = 1)
+
+    @property
+    def psum_footprint(self) -> int:
+        return self.u * self.z
+
+
+def optimal_block(s: int, r: float = 1.0, k: int = 1) -> OptimalTiles:
+    """Solve u ~= R*z, u*z ~= S for the psum-resident output block.
+
+      z = sqrt(S / R),   u = R*z = sqrt(S * R)
+
+    With R == 1 this is the classical square sqrt(S) x sqrt(S) block of
+    communication-optimal matmul (Goto & van de Geijn / Hong-Kung).
+    """
+    z = max(1, int(math.sqrt(s / r)))
+    u = max(1, int(r * z))
+    # shrink to respect u*z <= S exactly
+    while u * z > s and u > 1:
+        u -= max(1, u // 16)
+    return OptimalTiles(u=u, z=max(1, z), k=k)
+
+
+def reduction_factor(layer: ConvLayer, s: int) -> float:
+    """How much below naive the bound sits: sqrt(R*S) (Sec. III-B)."""
+    return math.sqrt(layer.reuse_r * s)
+
+
+def gbuf_lower_bound_reads(q_dram_in: float, q_dram_w: float) -> float:
+    """Sec. IV-C: GBuf communication lower bound = the off-chip traffic
+    of inputs and weights (each loaded word must leave the GBuf once)."""
+    return q_dram_in + q_dram_w
+
+
+def reg_lower_bound_writes(layer: ConvLayer) -> int:
+    """Eq. (16): minimum register writes = #MACs."""
+    return layer.macs
+
+
+def energy_lower_bound_pj(layer: ConvLayer, s: int, *,
+                          dram_pj: float, mac_pj: float,
+                          reg_pj: float) -> float:
+    """Sec. VI-D lower bound: DRAM traffic at Eq.(15) + one MAC + one
+    psum register write per MAC."""
+    return (q_dram_practical(layer, s) * dram_pj
+            + layer.macs * (mac_pj + reg_pj))

@@ -1,0 +1,141 @@
+"""TPU adaptation of the paper's optimality conditions (DESIGN.md §2).
+
+Maps {S, u, z, k} of the ASIC formulation onto Pallas BlockSpec block
+shapes for the MXU/VMEM hierarchy:
+
+  * S            -> VMEM budget per core (bytes);
+  * u x z psums  -> bm x bn f32 accumulator block, with the paper's two
+                    conditions  bm ~= R*bn  and  bm*bn ~= S_eff;
+  * k = 1        -> bk = smallest MXU-aligned reduction slice (128/256/512):
+                    on TPU the reduction slice must still fill the
+                    128-wide systolic array, so k=1 becomes bk>=128
+                    (assumption change recorded in DESIGN.md §7);
+  * WndR         -> halo-extended input blocks chosen for the conv kernel.
+
+Also provides the per-chip communication-balance rule used by the
+mesh-level sharding (the beyond-paper extension)."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+# --- TPU v5e hardware constants (per chip) ----------------------------------
+PEAK_BF16_FLOPS = 197e12          # MXU bf16
+HBM_BYTES_PER_S = 819e9
+ICI_BYTES_PER_S = 50e9            # per link
+VMEM_BYTES = 128 * 1024 * 1024    # v5e VMEM per core
+HBM_BYTES = 16 * 1024 * 1024 * 1024
+MXU_DIM = 128                     # systolic array edge
+LANE = 128                        # last-dim tile
+SUBLANE = {2: 16, 4: 8}           # bytes -> second-minor tile
+
+
+def round_to(v: int, mult: int) -> int:
+    return max(mult, (v // mult) * mult)
+
+
+def round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockShape:
+    """Pallas matmul/conv block geometry."""
+
+    bm: int   # output rows per block   (paper: u)
+    bn: int   # output cols per block   (paper: z)
+    bk: int   # reduction slice         (paper: k, MXU-adapted)
+
+    @property
+    def psum_bytes(self) -> int:
+        return self.bm * self.bn * 4          # f32 accumulator
+
+    def operand_bytes(self, dtype_bytes: int = 2) -> int:
+        return (self.bm * self.bk + self.bk * self.bn) * dtype_bytes
+
+    def vmem_bytes(self, dtype_bytes: int = 2) -> int:
+        # double-buffered operands (Pallas pipelining) + resident psums
+        return self.psum_bytes + 2 * self.operand_bytes(dtype_bytes)
+
+
+def lb_block_shape(m: int, n: int, k: int, *,
+                   r: float = 1.0,
+                   dtype_bytes: int = 2,
+                   vmem_budget: int = VMEM_BYTES // 2,
+                   bk: int | None = None) -> BlockShape:
+    """Choose {bm, bn, bk} from the paper's lower-bound conditions.
+
+    Solve  bm ~= r*bn,  psum+2*operand buffers <= vmem_budget, with all
+    dims multiples of the MXU/lane size.  With r==1 the block is square
+    (sqrt(S) x sqrt(S)) — the communication-optimal matmul of Sec. III.
+    """
+    if bk is None:
+        # smallest aligned slice that keeps the MXU pipeline full; the
+        # paper's k=1 principle (stream the reduction minimally) under
+        # the 128-alignment constraint.
+        bk = min(round_up(min(k, 512), MXU_DIM), round_up(k, MXU_DIM))
+    # binary-search the largest square-ish block fitting the budget
+    bn = MXU_DIM
+    while True:
+        nbn = bn + MXU_DIM
+        nbm = round_to(int(r * nbn), MXU_DIM)
+        cand = BlockShape(bm=min(nbm, round_up(m, MXU_DIM)),
+                          bn=min(nbn, round_up(n, MXU_DIM)), bk=bk)
+        if cand.vmem_bytes(dtype_bytes) > vmem_budget:
+            break
+        if cand.bn == bn and cand.bm == round_to(int(r * bn), MXU_DIM):
+            break  # saturated both dims
+        bn = cand.bn
+        if nbn > max(n, MXU_DIM) and cand.bm >= min(round_to(int(r * nbn), MXU_DIM), round_up(m, MXU_DIM)):
+            break
+    bm = min(round_to(int(r * bn), MXU_DIM), round_up(m, MXU_DIM))
+    return BlockShape(bm=max(MXU_DIM, bm), bn=max(MXU_DIM, min(bn, round_up(n, MXU_DIM))), bk=bk)
+
+
+def hbm_traffic_model(m: int, n: int, k: int, blk: BlockShape,
+                      dtype_bytes: int = 2) -> float:
+    """Eq. (14) instantiated for the kernel: HBM bytes moved.
+
+    Per bm x bn output block: A-panel bm*k + B-panel k*bn read once,
+    C written once."""
+    nblocks_m = -(-m // blk.bm)
+    nblocks_n = -(-n // blk.bn)
+    reads = nblocks_n * (m * k) + nblocks_m * (k * n)
+    writes = m * n
+    return float((reads + writes) * dtype_bytes)
+
+
+def arithmetic_intensity(m: int, n: int, k: int, blk: BlockShape,
+                         dtype_bytes: int = 2) -> float:
+    flops = 2.0 * m * n * k
+    return flops / hbm_traffic_model(m, n, k, blk, dtype_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """Mesh-level communication balance (beyond-paper, DESIGN.md §5)."""
+
+    m_shards: int
+    n_shards: int
+
+    def per_chip_tile(self, m: int, n: int) -> tuple[int, int]:
+        return -(-m // self.m_shards), -(-n // self.n_shards)
+
+
+def balanced_shard_plan(m: int, n: int, chips: int,
+                        r: float = 1.0) -> ShardPlan:
+    """Apply u ~= R*z at the mesh level: per-chip output tile as square
+    as R allows, which minimizes the all-gather volume of the two
+    operand panels (the ICI analogue of Eq. (14))."""
+    best, best_cost = None, None
+    for mshard in range(1, chips + 1):
+        if chips % mshard:
+            continue
+        nshard = chips // mshard
+        pm, pn = -(-m // mshard), -(-n // nshard)
+        # per-chip panel traffic ~ pm*K + K*pn ;  minimized when pm ~= r*pn
+        cost = pm / r + pn
+        if best_cost is None or cost < best_cost:
+            best, best_cost = ShardPlan(mshard, nshard), cost
+    return best

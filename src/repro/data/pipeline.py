@@ -1,0 +1,57 @@
+"""Double-buffered prefetching data pipeline.
+
+Wraps any step->batch function with a background thread that keeps
+``depth`` batches ready (device_put started early), hiding host-side
+generation behind the previous step's compute — the data-side half of
+the compute/comm overlap story.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator
+
+import jax
+
+
+class Prefetcher:
+    def __init__(self, make_batch: Callable[[int], Any], *,
+                 start_step: int = 0, depth: int = 2,
+                 sharding=None):
+        self._make = make_batch
+        self._sharding = sharding
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self._make(step)
+            if self._sharding is not None:
+                batch = jax.device_put(batch, self._sharding)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)

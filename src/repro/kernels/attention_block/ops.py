@@ -1,0 +1,39 @@
+"""jit'd wrapper: (B, S, H, hd) attention through the Pallas kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention_block.kernel import attention_call
+
+
+@partial(jax.jit, static_argnames=("window", "causal", "bq", "bk",
+                                   "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    window: int = 0, causal: bool = True,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd) -> (B, Sq, H, hd)."""
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    groups = h // kv
+    bq = min(bq, max(8, sq))
+    bk = min(bk, max(8, skv))
+    pad_q = -sq % bq
+    pad_k = -skv % bk
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, skv, hd)
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0)))
+    out = attention_call(qf, kf, vf, groups=groups, bq=bq, bk=bk,
+                         seq_kv=skv, window=window, causal=causal,
+                         interpret=interpret)
+    out = out[:, :sq].reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
+    return out

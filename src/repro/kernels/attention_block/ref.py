@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: the naive O(S^2) attention from models.layers."""
+
+import jax.numpy as jnp
+
+from repro.models.layers import attention_naive
+
+
+def attention_ref(q, k, v, *, window: int = 0, causal: bool = True):
+    sq, skv = q.shape[1], k.shape[1]
+    q_pos = jnp.arange(sq)
+    if not causal:
+        q_pos = jnp.full((sq,), jnp.iinfo(jnp.int32).max)
+    return attention_naive(q, k, v, q_pos, jnp.arange(skv), window)

@@ -1,0 +1,85 @@
+"""Paper-dataflow convolution Pallas kernel (Fig. 6/7 on TPU).
+
+Grid = (batch, Co-blocks, Ci-blocks).  Per step:
+  * the psum block — z output channels for the full spatial tile, the
+    paper's u x z block with u = Ho*Wo — is resident in VMEM scratch
+    across the whole Ci sweep (OutR: psums never touch HBM);
+  * a Ci-slice of the halo-padded input block is streamed in and reused
+    by all Wk*Hk shifted windows **inside VMEM** (WndR on chip: "inputs
+    are not unfolded so we can exploit WndR on chip");
+  * the matching z-kernel weight slice is streamed once (balanced
+    InR/WtR: per output block each operand panel is read exactly once —
+    Eq. (14)).
+
+The Hk x Wk window loop is unrolled in-kernel: each offset is one
+(Ho*Wo, ci_b) x (ci_b, co_b) MXU matmul — the implicit-GEMM form of the
+convolution-to-MM conversion of paper Fig. 3.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *,
+                 nci: int, hk: int, wk: int, ho: int, wo: int,
+                 stride: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cib = x_ref.shape[-1]
+    cob = acc_ref.shape[-1]
+    for ky in range(hk):                      # unrolled window sweep:
+        for kx in range(wk):                  # WndR served from VMEM
+            xs = jax.lax.slice(
+                x_ref[0],
+                (ky, kx, 0),
+                (ky + (ho - 1) * stride + 1,
+                 kx + (wo - 1) * stride + 1, cib),
+                (stride, stride, 1))          # (Ho, Wo, cib)
+            acc_ref[...] += jnp.dot(
+                xs.reshape(ho * wo, cib), w_ref[ky, kx],
+                preferred_element_type=jnp.float32).reshape(ho, wo, cob)
+
+    @pl.when(pl.program_id(2) == nci - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def conv_lb_call(x: jax.Array, w: jax.Array, *,
+                 stride: int = 1,
+                 ci_block: int, co_block: int,
+                 out_dtype=None, interpret: bool = True) -> jax.Array:
+    """x: (B, Hp, Wp, Ci) pre-padded NHWC; w: (Hk, Wk, Ci, Co).
+
+    Ci % ci_block == 0 and Co % co_block == 0 (ops.py pads)."""
+    b, hp, wp, ci = x.shape
+    hk, wk, ci2, co = w.shape
+    assert ci == ci2 and ci % ci_block == 0 and co % co_block == 0
+    ho = (hp - hk) // stride + 1
+    wo = (wp - wk) // stride + 1
+    nci, nco = ci // ci_block, co // co_block
+    out_dtype = out_dtype or x.dtype
+    kern = functools.partial(_conv_kernel, nci=nci, hk=hk, wk=wk,
+                             ho=ho, wo=wo, stride=stride)
+    return pl.pallas_call(
+        kern,
+        grid=(b, nco, nci),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, ci_block),
+                         lambda bi, coi, cii: (bi, 0, 0, cii)),
+            pl.BlockSpec((hk, wk, ci_block, co_block),
+                         lambda bi, coi, cii: (0, 0, cii, coi)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, co_block),
+                               lambda bi, coi, cii: (bi, 0, 0, coi)),
+        out_shape=jax.ShapeDtypeStruct((b, ho, wo, co), out_dtype),
+        scratch_shapes=[pltpu.VMEM((ho, wo, co_block), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

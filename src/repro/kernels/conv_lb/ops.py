@@ -1,0 +1,79 @@
+"""jit'd wrapper for the paper-dataflow conv kernel.
+
+Block-size selection follows Sec. IV-C's two conditions adapted to
+VMEM (DESIGN.md §2): the psum block u x z has u = Ho*Wo fixed by the
+full-spatial tiling, so z (= co_block) takes the remaining accumulator
+budget; the streamed Ci slice is the smallest aligned value whose input
+panel still fits — the k=1 principle under MXU alignment.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tpu_adapter import VMEM_BYTES, round_to, round_up
+
+
+def choose_conv_blocks(hp: int, wp: int, ci: int, co: int,
+                       hk: int, wk: int, ho: int, wo: int,
+                       dtype_bytes: int = 4,
+                       vmem_budget: int = VMEM_BYTES // 2
+                       ) -> tuple[int, int]:
+    """(ci_block, co_block) per the adapted lower-bound conditions."""
+    acc_budget = vmem_budget // 2                      # psums get most
+    co_block = max(8, acc_budget // (ho * wo * 4))
+    co_block = min(round_to(co_block, 128) if co_block >= 128 else co_block,
+                   round_up(co, 8))
+    # streamed panels (double-buffered): input slice + weight slice
+    rem = vmem_budget - ho * wo * min(co_block, co) * 4
+    per_ci = 2 * dtype_bytes * (hp * wp + hk * wk * min(co_block, co))
+    ci_block = max(8, min(ci, rem // max(1, per_ci)))
+    if ci_block >= 128:
+        ci_block = round_to(ci_block, 128)
+    return ci_block, co_block
+
+
+def _pad_axis(a, axis, mult):
+    pad = -a.shape[axis] % mult
+    if pad:
+        cfg = [(0, 0)] * a.ndim
+        cfg[axis] = (0, pad)
+        a = jnp.pad(a, cfg)
+    return a
+
+
+@partial(jax.jit, static_argnames=("stride", "padding", "interpret",
+                                   "ci_block", "co_block"))
+def conv2d_lb(x: jax.Array, w: jax.Array, *, stride: int = 1,
+              padding: int = 0, ci_block: int | None = None,
+              co_block: int | None = None,
+              interpret: bool = True) -> jax.Array:
+    """NHWC conv through the paper-dataflow kernel.
+
+    x: (B, H, W, Ci); w: (Hk, Wk, Ci, Co) -> (B, Ho, Wo, Co)."""
+    from repro.kernels.conv_lb.kernel import conv_lb_call
+
+    b, h, wd, ci = x.shape
+    hk, wk, _, co = w.shape
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding),
+                        (padding, padding), (0, 0)))
+    hp, wp = x.shape[1], x.shape[2]
+    ho = (hp - hk) // stride + 1
+    wo = (wp - wk) // stride + 1
+    if ci_block is None or co_block is None:
+        cib, cob = choose_conv_blocks(hp, wp, ci, co, hk, wk, ho, wo,
+                                      dtype_bytes=x.dtype.itemsize)
+        ci_block = ci_block or cib
+        co_block = co_block or cob
+    ci_block = min(ci_block, ci)
+    co_block = min(co_block, co)
+    x = _pad_axis(x, 3, ci_block)
+    w = _pad_axis(_pad_axis(w, 2, ci_block), 3, co_block)
+    out = conv_lb_call(x, w, stride=stride, ci_block=ci_block,
+                       co_block=co_block, out_dtype=x.dtype,
+                       interpret=interpret)
+    return out[..., :co]

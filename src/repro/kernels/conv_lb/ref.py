@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the conv kernel (lax.conv in NHWC)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, w, *, stride: int = 1, padding: int = 0):
+    """x: (B, H, W, Ci); w: (Hk, Wk, Ci, Co) -> (B, Ho, Wo, Co)."""
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out.astype(x.dtype)

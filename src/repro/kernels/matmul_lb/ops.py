@@ -1,0 +1,42 @@
+"""jit'd public wrapper for the lower-bound matmul kernel.
+
+Pads operands to block multiples (zero padding is exact for matmul),
+invokes the Pallas kernel, and slices the result.  ``interpret=True``
+executes the kernel body on CPU for validation; on a TPU runtime pass
+``interpret=False``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tpu_adapter import BlockShape, lb_block_shape
+from repro.kernels.matmul_lb.kernel import matmul_lb_call
+
+
+def _pad_to(a: jax.Array, mults: tuple[int, int]) -> jax.Array:
+    pads = [(0, -a.shape[i] % mults[i]) for i in range(2)]
+    if any(p[1] for p in pads):
+        a = jnp.pad(a, pads)
+    return a
+
+
+@partial(jax.jit, static_argnames=("blk", "interpret"))
+def matmul_lb(x: jax.Array, w: jax.Array,
+              blk: BlockShape | None = None,
+              interpret: bool = True) -> jax.Array:
+    """Communication-optimal matmul: (M, K) @ (K, N) -> (M, N)."""
+    m, k = x.shape
+    n = w.shape[1]
+    if blk is None:
+        blk = lb_block_shape(m, n, k, dtype_bytes=x.dtype.itemsize)
+    bm, bn, bk = (min(blk.bm, max(8, m)), min(blk.bn, max(8, n)),
+                  min(blk.bk, max(8, k)))
+    xp = _pad_to(x, (bm, bk))
+    wp = _pad_to(w, (bk, bn))
+    out = matmul_lb_call(xp, wp, blk=BlockShape(bm, bn, bk),
+                         out_dtype=x.dtype, interpret=interpret)
+    return out[:m, :n]

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the lower-bound matmul kernel."""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x.astype(jnp.float32),
+                   w.astype(jnp.float32)).astype(x.dtype)

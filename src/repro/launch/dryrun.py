@@ -1,0 +1,267 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") +
+    " --xla_force_host_platform_device_count=" +
+    os.environ.get("REPRO_DRYRUN_DEVICES", "512") +
+    # CPU-only pessimization: while-loop ICM hoists per-slice bf16->f32
+    # converts of the saved-activation stack into whole-stack f32
+    # copies, which double-counts remat memory (TPU never does this).
+    " --xla_disable_hlo_passes=while-loop-invariant-code-motion,"
+    "while-loop-expensive-invariant-code-motion").strip()
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape x mesh) cell:
+``jax.jit(step, in_shardings, out_shardings).lower(specs).compile()``
+must succeed on the 16x16 single-pod mesh and the 2x16x16 multi-pod
+mesh, using ShapeDtypeStruct stand-ins (no allocation).  Prints
+``memory_analysis()`` (proves HBM fit) and ``cost_analysis()`` (FLOPs /
+bytes for the roofline), and dumps one JSON record per cell consumed by
+EXPERIMENTS.md and the roofline benchmarks.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch phi3-medium-14b \
+      --shape train_4k --mesh single
+  REPRO_DRYRUN_DEVICES=16 ... --debug   # reduced configs on a 4x4 mesh
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.memory_model import (activation_allowance,
+                                          sharded_bytes_per_chip)
+from repro.analysis.roofline import Roofline, build_roofline
+from repro.configs import ARCHS, SHAPES, applicable_shapes, get_config, reduced
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import build
+from repro.parallel import axes as axes_mod
+from repro.parallel import sharding as sh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "..", "..", "..", "benchmarks",
+                           "dryrun_results")
+
+
+def _named(mesh, spec_tree, shape_tree):
+    from jax.sharding import NamedSharding
+    return jax.tree_util.tree_map(
+        lambda s: s if isinstance(s, NamedSharding) else None, spec_tree)
+
+
+def _replicated(mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return NamedSharding(mesh, P())
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               debug: bool = False, optimized: bool = False):
+    """Returns (compiled, record dict)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    if debug:
+        mesh = jax.make_mesh((2, 2, 4) if multi_pod else (2, 4),
+                             ("pod", "data", "model") if multi_pod
+                             else ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if debug:
+        cfg = reduced(cfg, d_model=128, n_layers=2 * max(
+            1, cfg.attn_every or 1), head_dim=32, vocab=512,
+            attn_chunk=64)
+        shape = dataclasses.replace(shape, seq_len=min(shape.seq_len, 256),
+                                    global_batch=min(shape.global_batch, 16))
+    tp = mesh.shape["model"]
+    chips = 1
+    for a in mesh.axis_names:
+        chips *= mesh.shape[a]
+    if optimized and shape.kind == "decode":
+        # §Perf-winning serving config: exact heads + f8 KV cache
+        cfg = dataclasses.replace(cfg, pad_heads=False,
+                                  kv_cache_dtype=jnp.float8_e4m3fn)
+    api = build(cfg, tp=tp)
+    rules = sh.axis_rules(mesh, shape.global_batch, shape.seq_len,
+                          sp_rs=optimized)
+    t0 = time.time()
+    with axes_mod.axis_rules(rules, mesh):
+        specs = api.input_specs(shape)
+        batch_shardings = sh.batch_shardings(specs, mesh, rules)
+        if shape.kind == "train":
+            state_shape = jax.eval_shape(
+                lambda: steps_mod.init_train_state(api,
+                                                   jax.random.PRNGKey(0)))
+            p_shard = sh.param_shardings(state_shape.params, mesh)
+            state_shardings = steps_mod.TrainState(
+                params=p_shard,
+                opt=type(state_shape.opt)(
+                    m=sh.param_shardings(state_shape.opt.m, mesh),
+                    v=sh.param_shardings(state_shape.opt.v, mesh),
+                    step=_replicated(mesh)),
+                step=_replicated(mesh))
+            step_fn = steps_mod.make_train_step(api)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(state_shardings,
+                                           batch_shardings),
+                             out_shardings=(state_shardings, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_shape, specs)
+        elif shape.kind == "prefill":
+            params_shape = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+            p_shard = sh.param_shardings(params_shape, mesh)
+            cache_shape = jax.eval_shape(
+                lambda: api.init_cache(shape.global_batch, shape.seq_len))
+            _, cache_shardings = sh.output_shardings_for_decode(
+                mesh, rules, cache_shape)
+            logits_sh = NamedSharding(mesh, P(rules["batch"], "model"))
+            step_fn = steps_mod.make_prefill_step(api,
+                                                  max_seq=shape.seq_len)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(p_shard, batch_shardings),
+                             out_shardings=(logits_sh, cache_shardings))
+            lowered = jitted.lower(params_shape, specs)
+        else:  # decode
+            params_shape = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+            p_shard = sh.param_shardings(params_shape, mesh)
+            logits_sh, cache_shardings = sh.output_shardings_for_decode(
+                mesh, rules, specs["caches"])
+            step_fn = steps_mod.make_serve_step(api)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_shard, cache_shardings,
+                              batch_shardings["token"],
+                              batch_shardings["cur_pos"]),
+                out_shardings=(logits_sh, cache_shardings),
+                donate_argnums=(1,))
+            lowered = jitted.lower(params_shape, specs["caches"],
+                                   specs["token"], specs["cur_pos"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # analytic per-chip HBM (exact sharded state + activation allowance)
+    if shape.kind == "train":
+        state_b = sharded_bytes_per_chip(state_shape, state_shardings,
+                                         mesh)
+        input_b = sharded_bytes_per_chip(specs, batch_shardings, mesh)
+    elif shape.kind == "prefill":
+        state_b = sharded_bytes_per_chip(params_shape, p_shard, mesh) \
+            + sharded_bytes_per_chip(cache_shape, cache_shardings, mesh)
+        input_b = sharded_bytes_per_chip(specs, batch_shardings, mesh)
+    else:
+        state_b = sharded_bytes_per_chip(params_shape, p_shard, mesh) \
+            + sharded_bytes_per_chip(specs["caches"], cache_shardings,
+                                     mesh)
+        input_b = 0
+    act_b = activation_allowance(cfg, shape.seq_len, shape.global_batch,
+                                 mesh, shape.kind)
+    analytic_gb = (state_b + input_b + act_b) / 1e9
+
+    rl = build_roofline(arch, shape.name, mesh_name, compiled, cfg,
+                        shape.kind, shape.seq_len, shape.global_batch,
+                        chips)
+    mem = compiled.memory_analysis()
+    record = {
+        "arch": arch, "shape": shape.name, "mesh": mesh_name,
+        "kind": shape.kind, "chips": chips,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_chip": rl.flops_per_chip,
+        "hbm_bytes_per_chip": rl.hbm_bytes_per_chip,
+        "coll_bytes_per_chip": rl.coll_bytes_per_chip,
+        "coll_detail": rl.coll_detail,
+        "model_flops_per_chip": rl.model_flops,
+        "t_compute_ms": rl.t_compute * 1e3,
+        "t_memory_ms": rl.t_memory * 1e3,
+        "t_collective_ms": rl.t_collective * 1e3,
+        "bottleneck": rl.bottleneck,
+        "useful_flops_fraction": rl.useful_flops_fraction,
+        "roofline_fraction": rl.roofline_fraction,
+        "analytic_memory_gb": round(analytic_gb, 2),
+        "analytic_state_gb": round(state_b / 1e9, 2),
+        "memory_analysis": {
+            k: getattr(mem, k, None) for k in
+            ("temp_size_in_bytes", "argument_size_in_bytes",
+             "output_size_in_bytes", "alias_size_in_bytes",
+             "generated_code_size_in_bytes")
+        } if mem is not None else None,
+    }
+    return compiled, record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCHS + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--debug", action="store_true",
+                    help="reduced configs on a small mesh")
+    ap.add_argument("--optimized", action="store_true",
+                    help="§Perf-winning variants instead of baseline")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = [args.arch] if args.arch else ARCHS
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([args.shape] if args.shape
+                  else applicable_shapes(cfg))
+        if not args.shape and not cfg.sub_quadratic:
+            print(f"SKIP {arch} x long_500k (full attention at 524k KV; "
+                  f"DESIGN.md §4)")
+        for shape_name in shapes:
+            if shape_name not in applicable_shapes(cfg):
+                print(f"SKIP {arch} x {shape_name} (DESIGN.md §4)")
+                continue
+            for multi in meshes:
+                tag = f"{arch}_{shape_name}_{'multi' if multi else 'single'}"
+                try:
+                    t0 = time.time()
+                    compiled, rec = lower_cell(arch, shape_name, multi,
+                                               debug=args.debug,
+                                               optimized=args.optimized)
+                    mem = rec["memory_analysis"] or {}
+                    per_chip_gb = ((mem.get("argument_size_in_bytes") or 0)
+                                   + (mem.get("temp_size_in_bytes") or 0)) \
+                        / 1e9
+                    print(f"OK   {tag}: lower+compile "
+                          f"{time.time()-t0:6.1f}s  "
+                          f"flops/chip={rec['flops_per_chip']:.3e}  "
+                          f"hbm/chip={rec['hbm_bytes_per_chip']:.3e}  "
+                          f"coll/chip={rec['coll_bytes_per_chip']:.3e}  "
+                          f"cpu_mem/chip={per_chip_gb:.2f}GB  "
+                          f"tpu_mem/chip={rec['analytic_memory_gb']:.2f}GB  "
+                          f"bottleneck={rec['bottleneck']}")
+                    with open(os.path.join(args.out, tag + ".json"),
+                              "w") as f:
+                        json.dump(rec, f, indent=1)
+                    del compiled
+                except Exception as e:  # noqa: BLE001
+                    failures.append((tag, repr(e)))
+                    print(f"FAIL {tag}: {e!r}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(" ", tag, err)
+        raise SystemExit(1)
+    print("\nAll dry-run cells compiled.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — required for the dry-run's
+host-device-count trick to work.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """Whatever devices exist locally (tests / quickstart): (1, N)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def make_mesh_for(devices: int, model_parallel: int) -> Mesh:
+    """Elastic re-mesh helper: whatever healthy device count remains."""
+    mp = max(1, min(model_parallel, devices))
+    while devices % mp:
+        mp -= 1
+    return jax.make_mesh((devices // mp, mp), ("data", "model"))

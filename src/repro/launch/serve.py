@@ -1,0 +1,129 @@
+"""Batched serving driver: continuous batched prefill + decode.
+
+A minimal production-shaped server loop: requests arrive with prompts,
+are prefilled in batches, then decode steps advance every active
+request one token at a time against the shared KV-cache pytree.
+Requests finishing early free their slot for queued requests
+(continuous batching on slot granularity).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
+      --reduced --requests 6 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.launch.mesh import make_host_mesh
+from repro.models.api import build
+from repro.parallel import axes as axes_mod
+from repro.parallel import sharding as sh
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchedServer:
+    """Fixed-slot continuous batching over a shared cache pytree."""
+
+    def __init__(self, cfg, mesh, *, slots: int, max_seq: int):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.slots = slots
+        self.max_seq = max_seq
+        tp = mesh.shape.get("model", 1)
+        self.api = build(cfg, tp=tp)
+        self.rules = sh.axis_rules(mesh, slots, max_seq)
+        with axes_mod.axis_rules(self.rules, mesh):
+            self.params = self.api.init(jax.random.PRNGKey(0))
+            self.caches = self.api.init_cache(slots, max_seq)
+            self._decode = jax.jit(self.api.decode_step,
+                                   donate_argnums=(1,))
+        self.active: dict[int, Request] = {}
+        self.queue: list[Request] = []
+        self.pos = 0
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        while self.queue and len(self.active) < self.slots:
+            req = self.queue.pop(0)
+            slot = next(i for i in range(self.slots)
+                        if i not in self.active)
+            self.active[slot] = req
+
+    def step(self):
+        """Advance every active request by one token (greedy)."""
+        self._admit()
+        if not self.active:
+            return
+        tok = jnp.zeros((self.slots, 1), jnp.int32)
+        for slot, req in self.active.items():
+            seq = req.prompt + req.out
+            idx = min(self.pos, len(seq) - 1) if seq else 0
+            nxt = seq[idx] if idx < len(seq) else (req.out or [0])[-1]
+            tok = tok.at[slot, 0].set(nxt)
+        with axes_mod.axis_rules(self.rules, self.mesh):
+            logits, self.caches = self._decode(
+                self.params, self.caches, tok,
+                jnp.asarray(self.pos, jnp.int32))
+        choice = jnp.argmax(logits, axis=-1)
+        for slot, req in list(self.active.items()):
+            past_prompt = self.pos >= len(req.prompt) - 1
+            if past_prompt:
+                req.out.append(int(choice[slot]))
+            if len(req.out) >= req.max_new:
+                req.done = True
+                del self.active[slot]
+        self.pos += 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg, capacity_factor=8.0)
+    mesh = make_host_mesh()
+    server = BatchedServer(cfg, mesh, slots=args.slots,
+                           max_seq=args.max_seq)
+    key = jax.random.PRNGKey(1)
+    for rid in range(args.requests):
+        prompt = list(jax.random.randint(jax.random.fold_in(key, rid),
+                                         (8,), 0, cfg.vocab))
+        server.submit(Request(rid=rid, prompt=[int(t) for t in prompt],
+                              max_new=args.gen))
+    t0 = time.time()
+    done = []
+    steps = 0
+    while (server.active or server.queue) and steps < args.max_seq:
+        server.step()
+        steps += 1
+    dt = time.time() - t0
+    total_tokens = args.requests * args.gen
+    print(f"served {args.requests} requests, {total_tokens} tokens in "
+          f"{dt:.1f}s ({total_tokens/dt:.1f} tok/s) over {steps} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Step builders shared by train.py, serve.py and dryrun.py."""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelAPI
+from repro.optim import adamw
+from repro.optim.schedules import warmup_cosine
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: adamw.AdamWState
+    step: jax.Array
+
+
+def init_train_state(api: ModelAPI, key) -> TrainState:
+    params = api.init(key)
+    return TrainState(params=params, opt=adamw.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(api: ModelAPI, *, peak_lr: float = 3e-4,
+                    warmup: int = 100, total: int = 10_000,
+                    clip: float = 1.0) -> Callable:
+    lr_fn = partial(warmup_cosine, peak_lr=peak_lr, warmup=warmup,
+                    total=total)
+
+    def train_step(state: TrainState, batch):
+        loss, grads = jax.value_and_grad(api.train_loss)(state.params,
+                                                         batch)
+        new_params, new_opt, gnorm = adamw.update(
+            state.params, grads, state.opt, lr=lr_fn(state.step),
+            clip=clip)
+        new_state = TrainState(params=new_params, opt=new_opt,
+                               step=state.step + 1)
+        return new_state, {"loss": loss, "grad_norm": gnorm,
+                           "lr": lr_fn(state.step)}
+
+    return train_step
+
+
+def make_serve_step(api: ModelAPI) -> Callable:
+    def serve_step(params, caches, token, cur_pos):
+        return api.decode_step(params, caches, token, cur_pos)
+    return serve_step
+
+
+def make_prefill_step(api: ModelAPI, max_seq: int | None = None) -> Callable:
+    def prefill_step(params, batch):
+        return api.prefill(params, batch, max_seq=max_seq)
+    return prefill_step

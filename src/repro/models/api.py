@@ -1,0 +1,125 @@
+"""Unified model API: one entry point per (config, tp) pair.
+
+``build(cfg, tp)`` returns a ``ModelAPI`` whose members close over the
+family-specific implementation (decoder-only stack, enc-dec, SSM — all
+share the decoder-stack machinery).  ``input_specs`` produces the
+ShapeDtypeStruct stand-ins the multi-pod dry-run lowers against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import encdec, transformer
+from repro.models.encdec import ENC_FRAMES
+from repro.parallel.axes import current_mesh
+
+
+def _moe_mode(kind: str) -> str:
+    if current_mesh() is None:
+        return "dense"
+    return "psum" if kind == "decode" else "a2a"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    tp: int
+    init: Callable[..., Any]
+    train_loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    init_cache: Callable[..., Any]
+
+    # ---- dry-run stand-ins ------------------------------------------------
+    def input_specs(self, shape: InputShape) -> dict[str, Any]:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "train":
+            batch: dict[str, Any] = {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+            if cfg.family == "encdec":
+                batch["frames"] = jax.ShapeDtypeStruct(
+                    (b, ENC_FRAMES, cfg.d_model), cfg.compute_dtype)
+            elif cfg.frontend == "vision_stub":
+                batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.frontend_len, cfg.d_model), cfg.compute_dtype)
+            return batch
+        if shape.kind == "prefill":
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+            if cfg.family == "encdec":
+                batch["frames"] = jax.ShapeDtypeStruct(
+                    (b, ENC_FRAMES, cfg.d_model), cfg.compute_dtype)
+            elif cfg.frontend == "vision_stub":
+                batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.frontend_len, cfg.d_model), cfg.compute_dtype)
+            return batch
+        # decode: one new token against a seq_len cache
+        caches = jax.eval_shape(lambda: self.init_cache(b, s))
+        return {
+            "caches": caches,
+            "token": jax.ShapeDtypeStruct((b, 1), i32),
+            "cur_pos": jax.ShapeDtypeStruct((), i32),
+        }
+
+    def make_batch(self, key, shape: InputShape) -> dict[str, Any]:
+        """Concrete (small) arrays matching input_specs, for smoke/e2e."""
+        specs = self.input_specs(shape)
+        ks = jax.random.split(key, 8)
+
+        def concretize(path, spec):
+            if spec.dtype == jnp.int32 and spec.shape:
+                return jax.random.randint(ks[0], spec.shape, 0,
+                                          self.cfg.vocab, jnp.int32)
+            if spec.shape == ():
+                return jnp.asarray(0, spec.dtype)
+            return jax.random.normal(ks[1], spec.shape,
+                                     jnp.float32).astype(spec.dtype) * 0.02
+
+        return jax.tree_util.tree_map_with_path(concretize, specs)
+
+
+def build(cfg: ModelConfig, tp: int = 1) -> ModelAPI:
+    if cfg.family == "encdec":
+        return ModelAPI(
+            cfg=cfg, tp=tp,
+            init=partial(encdec.init_params, cfg, tp=tp),
+            train_loss=lambda p, b: encdec.train_loss(p, b, cfg, tp),
+            prefill=lambda p, b, max_seq=None: encdec.prefill(
+                p, b["tokens"], b["frames"], cfg, tp, max_seq=max_seq),
+            decode_step=lambda p, c, tok, pos: encdec.decode_step(
+                p, c, tok, pos, cfg, tp),
+            init_cache=lambda b, s: encdec.init_cache_tree(cfg, b, s, tp),
+        )
+
+    def _train_loss(p, b):
+        return transformer.train_loss(p, b, cfg, tp,
+                                      moe_mode=_moe_mode("train"))
+
+    def _prefill(p, b, max_seq=None):
+        return transformer.prefill(p, b["tokens"], cfg, tp,
+                                   prefix_embeds=b.get("prefix_embeds"),
+                                   moe_mode=_moe_mode("prefill"),
+                                   max_seq=max_seq)
+
+    def _decode(p, c, tok, pos):
+        return transformer.decode_step(p, c, tok, pos, cfg, tp,
+                                       moe_mode=_moe_mode("decode"))
+
+    return ModelAPI(
+        cfg=cfg, tp=tp,
+        init=lambda key: transformer.init_params(cfg, key, tp),
+        train_loss=_train_loss,
+        prefill=_prefill,
+        decode_step=_decode,
+        init_cache=lambda b, s: transformer.init_cache_tree(cfg, b, s, tp),
+    )

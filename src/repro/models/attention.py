@@ -1,0 +1,206 @@
+"""GQA attention sublayer: projections + RoPE + cache management.
+
+Train/prefill use the double-chunked online-softmax attention; decode
+uses flash-decoding against a KV cache whose *sequence* dimension is
+sharded over the model axis (shard_map + LSE combine).  Sliding-window
+archs (mixtral) keep a ring cache of ``window`` slots, which is what
+makes their 500k-context decode sub-quadratic in memory and compute.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (apply_rope, attention_chunked,
+                                 attention_naive, decode_attention,
+                                 dense_init, split_keys)
+from repro.parallel.axes import constrain, current_mesh, spec_for
+
+try:                                     # jax>=0.6 stable alias
+    shard_map = jax.shard_map
+except AttributeError:                   # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+from jax.sharding import PartitionSpec as P
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, dtype):
+    ks = split_keys(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d_model, n_heads * head_dim), dtype),
+        "wk": dense_init(ks[1], (d_model, n_kv_heads * head_dim), dtype),
+        "wv": dense_init(ks[2], (d_model, n_kv_heads * head_dim), dtype),
+        "wo": dense_init(ks[3], (n_heads * head_dim, d_model), dtype,
+                         fan_in=n_heads * head_dim),
+    }
+
+
+def _project_qkv(params, h, n_heads, n_kv_heads, head_dim):
+    b, s, _ = h.shape
+    q = (h @ params["wq"]).reshape(b, s, n_heads, head_dim)
+    k = (h @ params["wk"]).reshape(b, s, n_kv_heads, head_dim)
+    v = (h @ params["wv"]).reshape(b, s, n_kv_heads, head_dim)
+    return q, k, v
+
+
+def attention_block(params, h, pos, cfg, n_heads, n_kv_heads, *,
+                    cross_kv=None, causal=True, impl="chunked"):
+    """Train/prefill attention.  h: (B, S, d); pos: (S,) absolute.
+
+    cross_kv: optional (k, v, kv_pos) for encoder-decoder cross-attn.
+    Returns (out, (k, v)) so prefill can hand k/v to the cache builder.
+    """
+    hd = cfg.head_dim
+    from repro.models.layers import sp_qkv, use_sp_rs
+    b, s = h.shape[0], h.shape[1]
+    mp = current_mesh().shape["model"] if current_mesh() else 1
+    if use_sp_rs(s) and (n_heads * hd) % mp == 0 \
+            and (n_kv_heads * hd) % mp == 0:
+        qf, kf, vf = sp_qkv(h, params["wq"], params["wk"], params["wv"])
+        q = qf.reshape(b, s, n_heads, hd)
+        k = kf.reshape(b, s, n_kv_heads, hd)
+        v = vf.reshape(b, s, n_kv_heads, hd)
+    else:
+        q, k, v = _project_qkv(params, h, n_heads, n_kv_heads, hd)
+    if cross_kv is None:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        kv_pos = pos
+    else:
+        k, v, kv_pos = cross_kv
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    if not causal:
+        big = jnp.full_like(pos, jnp.iinfo(jnp.int32).max)
+        q_pos_eff = big                        # attend to everything
+    else:
+        q_pos_eff = pos
+    if impl == "naive":
+        out = attention_naive(q, k, v, q_pos_eff, kv_pos, cfg.window)
+    else:
+        out = attention_chunked(q, k, v, q_pos_eff, kv_pos,
+                                cfg.window, cfg.attn_chunk)
+    out = constrain(out, "batch", None, "heads", None)
+    from repro.models.layers import row_parallel_proj
+    flat = out.reshape(b, s, n_heads * hd)
+    if use_sp_rs(s):
+        return row_parallel_proj(flat, params["wo"]), (k, v)
+    return flat @ params["wo"], (k, v)
+
+
+def init_cache(batch: int, max_seq: int, n_kv_heads: int, head_dim: int,
+               window: int, dtype):
+    """Empty decode cache.  Ring-buffered to ``window`` slots for SWA.
+    ``dtype`` may be a narrow type (f8) — reads upcast before use."""
+    slots = min(max_seq, window) if window else max_seq
+    return {
+        "k": jnp.zeros((batch, slots, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, slots, n_kv_heads, head_dim), dtype),
+        "pos": jnp.full((slots,), -1, jnp.int32),
+    }
+
+
+def cache_from_prefill(k, v, pos, max_seq: int, window: int):
+    """Scatter prefilled K/V into a fresh cache (ring-aware)."""
+    b, s, kvh, hd = k.shape
+    slots = min(max_seq, window) if window else max_seq
+    take = min(s, slots)
+    k_t, v_t, p_t = k[:, -take:], v[:, -take:], pos[-take:]
+    idx = p_t % slots if window else p_t
+    cache = init_cache(b, max_seq, kvh, hd, window, k.dtype)
+    cache["k"] = cache["k"].at[:, idx].set(k_t.astype(cache["k"].dtype))
+    cache["v"] = cache["v"].at[:, idx].set(v_t.astype(cache["v"].dtype))
+    cache["pos"] = cache["pos"].at[idx].set(p_t)
+    return cache
+
+
+def _decode_local(q, new_k, new_v, k_cache, v_cache, kv_pos, cur_pos,
+                  window, chunk, axis_name):
+    """shard_map body: write the token into the owned slot, attend."""
+    slots_local = k_cache.shape[1]
+    if axis_name is not None:
+        shard = jax.lax.axis_index(axis_name)
+        total = slots_local * jax.lax.axis_size(axis_name)
+    else:
+        shard = 0
+        total = slots_local
+    slot = cur_pos % total if window else cur_pos
+    owner = slot // slots_local
+    local = slot - owner * slots_local
+    is_mine = (owner == shard)
+
+    def write(c, new):
+        upd = jax.lax.dynamic_update_slice_in_dim(
+            c, new.astype(c.dtype), local, axis=1)
+        return jnp.where(is_mine, upd, c)
+
+    k_cache = write(k_cache, new_k)
+    v_cache = write(v_cache, new_v)
+    pos_upd = jax.lax.dynamic_update_slice_in_dim(
+        kv_pos, cur_pos[None].astype(jnp.int32), local, axis=0)
+    kv_pos = jnp.where(is_mine, pos_upd, kv_pos)
+    out = decode_attention(q, k_cache, v_cache, kv_pos, cur_pos,
+                           window=window, chunk=chunk,
+                           axis_name=axis_name)
+    return out, k_cache, v_cache, kv_pos
+
+
+def decode_block(params, h, cache, cur_pos, cfg, n_heads, n_kv_heads, *,
+                 cross_kv=None):
+    """One-token decode.  h: (B, 1, d).  Returns (out, new cache).
+
+    On a mesh the cache sequence dim is sharded over the model axis and
+    the attention runs under shard_map with an LSE combine; without a
+    mesh it is the same math on the full cache.
+    """
+    hd = cfg.head_dim
+    q, k, v = _project_qkv(params, h, n_heads, n_kv_heads, hd)
+    if cross_kv is None:
+        q = apply_rope(q, cur_pos, cfg.rope_theta)
+        k = apply_rope(k, cur_pos, cfg.rope_theta)
+    else:
+        # cross-attention: static cache, nothing to write
+        ck, cv, cpos = cross_kv
+        big = jnp.asarray(jnp.iinfo(jnp.int32).max, jnp.int32)
+        out = decode_attention(q, ck, cv, cpos, big, window=0,
+                               chunk=cfg.attn_chunk)
+        b = h.shape[0]
+        return out.reshape(b, 1, n_heads * hd) @ params["wo"], cache
+
+    mesh = current_mesh()
+    q = constrain(q, "batch", None, None, None)
+    k = constrain(k, "batch", None, None, None)
+    v = constrain(v, "batch", None, None, None)
+    if mesh is not None and "model" in mesh.shape and mesh.shape["model"] > 1:
+        batch_spec = spec_for("batch")[0]
+        fn = partial(_decode_local, window=cfg.window,
+                     chunk=cfg.attn_chunk, axis_name="model")
+        out, nk, nv, npos = shard_map(
+            fn, mesh=mesh,
+            in_specs=(P(batch_spec, None, None, None),
+                      P(batch_spec, None, None, None),
+                      P(batch_spec, None, None, None),
+                      P(batch_spec, "model", None, None),
+                      P(batch_spec, "model", None, None),
+                      P("model"), P()),
+            out_specs=(P(batch_spec, None, None, None),
+                       P(batch_spec, "model", None, None),
+                       P(batch_spec, "model", None, None),
+                       P("model")),
+            check_vma=False,
+        )(q, k, v, cache["k"], cache["v"], cache["pos"],
+          jnp.asarray(cur_pos, jnp.int32))
+    else:
+        out, nk, nv, npos = _decode_local(
+            q, k, v, cache["k"], cache["v"], cache["pos"],
+            jnp.asarray(cur_pos, jnp.int32), cfg.window,
+            cfg.attn_chunk, None)
+    new_cache = {"k": nk, "v": nv, "pos": npos}
+    b = h.shape[0]
+    out = out.reshape(b, 1, n_heads * hd) @ params["wo"]
+    return out, new_cache

@@ -1,0 +1,75 @@
+"""VGG-style CNN in JAX — the paper's own evaluation workload.
+
+The conv layers run through :mod:`repro.kernels.conv_lb.ops` (the
+Pallas kernel realizing the paper's dataflow) when requested, or
+``jax.lax.conv_general_dilated`` otherwise; both are numerically
+checked against each other in tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vgg import _CFG
+from repro.models.layers import dense_init, split_keys
+
+
+def vgg_layer_dims(width_mult: float = 1.0):
+    dims = []
+    for name, ci, co, h, w in _CFG:
+        dims.append((name, max(1, int(ci * width_mult)) if ci != 3 else 3,
+                     max(1, int(co * width_mult)), h, w))
+    return dims
+
+
+def init_vgg(key, n_classes: int = 10, width_mult: float = 1.0,
+             dtype=jnp.float32):
+    dims = vgg_layer_dims(width_mult)
+    keys = split_keys(key, len(dims) + 1)
+    convs = []
+    for k, (name, ci, co, _, _) in zip(keys, dims):
+        convs.append({
+            "w": dense_init(k, (3, 3, ci, co), dtype, fan_in=9 * ci),
+            "b": jnp.zeros((co,), dtype),
+        })
+    last_co = dims[-1][2]
+    return {"convs": convs,
+            "head": dense_init(keys[-1], (last_co, n_classes), dtype,
+                               fan_in=last_co)}
+
+
+_POOL_AFTER = {"conv1_2", "conv2_2", "conv3_3", "conv4_3", "conv5_3"}
+
+
+def vgg_forward(params, images, use_kernel: bool = False):
+    """images: (B, H, W, 3) -> logits (B, n_classes)."""
+    if use_kernel:
+        from repro.kernels.conv_lb.ops import conv2d_lb as conv_fn
+    else:
+        conv_fn = None
+    h = images
+    for p, (name, ci, co, _, _) in zip(params["convs"], vgg_layer_dims()):
+        if h.shape[-1] != p["w"].shape[2]:
+            break  # reduced-width smoke configs may truncate the stack
+        if conv_fn is not None:
+            h = conv_fn(h, p["w"], padding=1)
+        else:
+            h = jax.lax.conv_general_dilated(
+                h, p["w"], window_strides=(1, 1), padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = jax.nn.relu(h + p["b"])
+        if name in _POOL_AFTER and h.shape[1] >= 2 and h.shape[2] >= 2:
+            h = jax.lax.reduce_window(
+                h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                "VALID")
+    h = h.mean(axis=(1, 2))
+    return h @ params["head"]
+
+
+def vgg_loss(params, batch, use_kernel: bool = False):
+    logits = vgg_forward(params, batch["images"], use_kernel)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)
+    return nll.mean()

@@ -1,0 +1,157 @@
+"""Vocab-parallel embedding and cross-entropy (Megatron-style).
+
+The table is sharded over the model axis on the vocab dim.  Both ops
+run under shard_map:
+
+  * ``embed_tokens``: every model shard sees the full token slice,
+    gathers its vocab range (masked), and the partial sums are
+    **reduce-scattered over the sequence dim** — the output lands
+    sequence-sharded, which is the residual-stream layout (SP).
+  * ``lm_loss``: h is all-gathered to full sequence per shard (the
+    shard_map resharding), then a scan over sequence chunks computes
+    partial-vocab logits, combines logsumexp/label terms with psums
+    over the model axis, and accumulates scalar (loss, count).  The
+    (B, S, V) logits tensor never materializes — each chunk's partial
+    is (B_l, chunk, V/mp) f32.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.axes import constrain, current_mesh, spec_for
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+LOSS_CHUNK = 512
+
+
+def _masked_gather(tokens, table, axis_name):
+    if axis_name is None:
+        return table[tokens]
+    v_l = table.shape[0]
+    start = jax.lax.axis_index(axis_name) * v_l
+    idx = jnp.clip(tokens - start, 0, v_l - 1)
+    vals = table[idx]
+    mask = (tokens >= start) & (tokens < start + v_l)
+    return jnp.where(mask[..., None], vals, 0)
+
+
+def _embed_local(tokens, table, axis_name, scatter_seq):
+    vals = _masked_gather(tokens, table, axis_name)
+    if axis_name is None:
+        return vals
+    if scatter_seq:
+        # vocab-partial sums reduce-scattered onto the seq dim (SP)
+        return jax.lax.psum_scatter(vals, axis_name,
+                                    scatter_dimension=1, tiled=True)
+    return jax.lax.psum(vals, axis_name)
+
+
+def embed_tokens(table, tokens):
+    """tokens (B, S) -> (B, S, d); table (V, d) vocab-sharded on a mesh."""
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.shape or mesh.shape["model"] == 1:
+        return _masked_gather(tokens, table, None)
+    mp = mesh.shape["model"]
+    scatter = tokens.shape[1] % mp == 0 and tokens.shape[1] >= mp
+    batch = spec_for("batch")[0]
+    return shard_map(
+        partial(_embed_local, axis_name="model", scatter_seq=scatter),
+        mesh=mesh,
+        in_specs=(P(batch, None), P("model", None)),
+        out_specs=P(batch, "model" if scatter else None, None),
+        check_vma=False)(tokens, table)
+
+
+def _chunk_ce(h_c, table, labels_c, valid_c, real_vocab, axis_name):
+    """Partial-vocab CE for one seq chunk.  h_c: (B, C, d) full seq slice
+    on every shard; table: (V_l, d)."""
+    v_l = table.shape[0]
+    start = jax.lax.axis_index(axis_name) * v_l if axis_name else 0
+    logits = jnp.einsum("bsd,vd->bsv", h_c.astype(jnp.float32),
+                        table.astype(jnp.float32))
+    vocab_ids = start + jnp.arange(v_l)
+    logits = jnp.where(vocab_ids[None, None, :] < real_vocab, logits,
+                       -1e30)
+    local_max = jax.lax.stop_gradient(logits.max(axis=-1))
+    gmax = jax.lax.pmax(local_max, axis_name) if axis_name else local_max
+    gmax = jax.lax.stop_gradient(gmax)
+    sumexp = jnp.exp(logits - gmax[..., None]).sum(axis=-1)
+    if axis_name:
+        sumexp = jax.lax.psum(sumexp, axis_name)
+    lse = jnp.log(sumexp) + gmax
+    idx = jnp.clip(labels_c - start, 0, v_l - 1)
+    lab = jnp.take_along_axis(logits, idx[..., None], axis=-1)[..., 0]
+    mask = (labels_c >= start) & (labels_c < start + v_l)
+    lab = jnp.where(mask, lab, 0.0)
+    if axis_name:
+        lab = jax.lax.psum(lab, axis_name)
+    nll = (lse - lab) * valid_c
+    return nll.sum(), valid_c.sum()
+
+
+def _loss_local(h, table, labels, valid, real_vocab, axis_name,
+                all_axes=(), chunk=LOSS_CHUNK):
+    """h: (B, S, d) FULL sequence per shard; scan over seq chunks."""
+    b, s, d = h.shape
+    c = min(chunk, s)
+    nc = s // c if s % c == 0 else 1
+    if s % c != 0:
+        c = s
+    hc = h.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, c).transpose(1, 0, 2)
+    vc = valid.reshape(b, nc, c).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        h_c, l_c, v_c = xs
+        ls, cnt = _chunk_ce(h_c, table, l_c, v_c, real_vocab, axis_name)
+        return (carry[0] + ls, carry[1] + cnt), None
+
+    (loss_sum, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc, vc))
+    if all_axes:
+        # replicated axes scale numerator and denominator identically
+        loss_sum = jax.lax.psum(loss_sum, all_axes)
+        count = jax.lax.psum(count, all_axes)
+    return loss_sum, count
+
+
+def lm_loss(h, table, labels, real_vocab: int):
+    """Mean next-token NLL.  h: (B, S, d) (seq possibly model-sharded),
+    table: (V, d) vocab-sharded, labels: (B, S) with -1 = ignore."""
+    valid = (labels >= 0).astype(jnp.float32)
+    labels_c = jnp.maximum(labels, 0)
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.shape or mesh.shape["model"] == 1:
+        s, c = _loss_local(h, table, labels_c, valid, real_vocab, None)
+        return s / jnp.maximum(c, 1.0)
+    batch = spec_for("batch")[0]
+    s, c = shard_map(
+        partial(_loss_local, real_vocab=real_vocab, axis_name="model",
+                all_axes=tuple(mesh.axis_names)),
+        mesh=mesh,
+        in_specs=(P(batch, None, None),      # all-gather h over seq
+                  P("model", None),
+                  P(batch, None), P(batch, None)),
+        out_specs=(P(), P()),
+        check_vma=False)(h, table, labels_c, valid)
+    return s / jnp.maximum(c, 1.0)
+
+
+def lm_logits(h, table, real_vocab: int):
+    """Decode-time logits for the last position: h (B, 1, d) -> (B, V)."""
+    logits = jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32),
+                        table.astype(jnp.float32))[:, -1]
+    v = table.shape[0]
+    logits = jnp.where(jnp.arange(v)[None, :] < real_vocab, logits, -1e30)
+    return constrain(logits, "batch", "vocab")

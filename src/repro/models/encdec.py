@@ -1,0 +1,198 @@
+"""Encoder-decoder backbone (whisper-medium stand-in).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs``
+provides precomputed frame embeddings (B, T_frames, d) directly.  The
+encoder is a non-causal transformer over frames; the decoder adds
+per-layer cross-attention whose K/V are computed once at prefill and
+held static in the cache during decode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models.embedding import embed_tokens, lm_logits, lm_loss
+from repro.models.layers import (cast_params_for_compute,
+                                 dense_init, rms_norm, split_keys)
+from repro.models.transformer import _apply_dense_ffn, _init_ffn
+from repro.parallel.axes import constrain
+
+ENC_FRAMES = 1500      # whisper mel frames after the conv frontend
+
+
+def _init_enc_block(key, cfg, nh, nkv, dtype):
+    ks = split_keys(key, 2)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": attn_mod.init_attention(ks[0], cfg.d_model, nh, nkv,
+                                        cfg.head_dim, dtype),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "ffn": _init_ffn(ks[1], cfg, dtype),
+    }
+
+
+def _init_dec_block(key, cfg, nh, nkv, dtype):
+    ks = split_keys(key, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "self_attn": attn_mod.init_attention(ks[0], cfg.d_model, nh, nkv,
+                                             cfg.head_dim, dtype),
+        "lnx": jnp.ones((cfg.d_model,), jnp.float32),
+        "cross_attn": attn_mod.init_attention(ks[1], cfg.d_model, nh, nkv,
+                                              cfg.head_dim, dtype),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "ffn": _init_ffn(ks[2], cfg, dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key, tp: int = 1):
+    nh, nkv = cfg.padded_heads(tp)
+    k1, k2, k3 = split_keys(key, 3)
+    enc = jax.vmap(lambda k: _init_enc_block(k, cfg, nh, nkv,
+                                             cfg.param_dtype))(
+        jax.random.split(k1, cfg.enc_layers))
+    dec = jax.vmap(lambda k: _init_dec_block(k, cfg, nh, nkv,
+                                             cfg.param_dtype))(
+        jax.random.split(k2, cfg.n_layers))
+    return {
+        "embed": dense_init(k3, (cfg.padded_vocab(tp), cfg.d_model),
+                            cfg.param_dtype),
+        "enc_blocks": enc,
+        "dec_blocks": dec,
+        "enc_ln": jnp.ones((cfg.d_model,), jnp.float32),
+        "final_ln": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig, tp: int = 1):
+    """frames: (B, T, d) stub embeddings -> (B, T, d)."""
+    nh, nkv = cfg.padded_heads(tp)
+    h = frames.astype(cfg.compute_dtype)
+    pos = jnp.arange(h.shape[1], dtype=jnp.int32)
+
+    def body(hh, bp):
+        bp = cast_params_for_compute(bp, cfg.compute_dtype)
+        out, _ = attn_mod.attention_block(
+            bp["attn"], rms_norm(hh, bp["ln1"], cfg.norm_eps), pos,
+            cfg, nh, nkv, causal=False)
+        hh = hh + out
+        hh = hh + _apply_dense_ffn(bp["ffn"],
+                                   rms_norm(hh, bp["ln2"], cfg.norm_eps))
+        return constrain(hh, "batch", None, None), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["enc_blocks"])
+    return rms_norm(h, params["enc_ln"], cfg.norm_eps)
+
+
+def _cross_kv(bp, enc_out, cfg, nkv):
+    b, t, _ = enc_out.shape
+    k = (enc_out @ bp["cross_attn"]["wk"]).reshape(b, t, nkv, cfg.head_dim)
+    v = (enc_out @ bp["cross_attn"]["wv"]).reshape(b, t, nkv, cfg.head_dim)
+    return k, v, jnp.arange(t, dtype=jnp.int32)
+
+
+def decoder_forward(params, tokens, enc_out, cfg: ModelConfig,
+                    tp: int = 1, *, want_cache: bool = False,
+                    max_seq: int | None = None):
+    nh, nkv = cfg.padded_heads(tp)
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    h = embed_tokens(params["embed"], tokens).astype(cfg.compute_dtype)
+    h = constrain(h, "batch", "seq", None)
+    pos = jnp.arange(s, dtype=jnp.int32)
+
+    def body(hh, bp):
+        bp = cast_params_for_compute(bp, cfg.compute_dtype)
+        out, (k, v) = attn_mod.attention_block(
+            bp["self_attn"],
+            constrain(rms_norm(hh, bp["ln1"], cfg.norm_eps),
+                      "batch", "seq", None), pos, cfg, nh, nkv)
+        hh = hh + out
+        ck, cv, cpos = _cross_kv(bp, enc_out, cfg, nkv)
+        out, _ = attn_mod.attention_block(
+            bp["cross_attn"], rms_norm(hh, bp["lnx"], cfg.norm_eps), pos,
+            cfg, nh, nkv, cross_kv=(ck, cv, cpos), causal=False)
+        hh = hh + out
+        hh = hh + _apply_dense_ffn(bp["ffn"],
+                                   rms_norm(hh, bp["ln2"], cfg.norm_eps))
+        hh = constrain(hh, "batch", "seq", None)
+        cache = {}
+        if want_cache:
+            cache = {"self": attn_mod.cache_from_prefill(
+                k, v, pos, max_seq, cfg.window),
+                "cross_k": ck, "cross_v": cv}
+        return hh, cache if want_cache else None
+
+    if cfg.remat and not want_cache:
+        body = jax.checkpoint(body)
+    h, caches = jax.lax.scan(body, h, params["dec_blocks"])
+    return rms_norm(h, params["final_ln"], cfg.norm_eps), caches
+
+
+def train_loss(params, batch, cfg: ModelConfig, tp: int = 1,
+               moe_mode: str = "dense"):
+    enc_out = encode(params, batch["frames"], cfg, tp)
+    h, _ = decoder_forward(params, batch["tokens"], enc_out, cfg, tp)
+    return lm_loss(h, params["embed"], batch["labels"], cfg.vocab)
+
+
+def prefill(params, tokens, frames, cfg: ModelConfig, tp: int = 1,
+            max_seq: int | None = None):
+    enc_out = encode(params, frames, cfg, tp)
+    h, caches = decoder_forward(params, tokens, enc_out, cfg, tp,
+                                want_cache=True, max_seq=max_seq)
+    return lm_logits(h[:, -1:], params["embed"], cfg.vocab), caches
+
+
+def init_cache_tree(cfg: ModelConfig, batch: int, max_seq: int,
+                    tp: int = 1):
+    nh, nkv = cfg.padded_heads(tp)
+    slots = min(max_seq, cfg.window) if cfg.window else max_seq
+    nb = cfg.n_layers
+    dtype = cfg.compute_dtype
+    return {
+        "self": {
+            "k": jnp.zeros((nb, batch, slots, nkv, cfg.head_dim), dtype),
+            "v": jnp.zeros((nb, batch, slots, nkv, cfg.head_dim), dtype),
+            "pos": jnp.full((nb, slots), -1, jnp.int32),
+        },
+        "cross_k": jnp.zeros((nb, batch, ENC_FRAMES, nkv, cfg.head_dim),
+                             dtype),
+        "cross_v": jnp.zeros((nb, batch, ENC_FRAMES, nkv, cfg.head_dim),
+                             dtype),
+    }
+
+
+def decode_step(params, caches, token, cur_pos, cfg: ModelConfig,
+                tp: int = 1, **_):
+    nh, nkv = cfg.padded_heads(tp)
+    h = embed_tokens(params["embed"], token).astype(cfg.compute_dtype)
+    h = constrain(h, "batch", None, None)
+
+    def body(hh, xs):
+        bp, c = xs
+        bp = cast_params_for_compute(bp, cfg.compute_dtype)
+        out, nself = attn_mod.decode_block(
+            bp["self_attn"], rms_norm(hh, bp["ln1"], cfg.norm_eps),
+            c["self"], cur_pos, cfg, nh, nkv)
+        hh = hh + out
+        cpos = jnp.arange(c["cross_k"].shape[1], dtype=jnp.int32)
+        out, _ = attn_mod.decode_block(
+            bp["cross_attn"], rms_norm(hh, bp["lnx"], cfg.norm_eps),
+            None, cur_pos, cfg, nh, nkv,
+            cross_kv=(c["cross_k"], c["cross_v"], cpos))
+        hh = hh + out
+        hh = hh + _apply_dense_ffn(bp["ffn"],
+                                   rms_norm(hh, bp["ln2"], cfg.norm_eps))
+        hh = constrain(hh, "batch", None, None)
+        return hh, {"self": nself, "cross_k": c["cross_k"],
+                    "cross_v": c["cross_v"]}
+
+    h, new_caches = jax.lax.scan(body, h, (params["dec_blocks"], caches))
+    h = rms_norm(h, params["final_ln"], cfg.norm_eps)
+    return lm_logits(h, params["embed"], cfg.vocab), new_caches

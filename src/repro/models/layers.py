@@ -1,0 +1,367 @@
+"""Shared transformer building blocks (pure JAX, sharding-agnostic).
+
+Attention is provided in two interchangeable implementations:
+  * ``attention_naive``   — O(S^2) reference (tests / tiny shapes);
+  * ``attention_chunked`` — double-chunked online-softmax (the XLA-HLO
+    realization of the paper's psum-stationary principle: the softmax
+    accumulator is the resident "output block", KV panels stream), used
+    by every dry-run path and by long-context serving;
+plus ``decode_attention`` with an optional flash-decoding LSE-combine
+across a sequence-sharded KV cache (axis_name), which is how decode
+shapes shard 32k-500k caches over the model axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.axes import (constrain, current_flag, current_fsdp,
+                                 current_mesh, spec_for)
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+from jax.sharding import PartitionSpec as P
+
+
+# --------------------------------------------------------------------------
+# norms / positional / MLP
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * w).astype(dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); pos: (S,) or scalar position index."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = jnp.asarray(pos, jnp.float32)[..., None] * freqs   # (S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                          # (S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def use_sp_rs(seq_len: int) -> bool:
+    """Explicit reduce-scatter SP boundaries enabled and applicable?"""
+    mesh = current_mesh()
+    if mesh is None or not current_flag("sp_rs"):
+        return False
+    mp = mesh.shape.get("model", 1)
+    return mp > 1 and seq_len % mp == 0 and seq_len >= mp
+
+
+def row_parallel_proj(x: jax.Array, w: jax.Array) -> jax.Array:
+    """(B, S, F@model) @ (F@model, d) -> (B, S@model, d) via an explicit
+    per-shard matmul + psum_scatter over the sequence dim.
+
+    GSPMD realizes this boundary as allreduce+dynamic-slice (2x the
+    volume and 16x the landed bytes of a reduce-scatter); doing it
+    manually is the single biggest collective win in §Perf."""
+    mesh = current_mesh()
+    batch = spec_for("batch")[0]
+    fsdp_axis = "data" if (current_fsdp() and "data" in mesh.shape
+                           and mesh.shape["data"] > 1
+                           and w.shape[1] % mesh.shape["data"] == 0) \
+        else None
+
+    def body(xl, wl):
+        if fsdp_axis is not None:
+            wl = jax.lax.all_gather(wl, fsdp_axis, axis=1, tiled=True)
+        part = xl @ wl
+        return jax.lax.psum_scatter(part, "model",
+                                    scatter_dimension=1, tiled=True)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(batch, None, "model"),
+                               P("model", fsdp_axis)),
+                     out_specs=P(batch, "model", None),
+                     check_vma=False)(x, w)
+
+
+def _fsdp_axis(mesh, dim_size: int):
+    return "data" if (current_fsdp() and "data" in mesh.shape
+                      and mesh.shape["data"] > 1
+                      and dim_size % mesh.shape["data"] == 0) else None
+
+
+def sp_ffn(x: jax.Array, w_gate, w_up, w_down) -> jax.Array:
+    """Whole SwiGLU FFN as ONE shard_map region: all-gather the seq-
+    sharded input once, run the three local matmuls, reduce-scatter the
+    output back to the seq-sharded layout.  The backward transposes to
+    psum_scatter/all_gather pairs — no full-seq all-reduces (the 503
+    GB/chip/step pathology GSPMD emits for the same math, §Perf)."""
+    mesh = current_mesh()
+    batch = spec_for("batch")[0]
+    fa = _fsdp_axis(mesh, w_gate.shape[0])
+
+    def body(xl, wg, wu, wd):
+        if fa is not None:
+            wg = jax.lax.all_gather(wg, fa, axis=0, tiled=True)
+            wu = jax.lax.all_gather(wu, fa, axis=0, tiled=True)
+            wd = jax.lax.all_gather(wd, fa, axis=1, tiled=True)
+        xg = jax.lax.all_gather(xl, "model", axis=1, tiled=True)
+        h = jax.nn.silu(xg @ wg) * (xg @ wu)
+        return jax.lax.psum_scatter(h @ wd, "model",
+                                    scatter_dimension=1, tiled=True)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(batch, "model", None),
+                               P(fa, "model"), P(fa, "model"),
+                               P("model", fa)),
+                     out_specs=P(batch, "model", None),
+                     check_vma=False)(x, w_gate, w_up, w_down)
+
+
+def sp_qkv(x: jax.Array, wq, wk, wv):
+    """QKV projections as one shard_map region: single seq all-gather
+    feeding the three column-parallel dots; backward reduce-scatters."""
+    mesh = current_mesh()
+    batch = spec_for("batch")[0]
+    fa = _fsdp_axis(mesh, wq.shape[0])
+
+    def body(xl, aq, ak, av):
+        if fa is not None:
+            aq = jax.lax.all_gather(aq, fa, axis=0, tiled=True)
+            ak = jax.lax.all_gather(ak, fa, axis=0, tiled=True)
+            av = jax.lax.all_gather(av, fa, axis=0, tiled=True)
+        xg = jax.lax.all_gather(xl, "model", axis=1, tiled=True)
+        return xg @ aq, xg @ ak, xg @ av
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(batch, "model", None),
+                               P(fa, "model"), P(fa, "model"),
+                               P(fa, "model")),
+                     out_specs=(P(batch, None, "model"),
+                                P(batch, None, "model"),
+                                P(batch, None, "model")),
+                     check_vma=False)(x, wq, wk, wv)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    """SwiGLU MLP; hidden activations constrained to the model axis."""
+    if x.ndim == 3 and use_sp_rs(x.shape[1]) \
+            and w_gate.shape[1] % current_mesh().shape["model"] == 0:
+        return sp_ffn(x, w_gate, w_up, w_down)
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = constrain(h, "batch", None, "ffn")
+    if h.ndim == 3 and use_sp_rs(h.shape[1]):
+        return row_parallel_proj(h, w_down)
+    return h @ w_down
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+def _gqa_scores_scale(head_dim: int) -> float:
+    return 1.0 / math.sqrt(head_dim)
+
+
+def repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B, S, KV, hd) -> (B, S, KV*groups, hd) without copies until use."""
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :],
+                            (b, s, kv, groups, hd)).reshape(b, s, kv * groups, hd)
+
+
+def attention_naive(q: jax.Array, k: jax.Array, v: jax.Array,
+                    q_pos: jax.Array, kv_pos: jax.Array,
+                    window: int = 0) -> jax.Array:
+    """Reference O(S^2) causal (optionally sliding-window) attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd); positions are absolute.
+    """
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * _gqa_scores_scale(hd)
+    mask = kv_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= kv_pos[None, :] > (q_pos[:, None] - window)
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def _online_update(carry, scores, v_chunk):
+    """One online-softmax step: fold a (…, Ck) score panel and its
+    (…, Ck, hd) value panel into the running (acc, m, l) accumulator —
+    the psum-stationary output block of the paper, in softmax form."""
+    acc, m, l = carry
+    m_new = jnp.maximum(m, scores.max(axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(scores - m_new[..., None])
+    l = l * alpha + p.sum(axis=-1)
+    acc = acc * alpha[..., None] + jnp.einsum("...qs,...sh->...qh", p, v_chunk)
+    return acc, m_new, l
+
+
+def attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_pos: jax.Array, kv_pos: jax.Array,
+                      window: int = 0, chunk: int = 1024) -> jax.Array:
+    """Double-chunked online-softmax attention (O(S) memory in XLA).
+
+    Outer scan over query chunks, inner scan over KV chunks with the
+    accumulator resident — KV panels are streamed exactly once per query
+    chunk, the direct analogue of Eq. (14)'s input streaming.
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    cq = min(chunk, sq)
+    ck = min(chunk, skv)
+    nq, nk = -(-sq // cq), -(-skv // ck)
+    pad_q = nq * cq - sq
+    pad_k = nk * ck - skv
+    scale = _gqa_scores_scale(hd)
+
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_pos, (0, pad_q), constant_values=-1)
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    kpos = jnp.pad(kv_pos, (0, pad_k), constant_values=jnp.iinfo(jnp.int32).max)
+
+    # (nq, B, cq, KV, G, hd) query chunks; (nk, B, ck, KV, hd) kv chunks
+    qc = qp.reshape(b, nq, cq, kvh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    qposc = qpos.reshape(nq, cq)
+    kc = kp.reshape(b, nk, ck, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(b, nk, ck, kvh, hd).transpose(1, 0, 2, 3, 4)
+    kposc = kpos.reshape(nk, ck)
+
+    def q_step(_, q_in):
+        qi, qpi = q_in           # (B, cq, KV, G, hd), (cq,)
+
+        def kv_step(carry, kv_in):
+            ki, vi, kpi = kv_in  # (B, ck, KV, hd), (B, ck, KV, hd), (ck,)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qi.astype(jnp.float32),
+                           ki.astype(jnp.float32)) * scale
+            mask = kpi[None, :] <= qpi[:, None]
+            if window:
+                mask &= kpi[None, :] > (qpi[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            vi32 = vi.astype(jnp.float32).transpose(0, 2, 1, 3)  # (B,KV,ck,hd)
+            return _online_update(carry, s, vi32[:, :, None]), None
+
+        acc0 = jnp.zeros((b, kvh, g, cq, hd), jnp.float32)
+        m0 = jnp.full((b, kvh, g, cq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, cq), jnp.float32)
+        # remat the panel step: scan-AD then saves only the (tiny) carry
+        # per iteration and recomputes the (cq x ck) score panel in the
+        # backward sweep instead of materializing all nk panels.
+        (acc, _, l), _ = jax.lax.scan(jax.checkpoint(kv_step),
+                                      (acc0, m0, l0), (kc, vc, kposc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.transpose(0, 3, 1, 2, 4)   # (B, cq, KV, G, hd)
+
+    _, outs = jax.lax.scan(jax.checkpoint(q_step), None, (qc, qposc))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * cq, h, hd)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_pos: jax.Array, cur_pos: jax.Array,
+                     window: int = 0, chunk: int = 2048,
+                     axis_name: str | None = None) -> jax.Array:
+    """Single-token attention against a (possibly sequence-sharded) cache.
+
+    q: (B, 1, H, hd); caches: (B, Skv_local, KV, hd); ``kv_pos`` gives the
+    absolute position of every local cache slot (-1 = empty).  When
+    ``axis_name`` is set the caller runs this under shard_map with the
+    cache sequence dimension sharded; partial (acc, m, l) accumulators
+    are LSE-combined across shards — flash-decoding on the model axis.
+    """
+    b, _, h, hd = q.shape
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    scale = _gqa_scores_scale(hd)
+    skv = k_cache.shape[1]
+    ck = min(chunk, skv)
+    nk = -(-skv // ck)
+    pad = nk * ck - skv
+    kp = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    pp = jnp.pad(kv_pos, (0, pad), constant_values=-1)
+    kc = kp.reshape(b, nk, ck, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(b, nk, ck, kvh, hd).transpose(1, 0, 2, 3, 4)
+    pc = pp.reshape(nk, ck)
+    qg = q.reshape(b, kvh, g, 1, hd)     # Sq = 1
+
+    def kv_step(carry, kv_in):
+        ki, vi, pi = kv_in
+        s = jnp.einsum("bkgqh,bskh->bkgqs", qg.astype(jnp.float32),
+                       ki.astype(jnp.float32)) * scale
+        mask = (pi >= 0) & (pi <= cur_pos)
+        if window:
+            mask &= pi > (cur_pos - window)
+        s = jnp.where(mask[None, None, None, None], s, -1e30)
+        vi32 = vi.astype(jnp.float32).transpose(0, 2, 1, 3)
+        return _online_update(carry, s, vi32[:, :, None]), None
+
+    acc0 = jnp.zeros((b, kvh, g, 1, hd), jnp.float32)
+    m0 = jnp.full((b, kvh, g, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, 1), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), (kc, vc, pc))
+
+    if axis_name is not None:
+        # flash-decoding combine: renormalize partial accumulators by the
+        # global max, then sum across shards (two tiny collectives).
+        m_glob = jax.lax.pmax(m, axis_name)
+        corr = jnp.exp(m - m_glob)
+        acc = jax.lax.psum(acc * corr[..., None], axis_name)
+        l = jax.lax.psum(l * corr, axis_name)
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# parameter init helpers
+# --------------------------------------------------------------------------
+
+_KEEP_F32 = {"A_log", "D", "dt_bias", "router", "ln1", "ln2", "lnx",
+             "norm_w", "final_ln", "enc_ln"}
+
+
+def cast_params_for_compute(tree, dtype):
+    """Mixed precision: cast f32 master matmul weights to the compute
+    dtype at use (norm/router/SSM decay params stay f32)."""
+    def f(path, p):
+        name = getattr(path[-1], "key", None) if path else None
+        if p.dtype == jnp.float32 and name not in _KEEP_F32 \
+                and p.ndim >= 2:
+            return p.astype(dtype)
+        return p
+    return jax.tree_util.tree_map_with_path(f, tree)
+
+
+def dense_init(key: jax.Array, shape: tuple[int, ...],
+               dtype, fan_in: int | None = None) -> jax.Array:
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def split_keys(key: jax.Array, n: int) -> list[jax.Array]:
+    return list(jax.random.split(key, n))

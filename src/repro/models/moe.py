@@ -1,0 +1,217 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Three execution modes, one set of weights:
+
+  * ``a2a``   — training/prefill on a mesh: shard_map over
+    ("data","model"); tokens are sort-dispatched into fixed-capacity
+    bins, exchanged with a single all_to_all over the model axis,
+    processed by the local expert shard, and returned by a second
+    all_to_all.  Expert weights are stored (E*tpe, d, f/tpe) with the
+    f-dim further FSDP-sharded over "data" and all-gathered at use
+    (ZeRO-3; the backward of the gather is the gradient reduce-scatter).
+    When n_experts < model shards, each expert is split over
+    ``tpe = mp // E`` shards (TP-within-expert) and the dispatch
+    replicates its bin to all tpe slices.
+  * ``psum``  — decode on a mesh: tokens are replicated over "model";
+    every shard computes its local expert slice densely for all tokens
+    and contributions are psum-combined (efficient for tiny T).
+  * ``dense`` — no mesh (unit tests): same math as psum with one shard.
+
+Token overflow beyond ``capacity_factor`` is dropped (standard
+Switch-style dropping; exercised and asserted in tests).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, split_keys
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, dtype,
+             tpe: int = 1):
+    """Weights: router (d, E); experts stored pre-split for EP x TP.
+
+    wi/wg: (E*tpe, d, f/tpe); wo: (E*tpe, f/tpe, d)."""
+    ks = split_keys(key, 4)
+    f_l = d_ff // tpe
+    e_rows = n_experts * tpe
+    return {
+        "router": dense_init(ks[0], (d_model, n_experts), jnp.float32),
+        "wg": dense_init(ks[1], (e_rows, d_model, f_l), dtype),
+        "wi": dense_init(ks[2], (e_rows, d_model, f_l), dtype),
+        "wo": dense_init(ks[3], (e_rows, f_l, d_model), dtype,
+                         fan_in=d_ff),
+    }
+
+
+def router_top_k(x: jax.Array, router: jax.Array, top_k: int):
+    """Returns (gates (T,k) f32 normalized, idx (T,k) int32)."""
+    logits = x.astype(jnp.float32) @ router
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx
+
+
+def _expert_ffn(toks, wg, wi, wo):
+    """toks (E_l, C, d) x per-expert SwiGLU -> (E_l, C, d)."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", toks, wg)) \
+        * jnp.einsum("ecd,edf->ecf", toks, wi)
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def moe_dispatch_local(x, gates, idx, n_experts: int, capacity: int):
+    """Sort-based fixed-capacity dispatch of local tokens.
+
+    Returns (bins (E, C, d), slot (T*k,), order (T*k,)) where ``slot``
+    maps each (token, choice) to its bin position (E*C = dropped)."""
+    t, d = x.shape
+    k = idx.shape[1]
+    flat_e = idx.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    onehot = jax.nn.one_hot(se, n_experts, dtype=jnp.int32)
+    rank = (jnp.cumsum(onehot, axis=0) - onehot)[jnp.arange(t * k), se]
+    keep = rank < capacity
+    slot_sorted = jnp.where(keep, se * capacity + rank, n_experts * capacity)
+    # slot in original flat order
+    slot = jnp.zeros((t * k,), jnp.int32).at[order].set(slot_sorted)
+    tok_of_flat = jnp.arange(t * k) // k
+    bins = jnp.zeros((n_experts * capacity + 1, d), x.dtype)
+    bins = bins.at[slot].set(x[tok_of_flat], mode="drop")
+    return bins[:-1].reshape(n_experts, capacity, d), slot
+
+
+def moe_combine_local(ret_bins, slot, gates, t: int, k: int):
+    """Gather expert outputs back per (token, choice), weight, sum."""
+    e_c, d = ret_bins.shape[0] * ret_bins.shape[1], ret_bins.shape[2]
+    flat = jnp.concatenate(
+        [ret_bins.reshape(e_c, d),
+         jnp.zeros((1, d), ret_bins.dtype)], axis=0)
+    per_choice = flat[slot]                         # dropped -> zeros
+    w = gates.reshape(t * k).astype(per_choice.dtype)
+    out = (per_choice * w[:, None]).reshape(t, k, d).sum(axis=1)
+    return out
+
+
+def moe_ffn_dense(x, params, top_k: int, capacity_factor: float):
+    """Reference mode (no mesh): dense compute of all experts."""
+    t, d = x.shape
+    e_rows = params["wg"].shape[0]
+    n_experts = params["router"].shape[1]
+    tpe = e_rows // n_experts
+    gates, idx = router_top_k(x, params["router"], top_k)
+    cap = max(1, int(math.ceil(t * top_k / n_experts * capacity_factor)))
+    bins, slot = moe_dispatch_local(x, gates, idx, n_experts, cap)
+    if tpe == 1:
+        ret = _expert_ffn(bins, params["wg"], params["wi"], params["wo"])
+    else:
+        rep = jnp.repeat(bins, tpe, axis=0)         # (E*tpe, C, d)
+        part = _expert_ffn(rep, params["wg"], params["wi"], params["wo"])
+        ret = part.reshape(n_experts, tpe, cap, d).sum(axis=1)
+    return moe_combine_local(ret, slot, gates, t, top_k)
+
+
+def moe_ffn_a2a(x, params, top_k: int, capacity_factor: float,
+                model_axis: str, data_axis: str | None):
+    """shard_map body: x (T_local, d); expert weights local slices.
+
+    Dispatch -> all_to_all -> local expert FFN -> all_to_all -> combine.
+    """
+    t, d = x.shape
+    mp = jax.lax.axis_size(model_axis)
+    n_experts = params["router"].shape[1]
+    tpe = max(1, mp // n_experts)
+    assert n_experts * tpe == mp, (n_experts, mp)
+    wg, wi, wo = params["wg"], params["wi"], params["wo"]
+    if data_axis is not None:                        # ZeRO-3 gather at use
+        wg = jax.lax.all_gather(wg, data_axis, axis=2, tiled=True)
+        wi = jax.lax.all_gather(wi, data_axis, axis=2, tiled=True)
+        wo = jax.lax.all_gather(wo, data_axis, axis=1, tiled=True)
+
+    gates, idx = router_top_k(x, params["router"], top_k)
+    cap = max(1, int(math.ceil(t * top_k / n_experts * capacity_factor)))
+    bins, slot = moe_dispatch_local(x, gates, idx, n_experts, cap)
+    send = jnp.repeat(bins, tpe, axis=0)             # (mp, C, d)
+    recv = jax.lax.all_to_all(send, model_axis, split_axis=0,
+                              concat_axis=0, tiled=False)
+    # recv: (mp, C, d) — tokens for MY expert slice from every source
+    toks = recv.reshape(1, mp * cap, d)              # E_local = 1 row
+    out = _expert_ffn(toks, wg, wi, wo)              # local f-slice partial
+    back = out.reshape(mp, cap, d)
+    ret = jax.lax.all_to_all(back, model_axis, split_axis=0,
+                             concat_axis=0, tiled=False)
+    # ret: (mp, C, d) = per (expert, tpe-slice) partials for MY tokens
+    ret = ret.reshape(n_experts, tpe, cap, d).sum(axis=1)
+    return moe_combine_local(ret, slot, gates, t, top_k)
+
+
+def moe_ffn_psum(x, params, top_k: int, model_axis: str,
+                 data_axis: str | None):
+    """Decode mode shard_map body: x replicated over model; each shard
+    computes its expert slice densely for all T tokens; psum combines."""
+    t, d = x.shape
+    mp = jax.lax.axis_size(model_axis)
+    n_experts = params["router"].shape[1]
+    tpe = max(1, mp // n_experts)
+    wg, wi, wo = params["wg"], params["wi"], params["wo"]
+    if data_axis is not None:
+        wg = jax.lax.all_gather(wg, data_axis, axis=2, tiled=True)
+        wi = jax.lax.all_gather(wi, data_axis, axis=2, tiled=True)
+        wo = jax.lax.all_gather(wo, data_axis, axis=1, tiled=True)
+    my_expert = jax.lax.axis_index(model_axis) // tpe
+    gates, idx = router_top_k(x, params["router"], top_k)
+    # weight of MY expert for each token (0 if not routed here)
+    mine = (idx == my_expert).astype(jnp.float32) * gates
+    w_tok = mine.sum(axis=1)                          # (T,)
+    out = _expert_ffn(x[None], wg, wi, wo)[0]         # (T, d) f-slice partial
+    out = out * w_tok[:, None].astype(out.dtype)
+    return jax.lax.psum(out, model_axis)
+
+
+def moe_ffn_psum_ep2(x, params, top_k: int, axes: tuple,
+                     batch_axis: str | None):
+    """Two-axis expert parallelism for serving (no weight gathers).
+
+    Expert weights are stored (E * tpe2, d, f/tpe2) and sharded jointly
+    over ``axes`` = ("model", "data"): every chip owns one (expert,
+    f-slice) pair permanently.  Tokens stay batch-sharded outside; the
+    body all-gathers the (tiny) token block over the data axis, computes
+    its slice's partial for every token routed to its expert, psums over
+    both axes, and keeps its own batch rows.
+    """
+    t_local, d = x.shape
+    if batch_axis is not None:
+        xg = jax.lax.all_gather(x, batch_axis, axis=0, tiled=True)
+        my_rows = jax.lax.axis_index(batch_axis)
+    else:
+        xg = x
+        my_rows = 0
+    t = xg.shape[0]
+    n_experts = params["router"].shape[1]
+    rows = params["wg"].shape[0]        # E * tpe2 global
+    sizes = [jax.lax.axis_size(a) for a in axes]
+    total = 1
+    for sz in sizes:
+        total *= sz
+    tpe2 = max(1, total // n_experts)
+    idx_flat = jax.lax.axis_index(axes[0])
+    for a, sz in zip(axes[1:], sizes[1:]):
+        idx_flat = idx_flat * sz + jax.lax.axis_index(a)
+    my_expert = idx_flat // tpe2
+    gates, idx = router_top_k(xg, params["router"], top_k)
+    mine = (idx == my_expert).astype(jnp.float32) * gates
+    w_tok = mine.sum(axis=1)
+    out = _expert_ffn(xg[None], params["wg"], params["wi"],
+                      params["wo"])[0]
+    out = out * w_tok[:, None].astype(out.dtype)
+    out = jax.lax.psum(out, axes)
+    if batch_axis is not None:
+        out = jax.lax.dynamic_slice_in_dim(out, my_rows * t_local,
+                                           t_local, axis=0)
+    return out

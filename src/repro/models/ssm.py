@@ -1,0 +1,209 @@
+"""Mamba2 (state-space duality, SSD) block — arXiv:2405.21060.
+
+The SSD algorithm is itself a *blocked contraction*: the sequence is
+split into chunks; within a chunk the computation is a (masked) matmul
+block, and across chunks a tiny recurrent state is carried — i.e. the
+intra-chunk blocks are psum-stationary in exactly the sense of the
+paper's dataflow (DESIGN.md §4 "technique applied to").
+
+Forward (train/prefill) = chunked SSD; decode = O(1) recurrent update.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm, split_keys
+from repro.parallel.axes import constrain
+
+
+def init_mamba(key, d_model: int, state: int, head_dim: int,
+               expand: int, conv_k: int, dtype, n_groups: int = 1):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * n_groups * state
+    ks = split_keys(key, 4)
+    proj_out = 2 * d_inner + 2 * n_groups * state + n_heads
+    return {
+        "in_proj": dense_init(ks[0], (d_model, proj_out), dtype),
+        "conv_w": dense_init(ks[1], (conv_k, conv_dim), dtype,
+                             fan_in=conv_k),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[2], (d_inner, d_model), dtype),
+    }
+
+
+def _split_proj(proj, d_inner, n_groups, state, n_heads):
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * n_groups * state], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w):
+    """Depthwise causal conv along seq: xbc (b, L, C), conv_w (k, C)."""
+    k = conv_w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * conv_w[i] for i in range(k))
+    return jax.nn.silu(out)
+
+
+def ssd_chunked(x, dt, a_log, b_mat, c_mat, d_skip, chunk: int,
+                init_state=None):
+    """Chunked SSD scan.
+
+    x: (B, L, H, P); dt: (B, L, H); b_mat/c_mat: (B, L, G, N);
+    returns y (B, L, H, P) and the final state (B, H, P, N).
+    """
+    bsz, length, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    hg = h // g
+    q = min(chunk, length)
+    nc = -(-length // q)
+    pad = nc * q - length
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    a = -jnp.exp(a_log)                               # (H,) negative
+    dta = dt * a                                       # (B, L', H)
+    # chunk-major leading axis for the scan
+    xc = x.reshape(bsz, nc, q, h, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(bsz, nc, q, h).transpose(1, 0, 2, 3)
+    dtac = dta.reshape(bsz, nc, q, h).transpose(1, 0, 2, 3)
+    bc = b_mat.reshape(bsz, nc, q, g, n).transpose(1, 0, 2, 3, 4)
+    cc = c_mat.reshape(bsz, nc, q, g, n).transpose(1, 0, 2, 3, 4)
+
+    if init_state is None:
+        init_state = jnp.zeros((bsz, g, hg, p, n), jnp.float32)
+    else:
+        init_state = init_state.reshape(bsz, g, hg, p, n)
+
+    tri = jnp.tril(jnp.ones((q, q), bool))
+
+    def chunk_step(state, inp):
+        """One chunk: intra-chunk block matmul (the paper's psum block)
+        + O(1) state carry.  Only this chunk's (q x q) decay panel ever
+        materializes."""
+        xi, dti, dtai, bi, ci = inp            # (B,q,...) slices
+        cs = jnp.cumsum(dtai, axis=1)          # (B, q, H)
+        seg = cs[:, :, None, :] - cs[:, None, :, :]
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        xg = xi.reshape(bsz, q, g, hg, p)
+        dtg = dti.reshape(bsz, q, g, hg)
+        decg = decay.reshape(bsz, q, q, g, hg)
+        cb = jnp.einsum("bqgn,bsgn->bqsg", ci, bi)
+        # explicit contraction order: build the (b,q,s,g,h) weight panel
+        # first, then one matmul over s — keeps the largest intermediate
+        # at O(q^2 * h) instead of the O(q^2 * h * p) monster a free
+        # einsum path materializes.
+        wpanel = cb[..., None] * decg * dtg[:, None]       # (b,q,s,g,h)
+        y_diag = jnp.einsum("bqsgh,bsghp->bqghp", wpanel, xg)
+        # contribution of the carried state (contract n first)
+        inc = jnp.exp(cs).reshape(bsz, q, g, hg)
+        y_off = jnp.einsum("bqgn,bghpn->bqghp", ci, state) \
+            * inc[..., None]
+        # chunk-final state update
+        decay_last = jnp.exp(cs[:, -1:, :] - cs).reshape(bsz, q, g, hg)
+        xw = xg * (decay_last * dtg)[..., None]            # (b,s,g,h,p)
+        states = jnp.einsum("bsgn,bsghp->bghpn", bi, xw)
+        chunk_decay = jnp.exp(cs[:, -1, :]).reshape(bsz, g, hg)
+        new_state = state * chunk_decay[..., None, None] + states
+        y = (y_diag + y_off).reshape(bsz, q, h, p)
+        return new_state, y
+
+    final_state, ys = jax.lax.scan(jax.checkpoint(chunk_step), init_state,
+                                   (xc, dtc, dtac, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * q, h, p)
+    y = y + x * d_skip[None, None, :, None]
+    y = y[:, :length]
+    return y, final_state.reshape(bsz, h, p, n)
+
+
+def ssd_decode_step(x_t, dt_t, a_log, b_t, c_t, d_skip, state):
+    """O(1) recurrence: x_t (B,H,P); dt_t (B,H); b_t/c_t (B,G,N);
+    state (B,H,P,N) -> (y (B,H,P), new state)."""
+    bsz, h, p = x_t.shape
+    g = b_t.shape[1]
+    hg = h // g
+    a = -jnp.exp(a_log)
+    da = jnp.exp(dt_t * a)                              # (B,H)
+    sg = state.reshape(bsz, g, hg, p, -1)
+    b_in = jnp.einsum("bh,bgn,bghp->bghpn",
+                      dt_t, b_t,
+                      x_t.reshape(bsz, g, hg, p))
+    new = sg * da.reshape(bsz, g, hg)[..., None, None] + b_in
+    y = jnp.einsum("bgn,bghpn->bghp", c_t, new).reshape(bsz, h, p)
+    y = y + x_t * d_skip[None, :, None]
+    return y, new.reshape(bsz, h, p, -1)
+
+
+def mamba_forward(params, x, cfg, init_state=None, conv_state=None):
+    """Full block forward: x (B, L, d_model) -> (B, L, d_model).
+
+    Returns (y, (ssm_state, conv_tail)) for prefill cache handoff."""
+    d_inner = cfg.d_inner
+    n_heads = cfg.ssm_heads
+    n_groups = 1
+    state = cfg.ssm_state
+    proj = x @ params["in_proj"]
+    z, xbc, dt = _split_proj(proj, d_inner, n_groups, state, n_heads)
+    if conv_state is not None:
+        xbc_ext = jnp.concatenate([conv_state, xbc], axis=1)
+        conv = _causal_conv(xbc_ext, params["conv_w"])[:, conv_state.shape[1]:]
+    else:
+        conv = _causal_conv(xbc, params["conv_w"])
+    conv_tail = jnp.concatenate(
+        [jnp.zeros_like(xbc[:, :max(0, cfg.ssm_conv - 1 - xbc.shape[1])]),
+         xbc[:, -(cfg.ssm_conv - 1):]], axis=1)
+    xin, bmat, cmat = jnp.split(conv, [d_inner, d_inner + n_groups * state],
+                                axis=-1)
+    bsz, length = x.shape[0], x.shape[1]
+    xh = xin.reshape(bsz, length, n_heads, cfg.ssm_head_dim)
+    xh = constrain(xh, "batch", None, "heads", None)
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    y, final_state = ssd_chunked(
+        xh.astype(jnp.float32), dt_act, params["A_log"],
+        bmat.reshape(bsz, length, n_groups, state).astype(jnp.float32),
+        cmat.reshape(bsz, length, n_groups, state).astype(jnp.float32),
+        params["D"], chunk=min(256, length), init_state=init_state)
+    y = y.reshape(bsz, length, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm_w"])
+    return y @ params["out_proj"], (final_state, conv_tail)
+
+
+def mamba_decode(params, x, cfg, ssm_state, conv_state):
+    """x (B, 1, d_model); conv_state (B, k-1, conv_dim)."""
+    d_inner = cfg.d_inner
+    n_heads = cfg.ssm_heads
+    n_groups = 1
+    state = cfg.ssm_state
+    proj = x @ params["in_proj"]
+    z, xbc, dt = _split_proj(proj, d_inner, n_groups, state, n_heads)
+    window = jnp.concatenate([conv_state, xbc], axis=1)  # (B, k, conv)
+    conv = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, params["conv_w"]))[:, None]
+    new_conv_state = window[:, 1:]
+    xin, bmat, cmat = jnp.split(conv, [d_inner, d_inner + n_groups * state],
+                                axis=-1)
+    bsz = x.shape[0]
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32)
+                             + params["dt_bias"])[:, 0]
+    y, new_state = ssd_decode_step(
+        xin.reshape(bsz, n_heads, cfg.ssm_head_dim).astype(jnp.float32),
+        dt_act, params["A_log"],
+        bmat.reshape(bsz, n_groups, state).astype(jnp.float32),
+        cmat.reshape(bsz, n_groups, state).astype(jnp.float32),
+        params["D"], ssm_state)
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm_w"])
+    return y @ params["out_proj"], (new_state, new_conv_state)

@@ -1,0 +1,368 @@
+"""Decoder stack covering the dense / MoE / SSM / hybrid / VLM families.
+
+Layers are grouped into homogeneous *blocks* (dense: 1 sublayer,
+jamba: 8 sublayers with a 1:7 attn:mamba interleave and MoE every other
+FFN) and scanned with ``jax.lax.scan`` so the HLO stays one-block-sized
+regardless of depth.  Residual-stream activations at block boundaries
+are sequence-sharded over the model axis (Megatron-style SP), which is
+what keeps 4k-token x 256-batch training of 398B-parameter configs
+within per-chip HBM.
+
+Decode threads the per-block caches through the scan as xs/ys.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.embedding import embed_tokens, lm_logits, lm_loss
+from repro.models.layers import (cast_params_for_compute,
+                                 dense_init, rms_norm, split_keys)
+from repro.parallel.axes import constrain, current_mesh, spec_for
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+
+# --------------------------------------------------------------------------
+# block structure
+# --------------------------------------------------------------------------
+
+def block_spec(cfg: ModelConfig) -> list[tuple[str, str | None]]:
+    """Sublayers of one scanned block: (mixer, ffn) kinds."""
+    if cfg.family == "ssm":
+        return [("mamba", None)]
+    if cfg.family == "hybrid":
+        out = []
+        for i in range(cfg.attn_every):
+            mixer = "attn" if i == 0 else "mamba"
+            ffn = "moe" if (i % cfg.moe_every == 1) else "dense"
+            out.append((mixer, ffn))
+        return out
+    ffn = "moe" if cfg.family == "moe" else "dense"
+    return [("attn", ffn)]
+
+
+def n_blocks(cfg: ModelConfig) -> int:
+    return max(1, cfg.n_layers // len(block_spec(cfg)))
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_ffn(key, cfg, dtype):
+    ks = split_keys(key, 3)
+    return {
+        "wg": dense_init(ks[0], (cfg.d_model, cfg.d_ff), dtype),
+        "wi": dense_init(ks[1], (cfg.d_model, cfg.d_ff), dtype),
+        "wo": dense_init(ks[2], (cfg.d_ff, cfg.d_model), dtype,
+                         fan_in=cfg.d_ff),
+    }
+
+
+def _init_block(key, cfg: ModelConfig, tp: int):
+    nh, nkv = cfg.padded_heads(tp)
+    tpe = (cfg.moe_tpe or max(1, tp // cfg.n_experts)) \
+        if cfg.n_experts else 1
+    dtype = cfg.param_dtype
+    subs = {}
+    keys = split_keys(key, len(block_spec(cfg)))
+    for j, (mixer, ffn) in enumerate(block_spec(cfg)):
+        ks = split_keys(keys[j], 2)
+        sub: dict[str, Any] = {"ln1": jnp.ones((cfg.d_model,), jnp.float32)}
+        if mixer == "attn":
+            sub["attn"] = attn_mod.init_attention(
+                ks[0], cfg.d_model, nh, nkv, cfg.head_dim, dtype)
+        else:
+            sub["mamba"] = ssm_mod.init_mamba(
+                ks[0], cfg.d_model, cfg.ssm_state, cfg.ssm_head_dim,
+                cfg.ssm_expand, cfg.ssm_conv, dtype)
+        if ffn is not None:
+            sub["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+            if ffn == "moe":
+                sub["moe"] = moe_mod.init_moe(
+                    ks[1], cfg.d_model, cfg.d_ff, cfg.n_experts, dtype,
+                    tpe=tpe)
+            else:
+                sub["ffn"] = _init_ffn(ks[1], cfg, dtype)
+        subs[f"sub{j}"] = sub
+    return subs
+
+
+def init_params(cfg: ModelConfig, key, tp: int = 1):
+    kb, ke, kh = split_keys(key, 3)
+    nb = n_blocks(cfg)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg, tp))(
+        jax.random.split(kb, nb))
+    params = {
+        "embed": dense_init(ke, (cfg.padded_vocab(tp), cfg.d_model),
+                            cfg.param_dtype),
+        "blocks": blocks,
+        "final_ln": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            kh, (cfg.padded_vocab(tp), cfg.d_model), cfg.param_dtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# FFN dispatch
+# --------------------------------------------------------------------------
+
+def _apply_dense_ffn(p, h):
+    from repro.models.layers import swiglu
+    return swiglu(h, p["wg"], p["wi"], p["wo"])
+
+
+def _apply_moe(p, h, cfg, moe_mode: str):
+    b, s, d = h.shape
+    mesh = current_mesh()
+    if moe_mode == "dense" or mesh is None \
+            or mesh.shape.get("model", 1) == 1:
+        out = moe_mod.moe_ffn_dense(h.reshape(b * s, d), p, cfg.top_k,
+                                    cfg.capacity_factor)
+        return out.reshape(b, s, d)
+    from repro.parallel.axes import current_fsdp
+    batch = spec_for("batch")[0]
+    data_axis = "data" if ("data" in mesh.shape
+                           and mesh.shape["data"] > 1
+                           and current_fsdp()) else None
+    if cfg.moe_ep_data and "data" in mesh.shape:
+        # serving layout: experts sharded over (model x data) jointly;
+        # always the dense-psum path (prefill at this layout is served
+        # by the same kernel — a2a is a training-layout optimization)
+        moe_mode = "ep2"
+    wspecs = {"router": P(None, None),
+              "wg": P("model", None, data_axis),
+              "wi": P("model", None, data_axis),
+              "wo": P("model", data_axis, None)}
+    if moe_mode == "a2a":
+        def body(x, pp):
+            bl, sl, dl = x.shape
+            out = moe_mod.moe_ffn_a2a(x.reshape(bl * sl, dl), pp,
+                                      cfg.top_k, cfg.capacity_factor,
+                                      "model", data_axis)
+            return out.reshape(bl, sl, dl)
+        return shard_map(body, mesh=mesh,
+                         in_specs=(P(batch, "model", None), wspecs),
+                         out_specs=P(batch, "model", None),
+                         check_vma=False)(h, p)
+    # decode: tokens replicated over model, psum combine
+    if moe_mode == "ep2":
+        wspecs2 = {"router": P(None, None),
+                   "wg": P(("model", "data"), None, None),
+                   "wi": P(("model", "data"), None, None),
+                   "wo": P(("model", "data"), None, None)}
+
+        def body_e(x, pp):
+            bl, sl, dl = x.shape
+            out = moe_mod.moe_ffn_psum_ep2(
+                x.reshape(bl * sl, dl), pp, cfg.top_k,
+                ("model", "data"), batch_axis="data"
+                if batch is not None else None)
+            return out.reshape(bl, sl, dl)
+        return shard_map(body_e, mesh=mesh,
+                         in_specs=(P(batch, None, None), wspecs2),
+                         out_specs=P(batch, None, None),
+                         check_vma=False)(h, p)
+
+    def body_d(x, pp):
+        bl, sl, dl = x.shape
+        out = moe_mod.moe_ffn_psum(x.reshape(bl * sl, dl), pp,
+                                   cfg.top_k, "model", data_axis)
+        return out.reshape(bl, sl, dl)
+    return shard_map(body_d, mesh=mesh,
+                     in_specs=(P(batch, None, None), wspecs),
+                     out_specs=P(batch, None, None),
+                     check_vma=False)(h, p)
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _sublayer_forward(sub, j, kind, h, pos, cfg, nh, nkv, moe_mode,
+                      want_cache, max_seq):
+    mixer, ffn = kind
+    cache_out = {}
+    hn = constrain(rms_norm(h, sub["ln1"], cfg.norm_eps),
+                   "batch", "seq", None)
+    if mixer == "attn":
+        out, (k, v) = attn_mod.attention_block(
+            sub["attn"], hn, pos, cfg, nh, nkv)
+        if want_cache:
+            cache_out = attn_mod.cache_from_prefill(
+                k, v, pos, max_seq, cfg.window)
+    else:
+        out, (st, conv) = ssm_mod.mamba_forward(sub["mamba"], hn, cfg)
+        if want_cache:
+            cache_out = {"ssm": st, "conv": conv}
+    h = h + out
+    h = constrain(h, "batch", "seq", None)
+    if ffn is not None:
+        hn = constrain(rms_norm(h, sub["ln2"], cfg.norm_eps),
+                       "batch", "seq", None)
+        if ffn == "moe":
+            out = _apply_moe(sub["moe"], hn, cfg, moe_mode)
+        else:
+            out = _apply_dense_ffn(sub["ffn"], hn)
+        h = h + out
+        h = constrain(h, "batch", "seq", None)
+    return h, cache_out
+
+
+def forward(params, tokens, cfg: ModelConfig, tp: int = 1, *,
+            prefix_embeds=None, want_cache: bool = False,
+            moe_mode: str = "dense", max_seq: int | None = None):
+    """Full-sequence forward.  Returns (h_final, caches_or_None)."""
+    nh, nkv = cfg.padded_heads(tp)
+    spec = block_spec(cfg)
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    h = embed_tokens(params["embed"], tokens).astype(cfg.compute_dtype)
+    if prefix_embeds is not None:
+        pl = prefix_embeds.shape[1]
+        h = jax.lax.dynamic_update_slice(
+            h, prefix_embeds.astype(cfg.compute_dtype), (0, 0, 0))
+    h = constrain(h, "batch", "seq", None)
+    pos = jnp.arange(s, dtype=jnp.int32)
+
+    def body(carry, block_params):
+        hh = carry
+        block_params = cast_params_for_compute(block_params,
+                                               cfg.compute_dtype)
+        caches = {}
+        for j, kind in enumerate(spec):
+            hh, c = _sublayer_forward(block_params[f"sub{j}"], j, kind, hh,
+                                      pos, cfg, nh, nkv, moe_mode,
+                                      want_cache, max_seq)
+            caches[f"sub{j}"] = c
+        return hh, caches if want_cache else None
+
+    if cfg.remat and not want_cache:   # remat only matters for training
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy)
+    h, caches = jax.lax.scan(body, h, params["blocks"])
+    h = rms_norm(h, params["final_ln"], cfg.norm_eps)
+    return h, caches
+
+
+def train_loss(params, batch, cfg: ModelConfig, tp: int = 1,
+               moe_mode: str = "dense"):
+    """batch: {tokens (B,S), labels (B,S), [prefix_embeds]} -> scalar."""
+    h, _ = forward(params, batch["tokens"], cfg, tp,
+                   prefix_embeds=batch.get("prefix_embeds"),
+                   moe_mode=moe_mode)
+    table = params.get("lm_head", params["embed"])
+    return lm_loss(h, table, batch["labels"], cfg.vocab)
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def init_cache_tree(cfg: ModelConfig, batch: int, max_seq: int,
+                    tp: int = 1):
+    """Stacked (n_blocks leading dim) cache pytree for decode."""
+    nh, nkv = cfg.padded_heads(tp)
+    nb = n_blocks(cfg)
+    kv_dtype = cfg.kv_cache_dtype or cfg.compute_dtype
+    spec = block_spec(cfg)
+    out = {}
+    for j, (mixer, _) in enumerate(spec):
+        if mixer == "attn":
+            slots = min(max_seq, cfg.window) if cfg.window else max_seq
+            out[f"sub{j}"] = {
+                "k": jnp.zeros((nb, batch, slots, nkv, cfg.head_dim),
+                               kv_dtype),
+                "v": jnp.zeros((nb, batch, slots, nkv, cfg.head_dim),
+                               kv_dtype),
+                "pos": jnp.full((nb, slots), -1, jnp.int32),
+            }
+        else:
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+            # SSM state/conv caches stay at compute precision (they are
+            # recurrent accumulators, unlike the read-only KV history)
+            out[f"sub{j}"] = {
+                "ssm": jnp.zeros((nb, batch, cfg.ssm_heads,
+                                  cfg.ssm_head_dim, cfg.ssm_state),
+                                 jnp.float32),
+                "conv": jnp.zeros((nb, batch, cfg.ssm_conv - 1, conv_dim),
+                                  cfg.compute_dtype),
+            }
+    return out
+
+
+def decode_step(params, caches, token, cur_pos, cfg: ModelConfig,
+                tp: int = 1, *, moe_mode: str = "dense"):
+    """One serve step: token (B, 1) int32, cur_pos scalar int32.
+
+    Returns (logits (B, V), new caches)."""
+    nh, nkv = cfg.padded_heads(tp)
+    spec = block_spec(cfg)
+    h = embed_tokens(params["embed"], token).astype(cfg.compute_dtype)
+    h = constrain(h, "batch", None, None)
+
+    def body(carry, xs):
+        hh = carry
+        block_params, block_caches = xs
+        block_params = cast_params_for_compute(block_params,
+                                               cfg.compute_dtype)
+        new_caches = {}
+        for j, (mixer, ffn) in enumerate(spec):
+            sub = block_params[f"sub{j}"]
+            c = block_caches[f"sub{j}"]
+            if mixer == "attn":
+                out, nc = attn_mod.decode_block(
+                    sub["attn"], rms_norm(hh, sub["ln1"], cfg.norm_eps),
+                    c, cur_pos, cfg, nh, nkv)
+            else:
+                out, (st, conv) = ssm_mod.mamba_decode(
+                    sub["mamba"], rms_norm(hh, sub["ln1"], cfg.norm_eps),
+                    cfg, c["ssm"], c["conv"])
+                nc = {"ssm": st, "conv": conv}
+            hh = hh + out
+            if ffn is not None:
+                hn = rms_norm(hh, sub["ln2"], cfg.norm_eps)
+                if ffn == "moe":
+                    mode = moe_mode if moe_mode != "a2a" else "psum"
+                    out = _apply_moe(sub["moe"], hn, cfg, mode)
+                else:
+                    out = _apply_dense_ffn(sub["ffn"], hn)
+                hh = hh + out
+            hh = constrain(hh, "batch", None, None)
+            new_caches[f"sub{j}"] = nc
+        return hh, new_caches
+
+    h, new_caches = jax.lax.scan(body, h, (params["blocks"], caches))
+    h = rms_norm(h, params["final_ln"], cfg.norm_eps)
+    table = params.get("lm_head", params["embed"])
+    return lm_logits(h, table, cfg.vocab), new_caches
+
+
+def prefill(params, tokens, cfg: ModelConfig, tp: int = 1, *,
+            prefix_embeds=None, moe_mode: str = "dense",
+            max_seq: int | None = None):
+    """Run the full prompt, return (last-token logits, caches)."""
+    h, caches = forward(params, tokens, cfg, tp,
+                        prefix_embeds=prefix_embeds, want_cache=True,
+                        moe_mode=moe_mode, max_seq=max_seq)
+    table = params.get("lm_head", params["embed"])
+    return lm_logits(h[:, -1:], table, cfg.vocab), caches

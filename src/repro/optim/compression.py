@@ -1,0 +1,65 @@
+"""Error-feedback int8 gradient compression (1-bit-Adam-family trick).
+
+For cross-pod gradient all-reduce the wire format is int8 with a per-
+tensor scale; the quantization residual is fed back into the next
+step's gradient (error feedback keeps SGD/Adam convergence).  On the
+dry-run mesh this shrinks the pod-axis all-reduce bytes 4x (f32) / 2x
+(bf16); the collective-term effect is reported in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """g -> (int8 payload, f32 scale)."""
+    amax = jnp.max(jnp.abs(g.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_error(params) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def compress_grads(grads, error):
+    """Returns (payload pytree of (int8, scale), new error feedback)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize(corrected)
+        deq = dequantize(q, s, jnp.float32)
+        return (q, s), corrected - deq
+
+    flat = jax.tree_util.tree_map(one, grads, error,
+                                  is_leaf=lambda x: isinstance(x, jax.Array))
+    payload = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                     is_leaf=lambda x: isinstance(x, tuple)
+                                     and len(x) == 2)
+    new_err = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                     is_leaf=lambda x: isinstance(x, tuple)
+                                     and len(x) == 2)
+    return payload, new_err
+
+
+def decompress_grads(payload, dtype_tree):
+    return jax.tree_util.tree_map(
+        lambda qs, ref: dequantize(qs[0], qs[1], ref.dtype),
+        payload, dtype_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+
+
+def roundtrip(grads, error):
+    """Compress + decompress (what each pod applies before the cross-pod
+    reduce); used by tests and the perf analysis."""
+    payload, new_err = compress_grads(grads, error)
+    return decompress_grads(payload, grads), new_err

@@ -1,0 +1,70 @@
+"""Logical-axis sharding hook.
+
+Models annotate activations with *logical* axis names; the launcher
+installs a rule set mapping logical names to mesh axes before tracing.
+With no rules installed (unit tests, single device) ``constrain`` is a
+no-op, so model code never depends on a mesh being present.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_rules() -> Mapping[str, tuple] | None:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+def current_fsdp() -> bool:
+    rules = getattr(_state, "rules", None)
+    return bool(rules.get("_fsdp", True)) if rules else True
+
+
+def current_flag(name: str, default: bool = False) -> bool:
+    rules = getattr(_state, "rules", None)
+    return bool(rules.get("_" + name, default)) if rules else default
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Mapping[str, tuple], mesh: Mesh):
+    """Install logical->mesh axis rules for the duration of a trace."""
+    prev_r = getattr(_state, "rules", None)
+    prev_m = getattr(_state, "mesh", None)
+    _state.rules, _state.mesh = dict(rules), mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev_r, prev_m
+
+
+def spec_for(*logical: str | None) -> P:
+    """PartitionSpec for a tuple of logical axis names (None = replicated)."""
+    rules = current_rules() or {}
+    return P(*[rules.get(a) if a is not None else None for a in logical])
+
+
+def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
+    """with_sharding_constraint under the installed rules (no-op without)."""
+    mesh = current_mesh()
+    if mesh is None or current_rules() is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(*logical)))
+
+
+def sharding_for(*logical: str | None) -> NamedSharding | None:
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(*logical))

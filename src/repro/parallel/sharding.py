@@ -1,0 +1,192 @@
+"""Parameter / activation / cache sharding rules (DP x FSDP x TP(+EP)).
+
+The mesh axes are ("pod"?, "data", "model"):
+  * pod    — pure data parallel across pods (gradient all-reduce crosses
+             the pod boundary once per step);
+  * data   — batch DP + ZeRO-3 parameter sharding (params/opt-state are
+             sharded over "data" and all-gathered at use, gradients
+             reduce-scattered by the same collectives' transposes);
+  * model  — tensor parallel (Megatron column/row splits), expert
+             parallel for MoE (experts live on model shards), sequence
+             parallel for residual-stream activations, vocab parallel
+             for the embedding/LM head, and KV-sequence parallel for
+             decode caches.
+
+Per-chip matmul tiles follow the paper's balance condition at the mesh
+level (DESIGN.md §5): the output tile of each sharded contraction is
+kept square-ish (u ~= R*z with R=1), which balances the two operand
+panel all-gathers exactly as Eq. (14) balances input/weight reads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_axes_for(mesh: Mesh, global_batch: int) -> tuple[str, ...] | None:
+    """Largest prefix of (pod, data) whose product divides the batch."""
+    axes: list[str] = []
+    prod = 1
+    for a in data_axes(mesh):
+        if global_batch % (prod * mesh.shape[a]) == 0:
+            axes.append(a)
+            prod *= mesh.shape[a]
+    return tuple(axes) if axes else None
+
+
+def axis_rules(mesh: Mesh, global_batch: int, seq_len: int,
+               tp_ok: bool = True, *, fsdp: bool = True,
+               sp_rs: bool = False) -> dict[str, Any]:
+    """Logical-name -> mesh-axis rules installed while tracing.
+
+    fsdp:  ZeRO-3 parameter sharding over "data" (see param_shardings).
+    sp_rs: realize sequence-parallel boundaries as explicit shard_map
+           reduce-scatters instead of trusting the SPMD partitioner
+           (§Perf lever — GSPMD emits allreduce+slice for them)."""
+    mp = mesh.shape.get("model", 1)
+    batch = batch_axes_for(mesh, global_batch)
+    seq = "model" if (tp_ok and seq_len % mp == 0 and seq_len >= mp) \
+        else None
+    return {
+        "batch": batch,
+        "seq": seq,
+        "heads": "model",
+        "kv_heads": "model",
+        "ffn": "model",
+        "vocab": "model",
+        "experts": "model",
+        "kv_seq": "model",
+        "_fsdp": fsdp,
+        "_sp_rs": sp_rs,
+    }
+
+
+# --------------------------------------------------------------------------
+# parameter shardings
+# --------------------------------------------------------------------------
+
+_REPLICATED_KEYS = {"ln1", "ln2", "lnx", "final_ln", "enc_ln", "norm_w",
+                    "A_log", "D", "dt_bias", "router", "b"}
+_COLUMN_KEYS = {"wq", "wk", "wv", "wg", "wi", "in_proj"}   # (d_in, d_out@tp)
+_ROW_KEYS = {"wo", "out_proj"}                             # (d_in@tp, d_out)
+
+
+def _param_spec(path: tuple, leaf: jax.Array, fsdp: bool = True,
+                moe_ep_data: bool = False) -> P:
+    keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+    stacked = 1 if "blocks" in keys or "enc_blocks" in keys \
+        or "dec_blocks" in keys else 0
+    name = keys[-1]
+    parent = keys[-2] if len(keys) >= 2 else None
+    lead = (None,) * stacked
+
+    if name in ("embed", "lm_head"):
+        return P("model", None)
+    if name == "head":                                   # cnn head
+        return P(None, None)
+    if parent == "moe" or (len(keys) >= 3 and keys[-2] == "moe"):
+        if name == "router":
+            return P(*lead, None, None)
+        if moe_ep_data:
+            return P(*lead, ("model", "data"),
+                     *([None] * (leaf.ndim - stacked - 1)))
+        moe_data = "data" if fsdp else None
+        if name in ("wg", "wi"):
+            return P(*lead, "model", None, moe_data)
+        if name == "wo":
+            return P(*lead, "model", moe_data, None)
+    if name in _REPLICATED_KEYS or leaf.ndim - stacked <= 1:
+        return P(*lead, *([None] * (leaf.ndim - stacked)))
+    if name == "conv_w":
+        return P(*lead, None, "model")
+    data = "data" if fsdp else None
+    if name in _COLUMN_KEYS:
+        return P(*lead, data, "model")
+    if name in _ROW_KEYS:
+        return P(*lead, "model", data)
+    if name == "w" and leaf.ndim - stacked == 4:          # cnn conv
+        return P(*lead, None, None, None, None)
+    return P(*lead, *([None] * (leaf.ndim - stacked)))
+
+
+def param_shardings(params_shape: Any, mesh: Mesh,
+                    fsdp: bool = True, moe_ep_data: bool = False) -> Any:
+    """NamedSharding pytree matching the param pytree (works on either
+    concrete params or eval_shape output).
+
+    fsdp=False switches ZeRO-3 off: params shard over "model" only
+    (replicated over "data"), trading HBM for zero parameter
+    all-gathers — a §Perf hillclimb lever for collective-bound cells."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, _param_spec(path, leaf, fsdp, moe_ep_data)),
+        params_shape)
+
+
+# --------------------------------------------------------------------------
+# batch / cache shardings
+# --------------------------------------------------------------------------
+
+def batch_shardings(specs: Any, mesh: Mesh, rules: dict) -> Any:
+    """Shardings for the input_specs pytree of any shape cell."""
+    batch = rules["batch"]
+    seq = rules["seq"]
+
+    def spec_for_leaf(path, leaf) -> NamedSharding:
+        keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        name = next((k for k in reversed(keys) if isinstance(k, str)), "")
+        if "caches" in keys:
+            return NamedSharding(mesh, _cache_spec(name, leaf, batch))
+        if name in ("tokens", "labels"):
+            sq = seq if leaf.shape[-1] % mesh.shape.get("model", 1) == 0 \
+                and seq else None
+            return NamedSharding(mesh, P(batch, sq))
+        if name in ("frames", "prefix_embeds"):
+            return NamedSharding(mesh, P(batch, None, None))
+        if name == "token":
+            return NamedSharding(mesh, P(batch, None))
+        if name == "cur_pos" or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(*([batch] + [None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map_with_path(spec_for_leaf, specs)
+
+
+def _cache_spec(name: str, leaf, batch) -> P:
+    # leaves carry a leading stacked-blocks dim
+    if name in ("k", "v", "cross_k", "cross_v"):
+        # (nb, B, slots, KV, hd): shard slots over model
+        axis = "model" if name in ("k", "v") else None
+        return P(None, batch, axis, None, None)
+    if name == "pos":
+        return P(None, "model")
+    if name == "ssm":
+        return P(None, batch, "model", None, None)
+    if name == "conv":
+        return P(None, batch, None, "model")
+    return P(*([None] * leaf.ndim))
+
+
+def output_shardings_for_decode(mesh: Mesh, rules: dict, cache_specs):
+    """(logits, new_caches) shardings."""
+    batch = rules["batch"]
+    logits = NamedSharding(mesh, P(batch, "model"))
+    caches = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, _cache_spec(
+                next((getattr(k, "key", None) for k in reversed(path)
+                      if isinstance(getattr(k, "key", None), str)), ""),
+                leaf, batch)),
+        cache_specs)
+    return logits, caches

@@ -1,0 +1,94 @@
+"""Dataflow zoo tests: traffic models, search, paper's headline claims."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dataflow import (OursDataflow, Tiling, dataflow_zoo,
+                                 found_minimum, network_traffic)
+from repro.core.layer import ConvLayer
+from repro.core.lower_bound import q_dram_ideal, q_dram_practical
+from repro.core.vgg import vgg16_conv_layers
+
+S_66 = int(66.5 * 1024 // 2)
+S_173 = int(173.5 * 1024 // 2)
+
+
+@pytest.fixture(scope="module")
+def vgg():
+    return vgg16_conv_layers(3)
+
+
+def test_ours_within_12pct_of_bound(vgg):
+    """Paper Fig. 13: our dataflow ~10% above the analytic bound."""
+    lb = sum(q_dram_practical(l, S_173) for l in vgg)
+    ours = network_traffic(vgg, S_173, OursDataflow()).total
+    assert ours / lb < 1.12
+
+
+def test_ours_beats_every_other_dataflow(vgg):
+    """Paper Fig. 13: ours is the best dataflow at every memory size."""
+    for s in (S_66, S_173):
+        results = {df.name: network_traffic(vgg, s, df).total
+                   for df in dataflow_zoo()}
+        best = min(results, key=results.get)
+        assert best == "ours", results
+
+
+def test_found_minimum_close_to_ours(vgg):
+    """Paper: expected improvement of best-of-zoo over ours < 5%."""
+    ours = network_traffic(vgg, S_66, OursDataflow()).total
+    fm = sum(found_minimum(l, S_66)[2].total for l in vgg)
+    assert fm <= ours
+    assert (ours - fm) / fm < 0.05
+
+
+def test_outputs_written_once(vgg):
+    """OutR property: our dataflow writes every output exactly once."""
+    df = OursDataflow()
+    for layer in vgg[:4]:
+        _, q = df.search(layer, S_66)
+        assert q.writes_out == layer.n_outputs
+        assert q.reads_out == 0
+
+
+def test_balanced_input_weight_traffic(vgg):
+    """Paper Sec. IV-A: InR and WtR combined in a balanced way."""
+    q = network_traffic(vgg, S_66, OursDataflow())
+    ratio = q.reads_in / q.reads_w
+    assert 0.4 < ratio < 2.5
+
+
+layer_strategy = st.builds(
+    ConvLayer, name=st.just("l"), batch=st.integers(1, 4),
+    ci=st.integers(4, 128), co=st.integers(4, 128),
+    hi=st.integers(8, 56), wi=st.integers(8, 56),
+    hk=st.sampled_from([1, 3]), wk=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]), pad=st.sampled_from([0, 1]))
+
+
+@given(layer_strategy, st.integers(1024, 1 << 16))
+@settings(max_examples=30, deadline=None)
+def test_search_respects_budget_and_bound(layer, s):
+    """Any searched tiling fits S and its traffic >= the ideal volume."""
+    df = OursDataflow()
+    t, q = df.search(layer, s)
+    assert df.footprint(layer, t) <= s or t == Tiling().clamp(layer)
+    assert q.total >= q_dram_ideal(layer) * 0.999
+
+
+@given(layer_strategy)
+@settings(max_examples=30, deadline=None)
+def test_more_memory_never_hurts(layer):
+    df = OursDataflow()
+    _, q1 = df.search(layer, 2048)
+    _, q2 = df.search(layer, 1 << 16)
+    assert q2.total <= q1.total * 1.001
+
+
+def test_fetched_area_exact():
+    """Clipped halo accounting: full-plane tile touches each input once."""
+    l = ConvLayer("x", 1, 1, 1, 8, 8, 3, 3, stride=1, pad=1)
+    assert l.fetched_area(l.wo, l.ho) == l.hi * l.wi
+    # two x-tiles: one 2-column halo overlap, minus clipped padding
+    area = l.fetched_area(4, 8)
+    assert area == (8 + 2) * 8

@@ -1,0 +1,177 @@
+"""Distributed-path correctness on a forced multi-device host mesh.
+
+Uses XLA_FLAGS host-platform device count (set in conftest for this
+module via a subprocess-free trick: these tests run in their own
+pytest process when the env var is set; otherwise they reconfigure
+jax at import, which is why this file must not import jax at top level
+before setting the flag).
+"""
+
+import os
+
+# must happen before jax import — 8 host devices for a 2x4 mesh
+os.environ.setdefault("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" not in os.environ["XLA_FLAGS"]:
+    os.environ["XLA_FLAGS"] += " --xla_force_host_platform_device_count=8"
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.launch import steps as steps_mod
+from repro.models.api import build
+from repro.models.moe import init_moe, moe_ffn_dense
+from repro.parallel import axes as axes_mod
+from repro.parallel import sharding as sh
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8, reason="needs 8 host devices")
+
+
+def _mesh():
+    return jax.make_mesh((2, 4), ("data", "model"))
+
+
+def test_moe_a2a_matches_dense():
+    """EP all-to-all dispatch == single-device dense reference."""
+    from jax.sharding import PartitionSpec as P
+    try:
+        shard_map = jax.shard_map
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map
+    from repro.models.moe import moe_ffn_a2a
+
+    mesh = _mesh()
+    d, f, e, k = 16, 32, 4, 2
+    params = init_moe(jax.random.PRNGKey(0), d, f, e, jnp.float32, tpe=1)
+    t = 64
+    x = jax.random.normal(jax.random.PRNGKey(1), (t, d))
+    ref = moe_ffn_dense(x, params, k, capacity_factor=float(e))
+
+    wspecs = {"router": P(None, None), "wg": P("model", None, "data"),
+              "wi": P("model", None, "data"), "wo": P("model", "data",
+                                                      None)}
+
+    def body(xl, pp):
+        return moe_ffn_a2a(xl, pp, k, float(e), "model", "data")
+
+    out = shard_map(body, mesh=mesh,
+                    in_specs=(P(("data", "model")), wspecs),
+                    out_specs=P(("data", "model")),
+                    check_vma=False)(x, params)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_moe_psum_matches_dense():
+    from jax.sharding import PartitionSpec as P
+    try:
+        shard_map = jax.shard_map
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map
+    from repro.models.moe import moe_ffn_psum
+
+    mesh = _mesh()
+    d, f, e, k = 16, 32, 4, 2
+    params = init_moe(jax.random.PRNGKey(0), d, f, e, jnp.float32, tpe=1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, d))
+    ref = moe_ffn_dense(x, params, k, capacity_factor=float(e))
+    wspecs = {"router": P(None, None), "wg": P("model", None, "data"),
+              "wi": P("model", None, "data"), "wo": P("model", "data",
+                                                      None)}
+
+    def body(xl, pp):
+        return moe_ffn_psum(xl, pp, k, "model", "data")
+
+    out = shard_map(body, mesh=mesh,
+                    in_specs=(P("data"), wspecs),
+                    out_specs=P("data"),
+                    check_vma=False)(x, params)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("arch", ["phi3-medium-14b", "mixtral-8x7b",
+                                  "jamba-1.5-large-398b"])
+def test_sharded_train_step_matches_single_device(arch):
+    """One jitted train step on the 2x4 mesh == unsharded reference."""
+    cfg = reduced(get_config(arch), d_model=64, vocab=512, attn_chunk=32)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg,
+                                  capacity_factor=float(cfg.n_experts))
+    mesh = _mesh()
+    b, s = 8, 32
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                     cfg.vocab),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (b, s), 0,
+                                     cfg.vocab),
+    }
+    # single-device reference (tp=1 padding differs, so use tp=4 both)
+    tp = mesh.shape["model"]
+    api = build(cfg, tp=tp)
+    rules = sh.axis_rules(mesh, b, s)
+
+    with axes_mod.axis_rules(rules, mesh):
+        state = steps_mod.init_train_state(api, jax.random.PRNGKey(0))
+        p_shard = sh.param_shardings(state.params, mesh)
+        state_sharded = steps_mod.TrainState(
+            params=jax.device_put(state.params, p_shard),
+            opt=type(state.opt)(
+                m=jax.device_put(state.opt.m,
+                                 sh.param_shardings(state.opt.m, mesh)),
+                v=jax.device_put(state.opt.v,
+                                 sh.param_shardings(state.opt.v, mesh)),
+                step=state.opt.step),
+            step=state.step)
+        step_fn = steps_mod.make_train_step(api)
+        new_state, metrics = jax.jit(step_fn)(state_sharded, batch)
+        loss_sharded = float(metrics["loss"])
+
+    # reference: same model math without mesh (dense MoE path)
+    api_ref = build(cfg, tp=tp)
+    loss_ref = float(api_ref.train_loss(state.params, batch))
+    assert abs(loss_sharded - loss_ref) < 5e-3, (loss_sharded, loss_ref)
+    # optimizer state actually moved (lr is 0 at warmup step 0, so the
+    # params themselves are expected to be unchanged on the first step)
+    delta = jax.tree_util.tree_map(
+        lambda a, b_: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                            - b_.astype(jnp.float32)))),
+        new_state.opt.m, state.opt.m)
+    assert max(jax.tree_util.tree_leaves(delta)) > 0
+    assert int(new_state.step) == 1
+
+
+def test_sharded_decode_matches_local():
+    """Sequence-sharded flash-decoding == unsharded decode."""
+    cfg = reduced(get_config("phi3-medium-14b"), d_model=64, vocab=512,
+                  attn_chunk=32)
+    mesh = _mesh()
+    tp = mesh.shape["model"]
+    api = build(cfg, tp=tp)
+    b, s = 8, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s + 1), 0,
+                              cfg.vocab)
+    # local reference
+    params = api.init(jax.random.PRNGKey(0))
+    _, caches = api.prefill(params, {"tokens": toks[:, :s]},
+                            max_seq=s + 4)
+    ref, _ = api.decode_step(params, caches, toks[:, s:s + 1],
+                             jnp.asarray(s, jnp.int32))
+    # sharded
+    rules = sh.axis_rules(mesh, b, s)
+    with axes_mod.axis_rules(rules, mesh):
+        p_shard = sh.param_shardings(params, mesh)
+        params_s = jax.device_put(params, p_shard)
+        _, caches_s = jax.jit(lambda p, bb: api.prefill(p, bb,
+                                                        max_seq=s + 4))(
+            params_s, {"tokens": toks[:, :s]})
+        out, _ = jax.jit(api.decode_step)(params_s, caches_s,
+                                          toks[:, s:s + 1],
+                                          jnp.asarray(s, jnp.int32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,126 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tpu_adapter import BlockShape, lb_block_shape
+from repro.kernels.attention_block.ops import flash_attention
+from repro.kernels.attention_block.ref import attention_ref
+from repro.kernels.conv_lb.ops import conv2d_lb
+from repro.kernels.conv_lb.ref import conv2d_ref
+from repro.kernels.matmul_lb.ops import matmul_lb
+from repro.kernels.matmul_lb.ref import matmul_ref
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 8e-2}
+
+
+def _allclose(out, ref, dtype):
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=TOL[dtype], atol=TOL[dtype] * 10)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n", [
+    (64, 64, 64), (128, 256, 128), (300, 200, 150), (1000, 333, 77),
+    (8, 8, 8), (257, 129, 511),
+])
+def test_matmul_lb_sweep(m, k, n, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k),
+                          jnp.float32).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n),
+                          jnp.float32).astype(dtype)
+    _allclose(matmul_lb(x, w), matmul_ref(x, w), dtype)
+
+
+def test_matmul_lb_block_shape_invariance():
+    """The lower-bound tiling must not change results (psum exactness)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 192))
+    w = jax.random.normal(jax.random.PRNGKey(1), (192, 160))
+    ref = matmul_ref(x, w)
+    for blk in [BlockShape(64, 64, 64), BlockShape(128, 128, 64),
+                BlockShape(256, 160, 192), BlockShape(64, 32, 32)]:
+        _allclose(matmul_lb(x, w, blk=blk), ref, jnp.float32)
+
+
+def test_lb_block_shape_conditions():
+    """Chooser: MXU-aligned, psum-dominant, square-ish (R=1)."""
+    blk = lb_block_shape(4096, 4096, 4096)
+    assert blk.bm % 128 == 0 and blk.bn % 128 == 0 and blk.bk % 128 == 0
+    assert blk.bm == blk.bn                     # u ~= z balance
+    assert blk.vmem_bytes(2) <= 64 * 1024 * 1024
+    assert blk.psum_bytes >= blk.operand_bytes(2)   # psums get most
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,w,ci,co,k,s,p", [
+    (2, 16, 16, 8, 16, 3, 1, 1),
+    (1, 14, 14, 24, 40, 3, 1, 1),
+    (2, 12, 12, 6, 10, 3, 2, 1),
+    (1, 9, 9, 5, 7, 1, 1, 0),
+    (1, 20, 20, 16, 32, 5, 1, 2),
+    (1, 8, 8, 3, 4, 3, 2, 0),
+])
+def test_conv_lb_sweep(b, h, w, ci, co, k, s, p, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, h, w, ci),
+                          jnp.float32).astype(dtype)
+    wt = (jax.random.normal(jax.random.PRNGKey(1), (k, k, ci, co),
+                            jnp.float32) * 0.2).astype(dtype)
+    out = conv2d_lb(x, wt, stride=s, padding=p)
+    ref = conv2d_ref(x, wt, stride=s, padding=p)
+    assert out.shape == ref.shape
+    _allclose(out, ref, dtype)
+
+
+def test_conv_lb_block_split_invariance():
+    """Ci/Co block sizes are a pure dataflow choice (no numerics)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 10, 10, 12))
+    wt = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 12, 20)) * 0.2
+    ref = conv2d_ref(x, wt, padding=1)
+    for cib, cob in [(4, 4), (12, 20), (6, 10), (12, 8)]:
+        out = conv2d_lb(x, wt, padding=1, ci_block=cib, co_block=cob)
+        _allclose(out, ref, jnp.float32)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,sq,skv,h,kv,hd,win,causal", [
+    (2, 64, 64, 4, 2, 16, 0, True),
+    (1, 100, 100, 8, 8, 32, 0, True),
+    (2, 128, 128, 4, 1, 16, 32, True),
+    (1, 48, 80, 4, 4, 16, 0, False),
+    (1, 33, 65, 2, 1, 8, 16, True),
+])
+def test_flash_attention_sweep(b, sq, skv, h, kv, hd, win, causal, dtype):
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, sq, h, hd),
+                          jnp.float32).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, skv, kv, hd),
+                          jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, skv, kv, hd),
+                          jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, window=win, causal=causal,
+                          bq=32, bk=32)
+    ref = attention_ref(q, k, v, window=win, causal=causal)
+    _allclose(out, ref, dtype)
+
+
+def test_flash_attention_block_size_invariance():
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 96, 4, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 96, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 96, 2, 16))
+    ref = attention_ref(q, k, v)
+    for bq, bk in [(16, 16), (32, 96), (96, 32), (48, 48)]:
+        _allclose(flash_attention(q, k, v, bq=bq, bk=bk), ref,
+                  jnp.float32)
+
+
+def test_hbm_traffic_model_matches_eq14():
+    """Kernel wrapper's traffic model == Eq. (14) with R=1."""
+    from repro.core.tpu_adapter import hbm_traffic_model
+    m = n = k = 1024
+    blk = BlockShape(256, 256, 256)
+    got = hbm_traffic_model(m, n, k, blk, dtype_bytes=2)
+    nm, nn = m // blk.bm, n // blk.bn
+    expected = (nn * m * k + nm * k * n + m * n) * 2
+    assert got == expected

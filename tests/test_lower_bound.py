@@ -1,0 +1,91 @@
+"""Unit + property tests for the paper's lower-bound math (Sec. III)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layer import ConvLayer, fc_layer, matmul_layer
+from repro.core.lower_bound import (
+    optimal_block, q_dram_ideal, q_dram_naive, q_dram_practical,
+    q_dram_theorem2, reg_lower_bound_writes, terms_upper_bound)
+
+layer_strategy = st.builds(
+    ConvLayer,
+    name=st.just("l"),
+    batch=st.integers(1, 8),
+    ci=st.integers(1, 256),
+    co=st.integers(1, 256),
+    hi=st.integers(7, 64),
+    wi=st.integers(7, 64),
+    hk=st.sampled_from([1, 3, 5]),
+    wk=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    pad=st.sampled_from([0, 1]),
+)
+
+
+def test_reuse_factor_eq2():
+    l = ConvLayer("x", 1, 3, 64, 32, 32, 3, 3, stride=1, pad=1)
+    assert l.reuse_r == 9.0
+    l2 = ConvLayer("x", 1, 3, 64, 32, 32, 3, 3, stride=2)
+    assert l2.reuse_r == 9.0 / 4
+
+
+def test_terms_upper_bound_constant():
+    # T(S) = S*sqrt(RS)/(3*sqrt(3)) exactly (Lemma 2)
+    assert terms_upper_bound(300, 1.0) == pytest.approx(
+        300 * math.sqrt(300) / (3 * math.sqrt(3)))
+
+
+def test_r1_matches_matmul_bound():
+    """With R=1 the reduction factor is sqrt(S) (classical Hong-Kung)."""
+    l = matmul_layer(512, 512, 512)
+    s = 4096
+    q = q_dram_practical(l, s)
+    expected = 2 * l.macs / math.sqrt(s) + l.n_outputs
+    assert q == pytest.approx(expected)
+
+
+@given(layer_strategy, st.integers(64, 1 << 18))
+@settings(max_examples=200, deadline=None)
+def test_bound_ordering(layer, s):
+    """ideal <= practical-LB <= naive for every layer and memory size."""
+    lb = q_dram_practical(layer, s)
+    assert q_dram_ideal(layer) <= lb * (1 + 1e-9)
+    assert lb <= q_dram_naive(layer) + layer.n_outputs
+
+
+@given(layer_strategy, st.integers(64, 1 << 16))
+@settings(max_examples=100, deadline=None)
+def test_bound_monotone_in_memory(layer, s):
+    """More on-chip memory can never raise the lower bound."""
+    assert q_dram_practical(layer, 2 * s) <= q_dram_practical(layer, s) \
+        + 1e-9
+
+
+@given(st.integers(64, 1 << 16), st.floats(1.0, 9.0))
+@settings(max_examples=100, deadline=None)
+def test_optimal_block_conditions(s, r):
+    """u ~= R*z and u*z <= S (Sec. IV-C key conditions)."""
+    blk = optimal_block(s, r)
+    assert blk.u * blk.z <= s
+    if blk.z >= 4:  # integer effects dominate tiny blocks
+        assert blk.u / blk.z == pytest.approx(r, rel=0.5)
+
+
+def test_theorem2_scaling():
+    """Doubling S shrinks the Omega-bound by ~sqrt(2)."""
+    l = ConvLayer("x", 4, 128, 128, 56, 56, 3, 3, pad=1)
+    q1 = q_dram_theorem2(l, 1 << 12)
+    q2 = q_dram_theorem2(l, 1 << 13)
+    assert q1 / q2 == pytest.approx(math.sqrt(2), rel=0.1)
+
+
+def test_reg_lower_bound_is_macs():
+    l = ConvLayer("x", 1, 16, 16, 8, 8, 3, 3)
+    assert reg_lower_bound_writes(l) == l.macs
+
+
+def test_fc_layer_is_r1():
+    assert fc_layer(3, 4096, 1000).reuse_r == 1.0
