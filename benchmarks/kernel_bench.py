@@ -43,6 +43,34 @@ def bench_matmul_traffic():
     return rows
 
 
+def bench_conv_traffic():
+    """Measured (per-BlockSpec) conv HBM traffic vs Eq. (15): the
+    spatially-tiled kernel's attainment of the paper's bound, per VGG
+    layer and on-chip budget — the headline quantity of the repro."""
+    from repro.core.lower_bound import q_dram_practical
+    from repro.core.vgg import vgg16_conv_layers
+    from repro.kernels.conv_lb.ops import conv_lb_traffic
+
+    rows = []
+    for budget_kib in (256, 1024):
+        total_meas = total_lb = 0.0
+        for layer in vgg16_conv_layers(batch=3):
+            t, plan = conv_lb_traffic(
+                layer.batch, layer.hi, layer.wi, layer.ci, layer.co,
+                layer.hk, layer.wk, stride=layer.stride,
+                padding=layer.pad, vmem_budget=budget_kib * 1024)
+            s = plan.blocks.footprint_elems(layer.hk, layer.wk)
+            total_meas += t.total
+            total_lb += q_dram_practical(layer, s)
+        rows.append((f"kernels/conv_vgg16_S{budget_kib}K/measured_Mwords",
+                     0.0, round(total_meas / 1e6, 1)))
+        rows.append((f"kernels/conv_vgg16_S{budget_kib}K/eq15_Mwords",
+                     0.0, round(total_lb / 1e6, 1)))
+        rows.append((f"kernels/conv_vgg16_S{budget_kib}K/vs_bound_x",
+                     0.0, round(total_meas / total_lb, 3)))
+    return rows
+
+
 def bench_kernel_walltime():
     """Interpret-mode sanity timings (not TPU performance)."""
     from repro.kernels.attention_block.ops import flash_attention
@@ -59,6 +87,12 @@ def bench_kernel_walltime():
     rows.append(("kernels/conv_lb_16_interp_us",
                  _time_call(lambda a, b: conv2d_lb(a, b, padding=1),
                             xi, wi), 0))
+    xt = jax.random.normal(jax.random.PRNGKey(0), (1, 48, 48, 8))
+    wt = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 8, 16))
+    rows.append(("kernels/conv_lb_48_tiled_interp_us",
+                 _time_call(lambda a, b: conv2d_lb(
+                     a, b, padding=1, y_block=12, x_block=12,
+                     ci_block=8, co_block=16), xt, wt), 0))
     q = jax.random.normal(jax.random.PRNGKey(0), (1, 128, 4, 16))
     kk = jax.random.normal(jax.random.PRNGKey(1), (1, 128, 2, 16))
     rows.append(("kernels/flash_attn_128_interp_us",
@@ -68,4 +102,5 @@ def bench_kernel_walltime():
     return rows
 
 
-ALL_KERNELS = [bench_matmul_traffic, bench_kernel_walltime]
+ALL_KERNELS = [bench_matmul_traffic, bench_conv_traffic,
+               bench_kernel_walltime]

@@ -63,34 +63,153 @@ def lb_block_shape(m: int, n: int, k: int, *,
                    r: float = 1.0,
                    dtype_bytes: int = 2,
                    vmem_budget: int = VMEM_BYTES // 2,
-                   bk: int | None = None) -> BlockShape:
+                   bk: int | None = None,
+                   align: int = MXU_DIM) -> BlockShape:
     """Choose {bm, bn, bk} from the paper's lower-bound conditions.
 
-    Solve  bm ~= r*bn,  psum+2*operand buffers <= vmem_budget, with all
-    dims multiples of the MXU/lane size.  With r==1 the block is square
-    (sqrt(S) x sqrt(S)) — the communication-optimal matmul of Sec. III.
+    The geometry is *seeded by the paper's closed form*
+    (:func:`repro.core.lower_bound.optimal_block`: u = R*z, u*z = S on
+    the f32 psum budget), then MXU/lane-aligned and shrunk until psums
+    plus double-buffered operand panels fit ``vmem_budget``.  With r==1
+    the block is square (sqrt(S) x sqrt(S)) — the communication-optimal
+    matmul of Sec. III.  This is the single block chooser: the conv
+    kernel's spatial tiling (:func:`conv_lb_block_shape`) routes
+    through it too.
     """
+    from repro.core.lower_bound import optimal_block
+
     if bk is None:
         # smallest aligned slice that keeps the MXU pipeline full; the
         # paper's k=1 principle (stream the reduction minimally) under
         # the 128-alignment constraint.
-        bk = min(round_up(min(k, 512), MXU_DIM), round_up(k, MXU_DIM))
-    # binary-search the largest square-ish block fitting the budget
-    bn = MXU_DIM
-    while True:
-        nbn = bn + MXU_DIM
-        nbm = round_to(int(r * nbn), MXU_DIM)
-        cand = BlockShape(bm=min(nbm, round_up(m, MXU_DIM)),
-                          bn=min(nbn, round_up(n, MXU_DIM)), bk=bk)
-        if cand.vmem_bytes(dtype_bytes) > vmem_budget:
-            break
-        if cand.bn == bn and cand.bm == round_to(int(r * bn), MXU_DIM):
-            break  # saturated both dims
-        bn = cand.bn
-        if nbn > max(n, MXU_DIM) and cand.bm >= min(round_to(int(r * nbn), MXU_DIM), round_up(m, MXU_DIM)):
-            break
-    bm = min(round_to(int(r * bn), MXU_DIM), round_up(m, MXU_DIM))
-    return BlockShape(bm=max(MXU_DIM, bm), bn=max(MXU_DIM, min(bn, round_up(n, MXU_DIM))), bk=bk)
+        bk = min(round_up(min(k, 512), align), round_up(k, align))
+    # paper Sec. IV-C closed form on the f32 psum element budget
+    tiles = optimal_block(max(align * align, vmem_budget // 4), r)
+    bm = min(round_up(tiles.u, align), round_up(m, align))
+    bn = min(round_up(tiles.z, align), round_up(n, align))
+    # shrink toward bm ~= r*bn until the VMEM working set fits
+    while BlockShape(bm, bn, bk).vmem_bytes(dtype_bytes) > vmem_budget \
+            and (bm > align or bn > align):
+        if bm > max(align, round_to(int(r * bn), align)):
+            bm -= align
+        elif bn > align and round_to(int(r * (bn - align)), align) \
+                >= bm - align:
+            bn -= align
+            bm = max(align, min(bm, round_to(int(r * bn), align)))
+        else:
+            bm = max(align, bm - align)
+            bn = max(align, bn - align)
+    return BlockShape(bm=max(align, bm), bn=max(align, bn), bk=bk)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvBlockShape:
+    """Pallas conv block geometry: the paper's {u, z, k} in conv space.
+
+    u = y*x spatial psum tile, z = co channels resident, k = ci slice
+    streamed per pass; (halo_y, halo_x) is the halo-extended input
+    footprint of one (y, x) output tile."""
+
+    y: int
+    x: int
+    co: int
+    ci: int
+    halo_y: int
+    halo_x: int
+
+    @property
+    def u(self) -> int:
+        return self.y * self.x
+
+    @property
+    def psum_bytes(self) -> int:
+        return self.u * self.co * 4               # f32 accumulator
+
+    def operand_bytes(self, hk: int, wk: int, dtype_bytes: int = 4) -> int:
+        return (self.halo_y * self.halo_x * self.ci
+                + hk * wk * self.ci * self.co) * dtype_bytes
+
+    def vmem_bytes(self, hk: int, wk: int, dtype_bytes: int = 4) -> int:
+        # double-buffered streamed panels + resident psums
+        return self.psum_bytes + 2 * self.operand_bytes(hk, wk,
+                                                        dtype_bytes)
+
+    def footprint_elems(self, hk: int, wk: int) -> int:
+        """On-chip words S of the paper's model (no double buffering)."""
+        return (self.u * self.co + self.halo_y * self.halo_x * self.ci
+                + hk * wk * self.ci * self.co)
+
+
+def conv_lb_block_shape(ho: int, wo: int, ci: int, co: int,
+                        hk: int, wk: int, *,
+                        stride: tuple[int, int] = (1, 1),
+                        dilation: tuple[int, int] = (1, 1),
+                        dtype_bytes: int = 4,
+                        vmem_budget: int = VMEM_BYTES // 2
+                        ) -> ConvBlockShape:
+    """Spatially-tiled conv blocks from the paper's two key conditions.
+
+    Routes :func:`repro.core.lower_bound.optimal_block` through
+    :func:`lb_block_shape` on the layer's converted-matmul view
+    (Fig. 3: M = Ho*Wo, N = Co, K = Ci) with the conv reuse factor
+    R = Hk*Wk/(sy*sx), then folds bm back into a square-ish (y, x)
+    spatial tile and shrinks until the halo-extended working set fits.
+    """
+    sy, sx = stride
+    r = max(1.0, (hk * wk) / float(sy * sx))
+    # lane-width alignment only makes sense once the budget affords
+    # 128-wide blocks; at paper-scale (ASIC GBuf-sized) budgets it
+    # would pin z to 128 and destroy the u ~= R*z balance, so fall back
+    # to the f32 sublane there.
+    align = MXU_DIM if vmem_budget >= 8 * 1024 * 1024 else SUBLANE[4]
+    blk = lb_block_shape(ho * wo, co, ci, r=r, dtype_bytes=dtype_bytes,
+                         vmem_budget=vmem_budget, align=align,
+                         bk=min(round_up(ci, align), align))
+    co_b = max(1, min(co, blk.bn))
+    ci_b = max(1, min(ci, blk.bk))
+    # unfold u = bm into a square-ish (y, x) tile: squares minimize the
+    # halo overhead (perimeter) for a given psum area u
+    u = max(1, min(blk.bm, ho * wo))
+    tx = max(1, min(wo, int(math.sqrt(u))))
+    ty = max(1, min(ho, u // tx))
+    # snap to balanced tile sizes: ceil(dim/n) splits cover the plane
+    # with minimal padding waste (cf. layer.balanced_candidates)
+    ty = -(-ho // -(-ho // ty))
+    tx = -(-wo // -(-wo // tx))
+
+    def mk(ty, tx, co_b, ci_b):
+        yp = (ty - 1) * sy + (hk - 1) * dilation[0] + 1
+        xp = (tx - 1) * sx + (wk - 1) * dilation[1] + 1
+        return ConvBlockShape(y=ty, x=tx, co=co_b, ci=ci_b,
+                              halo_y=yp, halo_x=xp)
+
+    def balanced(dim: int, t: int) -> int:
+        """Largest tile <= t splitting dim into equal ceil pieces —
+        minimal padding waste (cf. layer.balanced_candidates)."""
+        return -(-dim // -(-dim // max(1, t)))
+
+    cand = mk(ty, tx, co_b, ci_b)
+    # halos are ignored by the matmul view: shrink (largest-first) the
+    # dims that only cost memory until the real working set fits
+    while cand.vmem_bytes(hk, wk, dtype_bytes) > vmem_budget:
+        if ci_b > 8:
+            ci_b = max(8, ci_b // 2)
+        elif ty * tx > 64 and ty >= tx:
+            ty = max(1, ty // 2)
+        elif ty * tx > 64:
+            tx = max(1, tx // 2)
+        elif co_b > 8:
+            co_b = max(8, co_b // 2)
+        elif ty * tx > 1:
+            ty, tx = max(1, ty // 2), max(1, tx // 2)
+        elif ci_b > 1 or co_b > 1:
+            ci_b, co_b = max(1, ci_b // 2), max(1, co_b // 2)
+        else:
+            break                     # nothing left to shrink
+        cand = mk(ty, tx, co_b, ci_b)
+    # snapping never grows a dim, so the budget check above still holds
+    return mk(balanced(ho, ty), balanced(wo, tx),
+              balanced(co, co_b), balanced(ci, ci_b))
 
 
 def hbm_traffic_model(m: int, n: int, k: int, blk: BlockShape,

@@ -1,19 +1,36 @@
-"""Paper-dataflow convolution Pallas kernel (Fig. 6/7 on TPU).
+"""Paper-dataflow convolution Pallas kernel — spatially tiled (Fig. 6/7).
 
-Grid = (batch, Co-blocks, Ci-blocks).  Per step:
-  * the psum block — z output channels for the full spatial tile, the
-    paper's u x z block with u = Ho*Wo — is resident in VMEM scratch
-    across the whole Ci sweep (OutR: psums never touch HBM);
-  * a Ci-slice of the halo-padded input block is streamed in and reused
-    by all Wk*Hk shifted windows **inside VMEM** (WndR on chip: "inputs
-    are not unfolded so we can exploit WndR on chip");
-  * the matching z-kernel weight slice is streamed once (balanced
-    InR/WtR: per output block each operand panel is read exactly once —
-    Eq. (14)).
+Realizes the paper's psum-stationary u x z output block on TPU with
+*true spatial tiling* (the earlier revision kept the whole Ho x Wo
+plane in scratch and could not scale past small images):
+
+  grid = (batch, y-tiles, x-tiles, Co-blocks, Ci-blocks)
+
+Per grid step:
+  * the psum block — a (ty x tx) spatial tile times z = co_block output
+    channels, i.e. the paper's u x z block with u = ty*tx — is resident
+    in VMEM scratch across the whole Ci sweep (OutR: psums never touch
+    HBM, every output is written exactly once);
+  * a Ci-slice of the *halo-extended* input tile is streamed in through
+    an overlapping ``pl.Unblocked`` BlockSpec — neighbouring spatial
+    tiles re-read only the (Wk-1)/(Hk-1) halo rows/cols, and all Wk*Hk
+    shifted windows are served from the one VMEM-resident tile (WndR on
+    chip: "inputs are not unfolded so we can exploit WndR on chip");
+  * the matching z-kernel weight slice is streamed once per step
+    (balanced InR/WtR: per output block each operand panel is read
+    exactly once — Eq. (14)).
 
 The Hk x Wk window loop is unrolled in-kernel: each offset is one
-(Ho*Wo, ci_b) x (ci_b, co_b) MXU matmul — the implicit-GEMM form of the
-convolution-to-MM conversion of paper Fig. 3.
+(ty*tx, ci_b) x (ci_b, co_b) MXU matmul — the implicit-GEMM form of
+the convolution-to-MM conversion of paper Fig. 3.  Stride and dilation
+are folded into the in-VMEM strided slice, so WndR survives both.
+
+Tiling contract (``ops.py`` enforces it by padding):
+  * Ci % ci_block == 0, Co % co_block == 0;
+  * the padded output plane divides the spatial tile:
+    Ho % y_block == 0 and Wo % x_block == 0;
+  * the input is padded so every tile's halo read stays in bounds:
+    Hp == (Ho-1)*stride_y + (Hk-1)*dil_y + 1 (same for W).
 """
 
 from __future__ import annotations
@@ -26,60 +43,88 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def halo_dims(y_block: int, x_block: int, hk: int, wk: int,
+              stride: tuple[int, int], dilation: tuple[int, int]
+              ) -> tuple[int, int]:
+    """Input footprint (yp, xp) of one (y_block, x_block) output tile."""
+    yp = (y_block - 1) * stride[0] + (hk - 1) * dilation[0] + 1
+    xp = (x_block - 1) * stride[1] + (wk - 1) * dilation[1] + 1
+    return yp, xp
+
+
 def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *,
-                 nci: int, hk: int, wk: int, ho: int, wo: int,
-                 stride: int):
-    @pl.when(pl.program_id(2) == 0)
+                 nci: int, hk: int, wk: int, ty: int, tx: int,
+                 stride: tuple[int, int], dilation: tuple[int, int]):
+    @pl.when(pl.program_id(4) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    sy, sx = stride
+    dy, dx = dilation
     cib = x_ref.shape[-1]
     cob = acc_ref.shape[-1]
     for ky in range(hk):                      # unrolled window sweep:
         for kx in range(wk):                  # WndR served from VMEM
             xs = jax.lax.slice(
                 x_ref[0],
-                (ky, kx, 0),
-                (ky + (ho - 1) * stride + 1,
-                 kx + (wo - 1) * stride + 1, cib),
-                (stride, stride, 1))          # (Ho, Wo, cib)
+                (ky * dy, kx * dx, 0),
+                (ky * dy + (ty - 1) * sy + 1,
+                 kx * dx + (tx - 1) * sx + 1, cib),
+                (sy, sx, 1))                  # (ty, tx, cib)
             acc_ref[...] += jnp.dot(
-                xs.reshape(ho * wo, cib), w_ref[ky, kx],
-                preferred_element_type=jnp.float32).reshape(ho, wo, cob)
+                xs.reshape(ty * tx, cib), w_ref[ky, kx],
+                preferred_element_type=jnp.float32).reshape(ty, tx, cob)
 
-    @pl.when(pl.program_id(2) == nci - 1)
+    @pl.when(pl.program_id(4) == nci - 1)
     def _flush():
         o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
 
 def conv_lb_call(x: jax.Array, w: jax.Array, *,
-                 stride: int = 1,
+                 stride: tuple[int, int] = (1, 1),
+                 dilation: tuple[int, int] = (1, 1),
+                 y_block: int, x_block: int,
                  ci_block: int, co_block: int,
                  out_dtype=None, interpret: bool = True) -> jax.Array:
     """x: (B, Hp, Wp, Ci) pre-padded NHWC; w: (Hk, Wk, Ci, Co).
 
-    Ci % ci_block == 0 and Co % co_block == 0 (ops.py pads)."""
+    See the module docstring for the padding/divisibility contract."""
     b, hp, wp, ci = x.shape
     hk, wk, ci2, co = w.shape
+    sy, sx = stride
+    dy, dx = dilation
     assert ci == ci2 and ci % ci_block == 0 and co % co_block == 0
-    ho = (hp - hk) // stride + 1
-    wo = (wp - wk) // stride + 1
+    ho = (hp - ((hk - 1) * dy + 1)) // sy + 1
+    wo = (wp - ((wk - 1) * dx + 1)) // sx + 1
+    assert ho % y_block == 0 and wo % x_block == 0, (
+        f"output plane {ho}x{wo} does not divide tile "
+        f"{y_block}x{x_block}; ops.py must pad")
+    ny, nx = ho // y_block, wo // x_block
     nci, nco = ci // ci_block, co // co_block
+    yp, xp = halo_dims(y_block, x_block, hk, wk, stride, dilation)
     out_dtype = out_dtype or x.dtype
     kern = functools.partial(_conv_kernel, nci=nci, hk=hk, wk=wk,
-                             ho=ho, wo=wo, stride=stride)
+                             ty=y_block, tx=x_block,
+                             stride=stride, dilation=dilation)
     return pl.pallas_call(
         kern,
-        grid=(b, nco, nci),
+        grid=(b, ny, nx, nco, nci),
         in_specs=[
-            pl.BlockSpec((1, hp, wp, ci_block),
-                         lambda bi, coi, cii: (bi, 0, 0, cii)),
+            # overlapping halo tile: element offsets, not block indices
+            pl.BlockSpec(
+                (1, yp, xp, ci_block),
+                lambda bi, yi, xi, coi, cii: (
+                    bi, yi * y_block * sy, xi * x_block * sx,
+                    cii * ci_block),
+                indexing_mode=pl.Unblocked()),
             pl.BlockSpec((hk, wk, ci_block, co_block),
-                         lambda bi, coi, cii: (0, 0, cii, coi)),
+                         lambda bi, yi, xi, coi, cii: (0, 0, cii, coi)),
         ],
-        out_specs=pl.BlockSpec((1, ho, wo, co_block),
-                               lambda bi, coi, cii: (bi, 0, 0, coi)),
+        out_specs=pl.BlockSpec(
+            (1, y_block, x_block, co_block),
+            lambda bi, yi, xi, coi, cii: (bi, yi, xi, coi)),
         out_shape=jax.ShapeDtypeStruct((b, ho, wo, co), out_dtype),
-        scratch_shapes=[pltpu.VMEM((ho, wo, co_block), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((y_block, x_block, co_block),
+                                   jnp.float32)],
         interpret=interpret,
     )(x, w)

@@ -1,79 +1,254 @@
-"""jit'd wrapper for the paper-dataflow conv kernel.
+"""jit'd wrapper + HBM-traffic accountant for the paper-dataflow conv.
 
-Block-size selection follows Sec. IV-C's two conditions adapted to
-VMEM (DESIGN.md §2): the psum block u x z has u = Ho*Wo fixed by the
-full-spatial tiling, so z (= co_block) takes the remaining accumulator
-budget; the streamed Ci slice is the smallest aligned value whose input
-panel still fits — the k=1 principle under MXU alignment.
+Block-size selection routes the paper's closed form (Sec. IV-C's two
+key conditions, :func:`repro.core.lower_bound.optimal_block`) through
+:func:`repro.core.tpu_adapter.conv_lb_block_shape` — the single block
+chooser shared with the matmul kernel.  The wrapper owns the tiling
+contract (padding so tiles divide the output plane and every halo read
+is in bounds) and supports strided, dilated and grouped convolutions;
+``fallback=True`` routes the same surface through
+``lax.conv_general_dilated`` (XLA's schedule, identical math).
+Input (lhs) dilation and asymmetric before/after padding are out of
+scope for both paths — express those directly via ``jax.lax``.
+
+``conv_lb_traffic`` is the analytic per-BlockSpec accountant: it
+counts exactly the HBM words the ``pallas_call`` moves (a block is
+re-fetched whenever its index-map output changes between consecutive
+grid steps — Pallas' pipelining rule), giving the *measured* side of
+the paper's Eq. (14)/(15) validation in tests and benchmarks.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.tpu_adapter import VMEM_BYTES, round_to, round_up
+from repro.core.dataflow import Traffic
+from repro.core.tpu_adapter import (ConvBlockShape, conv_lb_block_shape,
+                                    round_up)
 
 
-def choose_conv_blocks(hp: int, wp: int, ci: int, co: int,
-                       hk: int, wk: int, ho: int, wo: int,
-                       dtype_bytes: int = 4,
-                       vmem_budget: int = VMEM_BYTES // 2
-                       ) -> tuple[int, int]:
-    """(ci_block, co_block) per the adapted lower-bound conditions."""
-    acc_budget = vmem_budget // 2                      # psums get most
-    co_block = max(8, acc_budget // (ho * wo * 4))
-    co_block = min(round_to(co_block, 128) if co_block >= 128 else co_block,
-                   round_up(co, 8))
-    # streamed panels (double-buffered): input slice + weight slice
-    rem = vmem_budget - ho * wo * min(co_block, co) * 4
-    per_ci = 2 * dtype_bytes * (hp * wp + hk * wk * min(co_block, co))
-    ci_block = max(8, min(ci, rem // max(1, per_ci)))
-    if ci_block >= 128:
-        ci_block = round_to(ci_block, 128)
-    return ci_block, co_block
+def _pair(v) -> tuple[int, int]:
+    return tuple(v) if isinstance(v, (tuple, list)) else (int(v), int(v))
 
 
-def _pad_axis(a, axis, mult):
-    pad = -a.shape[axis] % mult
-    if pad:
+@dataclasses.dataclass(frozen=True)
+class ConvPlan:
+    """Concrete grid/padding geometry for one conv_lb_call.
+
+    Shared between the wrapper and the traffic accountant so the bytes
+    we account are the bytes the kernel moves — by construction."""
+
+    blocks: ConvBlockShape
+    ho: int            # true output dims
+    wo: int
+    ho_pad: int        # tile-aligned output dims
+    wo_pad: int
+    hp_pad: int        # input dims after conv + halo padding
+    wp_pad: int
+    ci_pad: int
+    co_pad: int
+    stride: tuple[int, int]
+    dilation: tuple[int, int]
+
+    @property
+    def grid(self) -> tuple[int, int, int, int]:
+        """(ny, nx, nco, nci) — spatial/channel grid extents."""
+        return (self.ho_pad // self.blocks.y,
+                self.wo_pad // self.blocks.x,
+                self.co_pad // self.blocks.co,
+                self.ci_pad // self.blocks.ci)
+
+
+def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
+              stride=(1, 1), padding=(0, 0), dilation=(1, 1),
+              blocks: ConvBlockShape | None = None,
+              dtype_bytes: int = 4,
+              vmem_budget: int | None = None) -> ConvPlan:
+    """Resolve blocks + padding for an (H, W, Ci) -> Co conv."""
+    sy, sx = _pair(stride)
+    py, px = _pair(padding)
+    dy, dx = _pair(dilation)
+    hp, wp = h + 2 * py, w + 2 * px
+    ekh, ekw = (hk - 1) * dy + 1, (wk - 1) * dx + 1   # dilated extent
+    ho = (hp - ekh) // sy + 1
+    wo = (wp - ekw) // sx + 1
+    if blocks is None:
+        kw = {} if vmem_budget is None else {"vmem_budget": vmem_budget}
+        blocks = conv_lb_block_shape(ho, wo, ci, co, hk, wk,
+                                     stride=(sy, sx), dilation=(dy, dx),
+                                     dtype_bytes=dtype_bytes, **kw)
+    ty, tx = min(blocks.y, ho), min(blocks.x, wo)
+    cib, cob = min(blocks.ci, ci), min(blocks.co, co)
+    blocks = ConvBlockShape(y=ty, x=tx, co=cob, ci=cib,
+                            halo_y=(ty - 1) * sy + ekh,
+                            halo_x=(tx - 1) * sx + ekw)
+    ho_pad, wo_pad = round_up(ho, ty), round_up(wo, tx)
+    # max(): a strided conv can have unused trailing input rows/cols —
+    # keep them (blocks never index past the last tile's halo)
+    return ConvPlan(blocks=blocks, ho=ho, wo=wo,
+                    ho_pad=ho_pad, wo_pad=wo_pad,
+                    hp_pad=max(hp, (ho_pad - 1) * sy + ekh),
+                    wp_pad=max(wp, (wo_pad - 1) * sx + ekw),
+                    ci_pad=round_up(ci, cib), co_pad=round_up(co, cob),
+                    stride=(sy, sx), dilation=(dy, dx))
+
+
+def _pad_axis(a, axis, target):
+    pad = target - a.shape[axis]
+    if pad > 0:
         cfg = [(0, 0)] * a.ndim
         cfg[axis] = (0, pad)
         a = jnp.pad(a, cfg)
     return a
 
 
-@partial(jax.jit, static_argnames=("stride", "padding", "interpret",
-                                   "ci_block", "co_block"))
-def conv2d_lb(x: jax.Array, w: jax.Array, *, stride: int = 1,
-              padding: int = 0, ci_block: int | None = None,
-              co_block: int | None = None,
-              interpret: bool = True) -> jax.Array:
-    """NHWC conv through the paper-dataflow kernel.
-
-    x: (B, H, W, Ci); w: (Hk, Wk, Ci, Co) -> (B, Ho, Wo, Co)."""
+def _conv_one_group(x, w, plan: ConvPlan, py: int, px: int,
+                    out_dtype, interpret: bool) -> jax.Array:
     from repro.kernels.conv_lb.kernel import conv_lb_call
 
+    b = x.shape[0]
+    co = w.shape[3]
+    x = jnp.pad(x, ((0, 0), (py, plan.hp_pad - x.shape[1] - py),
+                    (px, plan.wp_pad - x.shape[2] - px), (0, 0)))
+    x = _pad_axis(x, 3, plan.ci_pad)
+    w = _pad_axis(_pad_axis(w, 2, plan.ci_pad), 3, plan.co_pad)
+    out = conv_lb_call(x, w, stride=plan.stride, dilation=plan.dilation,
+                       y_block=plan.blocks.y, x_block=plan.blocks.x,
+                       ci_block=plan.blocks.ci, co_block=plan.blocks.co,
+                       out_dtype=out_dtype, interpret=interpret)
+    return out[:, :plan.ho, :plan.wo, :co]
+
+
+def _lax_conv(x, w, sy, sx, py, px, dy, dx, groups):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(sy, sx),
+        padding=[(py, py), (px, px)], rhs_dilation=(dy, dx),
+        feature_group_count=groups,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+@partial(jax.jit, static_argnames=("stride", "padding", "dilation",
+                                   "groups", "interpret", "fallback",
+                                   "y_block", "x_block",
+                                   "ci_block", "co_block"))
+def conv2d_lb(x: jax.Array, w: jax.Array, *, stride=1, padding=0,
+              dilation=1, groups: int = 1,
+              y_block: int | None = None, x_block: int | None = None,
+              ci_block: int | None = None, co_block: int | None = None,
+              interpret: bool = True,
+              fallback: bool = False) -> jax.Array:
+    """NHWC conv through the paper-dataflow spatially-tiled kernel.
+
+    x: (B, H, W, Ci); w: (Hk, Wk, Ci/groups, Co) -> (B, Ho, Wo, Co).
+    ``stride``/``padding``/``dilation`` take an int or an (h, w) pair;
+    ``dilation`` is kernel (rhs) dilation.  ``fallback=True`` routes
+    through ``lax.conv_general_dilated`` (same math, XLA's schedule).
+
+    Differentiable: the forward runs the Pallas dataflow; the custom
+    VJP derives both gradients from the exact ``lax`` counterpart (a
+    conv's backward is itself a conv — XLA already schedules it), so
+    the VGG training path can ride the kernel end to end.
+    """
+    sy, sx = _pair(stride)
+    py, px = _pair(padding)
+    dy, dx = _pair(dilation)
     b, h, wd, ci = x.shape
-    hk, wk, _, co = w.shape
-    if padding:
-        x = jnp.pad(x, ((0, 0), (padding, padding),
-                        (padding, padding), (0, 0)))
-    hp, wp = x.shape[1], x.shape[2]
-    ho = (hp - hk) // stride + 1
-    wo = (wp - wk) // stride + 1
-    if ci_block is None or co_block is None:
-        cib, cob = choose_conv_blocks(hp, wp, ci, co, hk, wk, ho, wo,
-                                      dtype_bytes=x.dtype.itemsize)
-        ci_block = ci_block or cib
-        co_block = co_block or cob
-    ci_block = min(ci_block, ci)
-    co_block = min(co_block, co)
-    x = _pad_axis(x, 3, ci_block)
-    w = _pad_axis(_pad_axis(w, 2, ci_block), 3, co_block)
-    out = conv_lb_call(x, w, stride=stride, ci_block=ci_block,
-                       co_block=co_block, out_dtype=x.dtype,
-                       interpret=interpret)
-    return out[..., :co]
+    hk, wk, ci_g, co = w.shape
+    if ci_g * groups != ci or co % groups:
+        raise ValueError(f"groups={groups} incompatible with "
+                         f"Ci={ci}, w Ci={ci_g}, Co={co}")
+    if fallback:
+        return _lax_conv(x, w, sy, sx, py, px, dy, dx, groups)
+
+    plan = plan_conv(h, wd, ci_g, co // groups, hk, wk,
+                     stride=(sy, sx), padding=(py, px),
+                     dilation=(dy, dx),
+                     dtype_bytes=x.dtype.itemsize)
+    if any(v is not None for v in (y_block, x_block, ci_block, co_block)):
+        bk = plan.blocks
+        override = ConvBlockShape(
+            y=y_block or bk.y, x=x_block or bk.x,
+            co=co_block or bk.co, ci=ci_block or bk.ci,
+            halo_y=0, halo_x=0)
+        plan = plan_conv(h, wd, ci_g, co // groups, hk, wk,
+                         stride=(sy, sx), padding=(py, px),
+                         dilation=(dy, dx), blocks=override)
+    co_g = co // groups
+
+    @jax.custom_vjp
+    def kernel_conv(x, w):
+        outs = []
+        for g in range(groups):
+            xg = x[..., g * ci_g:(g + 1) * ci_g]
+            wg = w[..., g * co_g:(g + 1) * co_g]
+            outs.append(_conv_one_group(xg, wg, plan, py, px,
+                                        x.dtype, interpret))
+        return outs[0] if groups == 1 else jnp.concatenate(outs, axis=-1)
+
+    def _fwd(x, w):
+        return kernel_conv(x, w), (x, w)
+
+    def _bwd(res, g):
+        xr, wr = res
+        _, vjp = jax.vjp(
+            lambda a, b: _lax_conv(a, b, sy, sx, py, px, dy, dx, groups),
+            xr, wr)
+        return vjp(g)
+
+    kernel_conv.defvjp(_fwd, _bwd)
+    return kernel_conv(x, w)
+
+
+# --------------------------------------------------------------------------
+# analytic HBM-traffic accountant
+# --------------------------------------------------------------------------
+
+def conv_lb_traffic(batch: int, h: int, w: int, ci: int, co: int,
+                    hk: int, wk: int, *, stride=1, padding=0,
+                    dilation=1, groups: int = 1,
+                    plan: ConvPlan | None = None,
+                    vmem_budget: int | None = None,
+                    dtype_bytes: int = 4) -> tuple[Traffic, ConvPlan]:
+    """Exact HBM words moved by ``conv2d_lb`` for this layer (per group
+    geometry x ``groups``), derived from the kernel's BlockSpecs.
+
+    Pallas re-fetches an operand block whenever its index-map output
+    changes between consecutive steps of the grid
+    (b, ny, nx, nco, nci) — nci innermost.  Hence per grid step the
+    halo'd input tile (halo_y*halo_x*ci_b) and the weight slice
+    (hk*wk*ci_b*co_b) are each fetched once — except that a sole
+    Ci-block lets the input tile persist across the whole Co sweep, and
+    a sole (Ci, Co) block pins the weights for the entire run.  Outputs
+    flush exactly once per (b, yi, xi, coi): the psum-stationary OutR
+    guarantee (reads_out = 0, writes = padded |outputs|).
+    """
+    ci_g, co_g = ci // groups, co // groups
+    if plan is None:
+        plan = plan_conv(h, w, ci_g, co_g, hk, wk, stride=_pair(stride),
+                         padding=_pair(padding), dilation=_pair(dilation),
+                         dtype_bytes=dtype_bytes,
+                         vmem_budget=vmem_budget)
+    ny, nx, nco, nci = plan.grid
+    blk = plan.blocks
+    steps = batch * ny * nx * nco * nci
+    in_fetches = steps if nci > 1 else batch * ny * nx
+    w_fetches = steps if nco * nci > 1 else 1
+    reads_in = in_fetches * blk.halo_y * blk.halo_x * blk.ci
+    reads_w = w_fetches * hk * wk * blk.ci * blk.co
+    writes = batch * plan.ho_pad * plan.wo_pad * plan.co_pad
+    t = Traffic(reads_in=float(reads_in * groups),
+                reads_w=float(reads_w * groups),
+                reads_out=0.0,
+                writes_out=float(writes * groups))
+    return t, plan
+
+
+def conv_lb_traffic_bytes(*args, dtype_bytes: int = 4, **kw) -> float:
+    """Total HBM bytes moved (all tensors at ``dtype_bytes``)."""
+    t, _ = conv_lb_traffic(*args, dtype_bytes=dtype_bytes, **kw)
+    return t.total * dtype_bytes

@@ -1,14 +1,29 @@
-"""Pure-jnp oracle for the conv kernel (lax.conv in NHWC)."""
+"""Pure-jnp oracle for the conv kernel (lax.conv in NHWC).
+
+Mirrors the full ``conv2d_lb`` surface — stride/padding/dilation may be
+an int or an (h, w) pair, plus grouped convolution — so parity tests
+sweep one oracle for every kernel mode.
+"""
 
 import jax
 import jax.numpy as jnp
 
 
-def conv2d_ref(x, w, *, stride: int = 1, padding: int = 0):
-    """x: (B, H, W, Ci); w: (Hk, Wk, Ci, Co) -> (B, Ho, Wo, Co)."""
+def _pair(v):
+    return tuple(v) if isinstance(v, (tuple, list)) else (int(v), int(v))
+
+
+def conv2d_ref(x, w, *, stride=1, padding=0, dilation=1,
+               groups: int = 1):
+    """x: (B, H, W, Ci); w: (Hk, Wk, Ci/groups, Co) -> (B, Ho, Wo, Co)."""
+    sy, sx = _pair(stride)
+    py, px = _pair(padding)
+    dy, dx = _pair(dilation)
     out = jax.lax.conv_general_dilated(
         x.astype(jnp.float32), w.astype(jnp.float32),
-        window_strides=(stride, stride),
-        padding=[(padding, padding), (padding, padding)],
+        window_strides=(sy, sx),
+        padding=[(py, py), (px, px)],
+        rhs_dilation=(dy, dx),
+        feature_group_count=groups,
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
     return out.astype(x.dtype)

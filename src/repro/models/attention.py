@@ -19,10 +19,7 @@ from repro.models.layers import (apply_rope, attention_chunked,
                                  dense_init, split_keys)
 from repro.parallel.axes import constrain, current_mesh, spec_for
 
-try:                                     # jax>=0.6 stable alias
-    shard_map = jax.shard_map
-except AttributeError:                   # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+from repro.parallel.compat import axis_size, shard_map
 
 from jax.sharding import PartitionSpec as P
 
@@ -125,7 +122,7 @@ def _decode_local(q, new_k, new_v, k_cache, v_cache, kv_pos, cur_pos,
     slots_local = k_cache.shape[1]
     if axis_name is not None:
         shard = jax.lax.axis_index(axis_name)
-        total = slots_local * jax.lax.axis_size(axis_name)
+        total = slots_local * axis_size(axis_name)
     else:
         shard = 0
         total = slots_local

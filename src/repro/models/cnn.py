@@ -1,12 +1,19 @@
 """VGG-style CNN in JAX — the paper's own evaluation workload.
 
 The conv layers run through :mod:`repro.kernels.conv_lb.ops` (the
-Pallas kernel realizing the paper's dataflow) when requested, or
-``jax.lax.conv_general_dilated`` otherwise; both are numerically
-checked against each other in tests.
+spatially-tiled Pallas kernel realizing the paper's dataflow) when
+requested, or ``jax.lax.conv_general_dilated`` otherwise; both are
+numerically checked against each other in tests.
+
+Init is He (Kaiming) for the conv stack: each ReLU halves activation
+variance, so without the sqrt(2) gain a 13-layer stack attenuates the
+signal ~sqrt(2)^13 ~= 90x and training plateaus at the entropy floor
+(the exact failure tests used to show: loss stuck at ~ln(n_classes)).
 """
 
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +37,9 @@ def init_vgg(key, n_classes: int = 10, width_mult: float = 1.0,
     convs = []
     for k, (name, ci, co, _, _) in zip(keys, dims):
         convs.append({
-            "w": dense_init(k, (3, 3, ci, co), dtype, fan_in=9 * ci),
+            # He gain: preserves activation variance through ReLU depth
+            "w": dense_init(k, (3, 3, ci, co), dtype,
+                            fan_in=9 * ci) * math.sqrt(2.0),
             "b": jnp.zeros((co,), dtype),
         })
     last_co = dims[-1][2]
@@ -49,7 +58,9 @@ def vgg_forward(params, images, use_kernel: bool = False):
     else:
         conv_fn = None
     h = images
-    for p, (name, ci, co, _, _) in zip(params["convs"], vgg_layer_dims()):
+    # zip on layer *names* only: params may be built with any
+    # width_mult, so channel counts come from the param shapes
+    for p, (name, *_rest) in zip(params["convs"], _CFG):
         if h.shape[-1] != p["w"].shape[2]:
             break  # reduced-width smoke configs may truncate the stack
         if conv_fn is not None:

@@ -26,10 +26,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.parallel.axes import constrain, current_mesh, spec_for
 
-try:
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+from repro.parallel.compat import shard_map
 
 LOSS_CHUNK = 512
 
@@ -114,10 +111,13 @@ def _loss_local(h, table, labels, valid, real_vocab, axis_name,
     def body(carry, xs):
         h_c, l_c, v_c = xs
         ls, cnt = _chunk_ce(h_c, table, l_c, v_c, real_vocab, axis_name)
-        return (carry[0] + ls, carry[1] + cnt), None
+        # (1,)-shaped carries/sums: 0-d residuals crossing the shard_map
+        # boundary break jax 0.4.x's scalar-residual promotion in the
+        # transpose (_SpecError under grad) — keep everything >= 1-D.
+        return (carry[0] + ls[None], carry[1] + cnt[None]), None
 
     (loss_sum, count), _ = jax.lax.scan(
-        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        body, (jnp.zeros((1,), jnp.float32), jnp.zeros((1,), jnp.float32)),
         (hc, lc, vc))
     if all_axes:
         # replicated axes scale numerator and denominator identically
@@ -134,7 +134,7 @@ def lm_loss(h, table, labels, real_vocab: int):
     mesh = current_mesh()
     if mesh is None or "model" not in mesh.shape or mesh.shape["model"] == 1:
         s, c = _loss_local(h, table, labels_c, valid, real_vocab, None)
-        return s / jnp.maximum(c, 1.0)
+        return s[0] / jnp.maximum(c[0], 1.0)
     batch = spec_for("batch")[0]
     s, c = shard_map(
         partial(_loss_local, real_vocab=real_vocab, axis_name="model",
@@ -143,9 +143,9 @@ def lm_loss(h, table, labels, real_vocab: int):
         in_specs=(P(batch, None, None),      # all-gather h over seq
                   P("model", None),
                   P(batch, None), P(batch, None)),
-        out_specs=(P(), P()),
+        out_specs=(P(None), P(None)),
         check_vma=False)(h, table, labels_c, valid)
-    return s / jnp.maximum(c, 1.0)
+    return s[0] / jnp.maximum(c[0], 1.0)
 
 
 def lm_logits(h, table, real_vocab: int):

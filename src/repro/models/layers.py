@@ -23,10 +23,7 @@ import jax.numpy as jnp
 from repro.parallel.axes import (constrain, current_flag, current_fsdp,
                                  current_mesh, spec_for)
 
-try:
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+from repro.parallel.compat import shard_map
 
 from jax.sharding import PartitionSpec as P
 

@@ -29,6 +29,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.parallel.compat import axis_size
+
 from repro.models.layers import dense_init, split_keys
 
 
@@ -124,7 +126,7 @@ def moe_ffn_a2a(x, params, top_k: int, capacity_factor: float,
     Dispatch -> all_to_all -> local expert FFN -> all_to_all -> combine.
     """
     t, d = x.shape
-    mp = jax.lax.axis_size(model_axis)
+    mp = axis_size(model_axis)
     n_experts = params["router"].shape[1]
     tpe = max(1, mp // n_experts)
     assert n_experts * tpe == mp, (n_experts, mp)
@@ -156,7 +158,7 @@ def moe_ffn_psum(x, params, top_k: int, model_axis: str,
     """Decode mode shard_map body: x replicated over model; each shard
     computes its expert slice densely for all T tokens; psum combines."""
     t, d = x.shape
-    mp = jax.lax.axis_size(model_axis)
+    mp = axis_size(model_axis)
     n_experts = params["router"].shape[1]
     tpe = max(1, mp // n_experts)
     wg, wi, wo = params["wg"], params["wi"], params["wo"]
@@ -195,7 +197,7 @@ def moe_ffn_psum_ep2(x, params, top_k: int, axes: tuple,
     t = xg.shape[0]
     n_experts = params["router"].shape[1]
     rows = params["wg"].shape[0]        # E * tpe2 global
-    sizes = [jax.lax.axis_size(a) for a in axes]
+    sizes = [axis_size(a) for a in axes]
     total = 1
     for sz in sizes:
         total *= sz

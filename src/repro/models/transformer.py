@@ -31,10 +31,7 @@ from repro.models.layers import (cast_params_for_compute,
                                  dense_init, rms_norm, split_keys)
 from repro.parallel.axes import constrain, current_mesh, spec_for
 
-try:
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+from repro.parallel.compat import shard_map
 
 
 # --------------------------------------------------------------------------

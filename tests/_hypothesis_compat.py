@@ -1,0 +1,120 @@
+"""Make ``hypothesis`` optional for the tier-1 suite (repo test policy).
+
+The pinned container does not ship ``hypothesis``, and installing new
+packages is off-limits — yet three tier-1 modules are property-based.
+This shim re-exports the real library when it is importable and
+otherwise provides a deterministic miniature fallback implementing the
+exact subset the suite uses:
+
+  * ``given(*strategies)``   — runs the test body over sampled examples
+  * ``settings(max_examples=, deadline=)`` — example-count control
+  * ``st.integers / floats / sampled_from / just / builds / tuples``
+
+The fallback draws from a per-test ``random.Random`` seeded with the
+test name, so runs are reproducible, and it always includes the
+boundary values of ``integers``/``floats`` ranges (cheap edge-case
+coverage the random draws might miss).  With hypothesis installed the
+tests property-test exactly as before — nothing here shadows it.
+
+Usage in test modules::
+
+    from _hypothesis_compat import given, settings, st
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # fallback mini-implementation
+    import functools
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 25          # cap: fallback is a smoke sweep
+
+    class _Strategy:
+        """A sampleable value source; ``boundary()`` yields edge cases."""
+
+        def __init__(self, sample, boundary=()):
+            self._sample = sample
+            self._boundary = tuple(boundary)
+
+        def sample(self, rng: random.Random):
+            return self._sample(rng)
+
+        def boundary(self):
+            return self._boundary
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                             boundary=(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            return _Strategy(
+                lambda rng: rng.uniform(min_value, max_value),
+                boundary=(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements),
+                             boundary=(elements[0], elements[-1]))
+
+        @staticmethod
+        def just(value) -> _Strategy:
+            return _Strategy(lambda rng: value, boundary=(value,))
+
+        @staticmethod
+        def tuples(*strats: _Strategy) -> _Strategy:
+            return _Strategy(
+                lambda rng: tuple(s.sample(rng) for s in strats))
+
+        @staticmethod
+        def builds(target, *arg_strats: _Strategy,
+                   **kw_strats: _Strategy) -> _Strategy:
+            def sample(rng):
+                args = [s.sample(rng) for s in arg_strats]
+                kwargs = {k: s.sample(rng) for k, s in kw_strats.items()}
+                return target(*args, **kwargs)
+            return _Strategy(sample)
+
+    st = _Strategies()
+
+    def settings(**kwargs):
+        """Record settings on the function; consumed by ``given``."""
+        def deco(fn):
+            fn._compat_settings = dict(kwargs)
+            return fn
+        return deco
+
+    def given(*strategies: _Strategy):
+        def deco(fn):
+            cfg = getattr(fn, "_compat_settings", {})
+            n = min(int(cfg.get("max_examples", _FALLBACK_EXAMPLES)),
+                    _FALLBACK_EXAMPLES)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(fn.__qualname__)
+                # one pass per boundary value of *each* strategy (that
+                # strategy pinned to its edge, the rest freshly drawn),
+                # then random draws
+                for i, strat in enumerate(strategies):
+                    for edge in strat.boundary():
+                        drawn = [edge if j == i else s.sample(rng)
+                                 for j, s in enumerate(strategies)]
+                        fn(*args, *drawn, **kwargs)
+                for _ in range(n):
+                    drawn = [s.sample(rng) for s in strategies]
+                    fn(*args, *drawn, **kwargs)
+
+            # hide the wrapped signature: pytest must not mistake the
+            # strategy-filled parameters for fixtures to inject
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

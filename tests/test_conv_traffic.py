@@ -1,0 +1,130 @@
+"""Measured-traffic validation of the paper's bound (Eq. (14)/(15)).
+
+The conv kernel's BlockSpec-derived HBM accountant
+(:func:`repro.kernels.conv_lb.ops.conv_lb_traffic`) is checked against
+
+  * the analytic dataflow model ``OursDataflow.traffic`` (Eq. (14)),
+  * the attainable lower bound ``q_dram_practical`` (Eq. (15)),
+  * the once-per-word floor ``q_dram_ideal``,
+
+making the kernel a *measured* validation of the paper's claim rather
+than a model-only one: the words the accountant counts are exactly the
+words the ``pallas_call`` moves (same plan object, same BlockSpecs).
+"""
+
+import pytest
+
+from repro.core.dataflow import OursDataflow, Tiling
+from repro.core.lower_bound import q_dram_ideal, q_dram_practical
+from repro.core.tpu_adapter import conv_lb_block_shape
+from repro.core.vgg import vgg16_conv_layers
+from repro.kernels.conv_lb.ops import conv_lb_traffic
+
+S_1M = 1024 * 1024        # bytes of on-chip budget used for the sweep
+
+
+@pytest.fixture(scope="module")
+def vgg():
+    return {l.name: l for l in vgg16_conv_layers(batch=3)}
+
+
+def _measure(layer, vmem_bytes):
+    t, plan = conv_lb_traffic(layer.batch, layer.hi, layer.wi,
+                              layer.ci, layer.co, layer.hk, layer.wk,
+                              stride=layer.stride, padding=layer.pad,
+                              vmem_budget=vmem_bytes)
+    return t, plan
+
+
+def test_accountant_matches_dataflow_model(vgg):
+    """Per-BlockSpec bytes == Eq. (14) dataflow model, up to padding
+    overhead (above) and consecutive-fetch caching (below: a sole
+    (Ci, Co) block pins the weights for the whole run, which the model
+    conservatively re-reads per spatial block)."""
+    df = OursDataflow()
+    for name in ("conv1_1", "conv2_1", "conv3_2", "conv4_2", "conv5_3"):
+        layer = vgg[name]
+        t, plan = _measure(layer, S_1M)
+        blk = plan.blocks
+        model = df.traffic(layer, Tiling(b=1, z=blk.co, y=blk.y,
+                                         x=blk.x, k=blk.ci))
+        assert t.reads_out == 0.0                       # OutR: no spills
+        # outputs: written exactly once (modulo tile-padding waste)
+        assert model.writes_out <= t.writes_out <= 1.1 * model.writes_out
+        # weights: never more than the model's re-read assumption
+        assert t.reads_w <= 1.05 * model.reads_w
+        # inputs: halo-padded reads of the padded image
+        assert 0.95 * model.reads_in <= t.reads_in <= 1.45 * model.reads_in
+        assert 0.8 <= t.total / model.total <= 1.4
+
+
+def test_measured_traffic_attains_eq15(vgg):
+    """Acceptance: measured HBM traffic within 1.25x of Eq. (15) on
+    >= 3 VGG layers (paper Fig. 13 reports ~1.1x for its dataflow)."""
+    close = []
+    for name in ("conv1_1", "conv2_1", "conv2_2", "conv4_1"):
+        layer = vgg[name]
+        t, plan = _measure(layer, S_1M)
+        s = plan.blocks.footprint_elems(layer.hk, layer.wk)
+        ratio = t.total / q_dram_practical(layer, s)
+        if ratio <= 1.25:
+            close.append((name, ratio))
+    assert len(close) >= 3, close
+
+
+def test_measured_traffic_never_beats_bounds(vgg):
+    """Sanity: no accounted volume may undercut the lower bounds."""
+    for layer in vgg.values():
+        for budget in (256 * 1024, S_1M):
+            t, plan = _measure(layer, budget)
+            s = plan.blocks.footprint_elems(layer.hk, layer.wk)
+            assert t.total >= 0.999 * q_dram_ideal(layer)
+            # Eq. 15 at the realized footprint is a true lower bound
+            assert t.total >= 0.95 * q_dram_practical(layer, s)
+
+
+def test_conv_block_chooser_respects_budget_and_balance():
+    """The unified chooser: fits the budget and lands near the paper's
+    two key conditions (u ~= R*z, small streamed k)."""
+    for layer in vgg16_conv_layers(batch=3)[2:8]:
+        for budget in (256 * 1024, S_1M):
+            blk = conv_lb_block_shape(layer.ho, layer.wo, layer.ci,
+                                      layer.co, layer.hk, layer.wk,
+                                      stride=(layer.stride,) * 2,
+                                      dtype_bytes=4, vmem_budget=budget)
+            assert blk.vmem_bytes(layer.hk, layer.wk, 4) <= budget
+            assert blk.ci <= 16               # k stays small (paper k=1)
+            r = layer.reuse_r
+            # u within a factor ~3.5 of R*z (alignment + clamping slack)
+            assert blk.u <= 3.5 * r * blk.co
+            assert blk.u * 3.5 >= min(r * blk.co,
+                                      layer.ho * layer.wo)
+
+
+def test_traffic_scales_down_with_memory(vgg):
+    """More on-chip memory must never cost more traffic (Fig. 13's
+    downward slope)."""
+    layer = vgg["conv3_1"]
+    totals = [
+        _measure(layer, b)[0].total
+        for b in (128 * 1024, 512 * 1024, 2 * 1024 * 1024)
+    ]
+    assert totals[0] >= totals[1] >= totals[2]
+
+
+def test_grouped_traffic_splits_linearly(vgg):
+    """groups=g runs g independent Ci/g -> Co/g convs; the accountant
+    must report the summed geometry."""
+    layer = vgg["conv3_1"]
+    t1, _ = conv_lb_traffic(layer.batch, layer.hi, layer.wi,
+                            layer.ci, layer.co, layer.hk, layer.wk,
+                            stride=layer.stride, padding=layer.pad,
+                            vmem_budget=S_1M)
+    t2, _ = conv_lb_traffic(layer.batch, layer.hi, layer.wi,
+                            layer.ci, layer.co, layer.hk, layer.wk,
+                            stride=layer.stride, padding=layer.pad,
+                            groups=2, vmem_budget=S_1M)
+    # per-group planes are the same size; inputs re-read per z-tile of
+    # a *smaller* Co/g sweep, so grouped traffic must be strictly less
+    assert t2.total < t1.total
+    assert t2.writes_out == pytest.approx(t1.writes_out, rel=0.1)

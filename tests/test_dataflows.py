@@ -1,7 +1,7 @@
 """Dataflow zoo tests: traffic models, search, paper's headline claims."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.dataflow import (OursDataflow, Tiling, dataflow_zoo,
                                  found_minimum, network_traffic)

@@ -39,10 +39,7 @@ def _mesh():
 def test_moe_a2a_matches_dense():
     """EP all-to-all dispatch == single-device dense reference."""
     from jax.sharding import PartitionSpec as P
-    try:
-        shard_map = jax.shard_map
-    except AttributeError:
-        from jax.experimental.shard_map import shard_map
+    from repro.parallel.compat import shard_map
     from repro.models.moe import moe_ffn_a2a
 
     mesh = _mesh()
@@ -69,10 +66,7 @@ def test_moe_a2a_matches_dense():
 
 def test_moe_psum_matches_dense():
     from jax.sharding import PartitionSpec as P
-    try:
-        shard_map = jax.shard_map
-    except AttributeError:
-        from jax.experimental.shard_map import shard_map
+    from repro.parallel.compat import shard_map
     from repro.models.moe import moe_ffn_psum
 
     mesh = _mesh()
