@@ -15,11 +15,12 @@ from repro.core.tpu_adapter import (BlockShape, arithmetic_intensity,
 
 
 def _time_call(fn, *args, reps=3):
-    fn(*args).block_until_ready()
+    fn(*args).block_until_ready()            # warmup/compile
     t0 = time.perf_counter()
     for _ in range(reps):
-        out = fn(*args)
-    out.block_until_ready()
+        # sync every rep: timing only the last rep's completion would
+        # measure async dispatch for all earlier reps
+        fn(*args).block_until_ready()
     return (time.perf_counter() - t0) / reps * 1e6
 
 
@@ -71,6 +72,55 @@ def bench_conv_traffic():
     return rows
 
 
+def bench_conv_batch_fold():
+    """Batch-folded u x z tiling at serving batch (B=8, 1 MiB): weight
+    reads vs the per-image schedule (the batch-reuse term of Eq. 14)
+    and the autotuned plan vs the closed-form seed."""
+    from repro.kernels.conv_lb.ops import conv_lb_traffic, plan_conv
+    from repro.core.tpu_adapter import ConvBlockShape
+    from repro.core.vgg import vgg16_conv_layers
+
+    rows = []
+    budget = 1024 * 1024
+    folded_w = per_image_w = tuned = closed = 0.0
+    for layer in vgg16_conv_layers(batch=8):
+        t, plan = conv_lb_traffic(
+            layer.batch, layer.hi, layer.wi, layer.ci, layer.co,
+            layer.hk, layer.wk, stride=layer.stride, padding=layer.pad,
+            vmem_budget=budget)
+        folded_w += t.reads_w
+        tuned += t.total
+        # per-image baseline: same layer, batch folded out (b_block=1)
+        bk = plan.blocks
+        base = plan_conv(layer.hi, layer.wi, layer.ci, layer.co,
+                         layer.hk, layer.wk, batch=layer.batch,
+                         stride=(layer.stride,) * 2,
+                         padding=(layer.pad,) * 2,
+                         blocks=ConvBlockShape(y=bk.y, x=bk.x, co=bk.co,
+                                               ci=bk.ci, halo_y=bk.halo_y,
+                                               halo_x=bk.halo_x, b=1),
+                         vmem_budget=budget)
+        tb, _ = conv_lb_traffic(
+            layer.batch, layer.hi, layer.wi, layer.ci, layer.co,
+            layer.hk, layer.wk, stride=layer.stride, padding=layer.pad,
+            plan=base)
+        per_image_w += tb.reads_w
+        tc, _ = conv_lb_traffic(
+            layer.batch, layer.hi, layer.wi, layer.ci, layer.co,
+            layer.hk, layer.wk, stride=layer.stride, padding=layer.pad,
+            vmem_budget=budget, autotune=False)
+        closed += tc.total
+    rows.append(("kernels/conv_vgg16_B8/folded_w_Mwords", 0.0,
+                 round(folded_w / 1e6, 1)))
+    rows.append(("kernels/conv_vgg16_B8/per_image_w_Mwords", 0.0,
+                 round(per_image_w / 1e6, 1)))
+    rows.append(("kernels/conv_vgg16_B8/w_reduction_x", 0.0,
+                 round(per_image_w / folded_w, 2)))
+    rows.append(("kernels/conv_vgg16_B8/autotune_vs_closed_x", 0.0,
+                 round(closed / tuned, 3)))
+    return rows
+
+
 def bench_kernel_walltime():
     """Interpret-mode sanity timings (not TPU performance)."""
     from repro.kernels.attention_block.ops import flash_attention
@@ -103,4 +153,4 @@ def bench_kernel_walltime():
 
 
 ALL_KERNELS = [bench_matmul_traffic, bench_conv_traffic,
-               bench_kernel_walltime]
+               bench_conv_batch_fold, bench_kernel_walltime]

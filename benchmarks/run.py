@@ -1,5 +1,9 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# One function per paper table. Print ``name,us_per_call,derived`` CSV;
+# ``--json PATH`` additionally writes the rows as a machine-readable
+# BENCH_<n>.json-style record so the perf trajectory (traffic ratios,
+# walltimes) is comparable across PRs.
 import argparse
+import json
 import sys
 
 
@@ -8,6 +12,9 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark function names")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON to PATH "
+                         "(e.g. BENCH_2.json)")
     args = ap.parse_args()
 
     from benchmarks.kernel_bench import ALL_KERNELS
@@ -18,6 +25,7 @@ def main() -> None:
     if not args.skip_roofline:
         benches = benches + ALL_ROOFLINE
 
+    rows = []
     print("name,us_per_call,derived")
     for fn in benches:
         if args.only and args.only not in fn.__name__:
@@ -25,9 +33,16 @@ def main() -> None:
         try:
             for name, us, derived in fn():
                 print(f"{name},{us:.1f},{derived}")
+                rows.append({"name": name, "us_per_call": round(us, 1),
+                             "derived": derived})
         except Exception as e:  # noqa: BLE001
             print(f"{fn.__name__}/ERROR,0.0,{e!r}", file=sys.stderr)
             raise
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(rows, fh, indent=1)
+        print(f"wrote {len(rows)} rows to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

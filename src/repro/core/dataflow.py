@@ -185,12 +185,12 @@ class OursDataflow(Dataflow):
     def optimal_tiling(self, layer: ConvLayer, s: int) -> Tiling:
         """Closed-form seed from the two key conditions (Sec. IV-C):
         b*x*y ~= R*z and b*x*y*z ~= S."""
+        from repro.core.lower_bound import fold_u
+
         r = layer.reuse_r
         z = max(1, min(layer.co, int(math.sqrt(s / r))))
         u = max(1, s // max(1, z))
-        x = min(layer.wo, max(1, int(math.sqrt(u))))
-        y = min(layer.ho, max(1, u // max(1, x)))
-        b = min(layer.batch, max(1, u // max(1, x * y)))
+        b, y, x = fold_u(u, layer.batch, layer.ho, layer.wo)
         t = Tiling(b=b, z=z, y=y, x=x, k=1).clamp(layer)
         # shrink z until the halo'd footprint fits
         while t.z > 1 and self.footprint(layer, t) > s:

@@ -107,6 +107,23 @@ def optimal_block(s: int, r: float = 1.0, k: int = 1) -> OptimalTiles:
     return OptimalTiles(u=u, z=max(1, z), k=k)
 
 
+def fold_u(u: int, batch: int, ho: int, wo: int) -> tuple[int, int, int]:
+    """Unfold the paper's u = b*x*y output-block rows into (b, y, x).
+
+    The bound (Eq. 13-15) is over *output elements* u = B*Ho*Wo: batch
+    rows are just more u.  Spatial rows are taken first as a square-ish
+    (y, x) tile (minimum halo perimeter per psum area); once the tile
+    covers the whole output plane, the remaining u folds into the batch
+    dimension — batch rows add u without adding any halo overhead, so
+    they are "free" u at serving scale and are what lets the weight
+    slice of a u x z block amortize over many images.
+    """
+    x = min(wo, max(1, int(math.sqrt(u))))
+    y = min(ho, max(1, u // x))
+    b = min(batch, max(1, u // (x * y)))
+    return b, y, x
+
+
 def reduction_factor(layer: ConvLayer, s: int) -> float:
     """How much below naive the bound sits: sqrt(R*S) (Sec. III-B)."""
     return math.sqrt(layer.reuse_r * s)

@@ -18,7 +18,7 @@ mesh-level sharding (the beyond-paper extension)."""
 from __future__ import annotations
 
 import dataclasses
-import math
+import itertools
 
 # --- TPU v5e hardware constants (per chip) ----------------------------------
 PEAK_BF16_FLOPS = 197e12          # MXU bf16
@@ -106,9 +106,11 @@ def lb_block_shape(m: int, n: int, k: int, *,
 class ConvBlockShape:
     """Pallas conv block geometry: the paper's {u, z, k} in conv space.
 
-    u = y*x spatial psum tile, z = co channels resident, k = ci slice
-    streamed per pass; (halo_y, halo_x) is the halo-extended input
-    footprint of one (y, x) output tile."""
+    u = b*y*x batch-folded psum tile (the paper's u is over *output
+    elements* B*Ho*Wo, so a block of b images folds straight into it),
+    z = co channels resident, k = ci slice streamed per pass;
+    (halo_y, halo_x) is the halo-extended input footprint of one (y, x)
+    output tile — batch rows add u without adding halo."""
 
     y: int
     x: int
@@ -116,32 +118,46 @@ class ConvBlockShape:
     ci: int
     halo_y: int
     halo_x: int
+    b: int = 1
 
     @property
     def u(self) -> int:
-        return self.y * self.x
+        return self.b * self.y * self.x
 
     @property
     def psum_bytes(self) -> int:
         return self.u * self.co * 4               # f32 accumulator
 
     def operand_bytes(self, hk: int, wk: int, dtype_bytes: int = 4) -> int:
-        return (self.halo_y * self.halo_x * self.ci
+        return (self.b * self.halo_y * self.halo_x * self.ci
                 + hk * wk * self.ci * self.co) * dtype_bytes
 
-    def vmem_bytes(self, hk: int, wk: int, dtype_bytes: int = 4) -> int:
-        # double-buffered streamed panels + resident psums
-        return self.psum_bytes + 2 * self.operand_bytes(hk, wk,
-                                                        dtype_bytes)
+    def vmem_bytes(self, hk: int, wk: int, dtype_bytes: int = 4,
+                   w_pinned: bool = False) -> int:
+        # double-buffered streamed panels + resident psums; a weight
+        # block whose index map is constant over the whole grid (sole
+        # Ci and Co block) is never re-fetched, so it needs no second
+        # pipelining buffer — pass w_pinned=True to count it once
+        in_buf = 2 * self.b * self.halo_y * self.halo_x * self.ci
+        w_buf = (1 if w_pinned else 2) * hk * wk * self.ci * self.co
+        return self.psum_bytes + (in_buf + w_buf) * dtype_bytes
 
     def footprint_elems(self, hk: int, wk: int) -> int:
         """On-chip words S of the paper's model (no double buffering)."""
-        return (self.u * self.co + self.halo_y * self.halo_x * self.ci
+        return (self.u * self.co
+                + self.b * self.halo_y * self.halo_x * self.ci
                 + hk * wk * self.ci * self.co)
+
+
+def balanced_tile(dim: int, t: int) -> int:
+    """Largest tile <= t splitting dim into equal ceil pieces —
+    minimal padding waste (cf. layer.balanced_candidates)."""
+    return -(-dim // -(-dim // max(1, t)))
 
 
 def conv_lb_block_shape(ho: int, wo: int, ci: int, co: int,
                         hk: int, wk: int, *,
+                        batch: int = 1,
                         stride: tuple[int, int] = (1, 1),
                         dilation: tuple[int, int] = (1, 1),
                         dtype_bytes: int = 4,
@@ -151,10 +167,14 @@ def conv_lb_block_shape(ho: int, wo: int, ci: int, co: int,
 
     Routes :func:`repro.core.lower_bound.optimal_block` through
     :func:`lb_block_shape` on the layer's converted-matmul view
-    (Fig. 3: M = Ho*Wo, N = Co, K = Ci) with the conv reuse factor
-    R = Hk*Wk/(sy*sx), then folds bm back into a square-ish (y, x)
-    spatial tile and shrinks until the halo-extended working set fits.
+    (Fig. 3: M = B*Ho*Wo, N = Co, K = Ci) with the conv reuse factor
+    R = Hk*Wk/(sy*sx), then unfolds bm back into a batch-folded
+    (b, y, x) tile (:func:`repro.core.lower_bound.fold_u`: square-ish
+    spatial tile first, leftover u into batch) and shrinks until the
+    halo-extended working set fits.
     """
+    from repro.core.lower_bound import fold_u
+
     sy, sx = stride
     r = max(1.0, (hk * wk) / float(sy * sx))
     # lane-width alignment only makes sense once the budget affords
@@ -162,38 +182,34 @@ def conv_lb_block_shape(ho: int, wo: int, ci: int, co: int,
     # would pin z to 128 and destroy the u ~= R*z balance, so fall back
     # to the f32 sublane there.
     align = MXU_DIM if vmem_budget >= 8 * 1024 * 1024 else SUBLANE[4]
-    blk = lb_block_shape(ho * wo, co, ci, r=r, dtype_bytes=dtype_bytes,
+    blk = lb_block_shape(batch * ho * wo, co, ci, r=r,
+                         dtype_bytes=dtype_bytes,
                          vmem_budget=vmem_budget, align=align,
                          bk=min(round_up(ci, align), align))
     co_b = max(1, min(co, blk.bn))
     ci_b = max(1, min(ci, blk.bk))
-    # unfold u = bm into a square-ish (y, x) tile: squares minimize the
-    # halo overhead (perimeter) for a given psum area u
-    u = max(1, min(blk.bm, ho * wo))
-    tx = max(1, min(wo, int(math.sqrt(u))))
-    ty = max(1, min(ho, u // tx))
+    u = max(1, min(blk.bm, batch * ho * wo))
+    tb, ty, tx = fold_u(u, batch, ho, wo)
     # snap to balanced tile sizes: ceil(dim/n) splits cover the plane
     # with minimal padding waste (cf. layer.balanced_candidates)
-    ty = -(-ho // -(-ho // ty))
-    tx = -(-wo // -(-wo // tx))
+    ty = balanced_tile(ho, ty)
+    tx = balanced_tile(wo, tx)
+    tb = balanced_tile(batch, tb)
 
-    def mk(ty, tx, co_b, ci_b):
+    def mk(tb, ty, tx, co_b, ci_b):
         yp = (ty - 1) * sy + (hk - 1) * dilation[0] + 1
         xp = (tx - 1) * sx + (wk - 1) * dilation[1] + 1
         return ConvBlockShape(y=ty, x=tx, co=co_b, ci=ci_b,
-                              halo_y=yp, halo_x=xp)
+                              halo_y=yp, halo_x=xp, b=tb)
 
-    def balanced(dim: int, t: int) -> int:
-        """Largest tile <= t splitting dim into equal ceil pieces —
-        minimal padding waste (cf. layer.balanced_candidates)."""
-        return -(-dim // -(-dim // max(1, t)))
-
-    cand = mk(ty, tx, co_b, ci_b)
+    cand = mk(tb, ty, tx, co_b, ci_b)
     # halos are ignored by the matmul view: shrink (largest-first) the
     # dims that only cost memory until the real working set fits
     while cand.vmem_bytes(hk, wk, dtype_bytes) > vmem_budget:
         if ci_b > 8:
             ci_b = max(8, ci_b // 2)
+        elif tb > 1:
+            tb = tb // 2              # batch rows are pure psum+halo
         elif ty * tx > 64 and ty >= tx:
             ty = max(1, ty // 2)
         elif ty * tx > 64:
@@ -206,10 +222,32 @@ def conv_lb_block_shape(ho: int, wo: int, ci: int, co: int,
             ci_b, co_b = max(1, ci_b // 2), max(1, co_b // 2)
         else:
             break                     # nothing left to shrink
-        cand = mk(ty, tx, co_b, ci_b)
+        cand = mk(tb, ty, tx, co_b, ci_b)
     # snapping never grows a dim, so the budget check above still holds
-    return mk(balanced(ho, ty), balanced(wo, tx),
-              balanced(co, co_b), balanced(ci, ci_b))
+    return mk(balanced_tile(batch, tb), balanced_tile(ho, ty), balanced_tile(wo, tx),
+              balanced_tile(co, co_b), balanced_tile(ci, ci_b))
+
+
+def conv_block_candidates(batch: int, ho: int, wo: int, ci: int
+                          ) -> "itertools.product":
+    """Candidate (b, y, x, ci_b) tuples for the plan autotuner.
+
+    Geometric subsample of the balanced-split sets (every optimum of a
+    ceil-based traffic formula lies on the balanced set; the geometric
+    thinning keeps it within a (1+eps) factor — cf. layer.py).  The
+    best co_b is solved analytically by the scorer (largest fitting the
+    budget: weight traffic is ~co_b-independent, input traffic strictly
+    falls with co_b), so it is not enumerated here.
+    """
+    from repro.core.layer import balanced_candidates, geometric_candidates
+
+    def cands(dim: int, base: float) -> list[int]:
+        bal = balanced_candidates(dim)
+        geo = set(geometric_candidates(dim, base=base, include=(dim,)))
+        return [c for c in bal if c in geo] or bal
+
+    return itertools.product(cands(batch, 1.6), cands(ho, 2.0),
+                             cands(wo, 2.0), cands(ci, 2.0))
 
 
 def hbm_traffic_model(m: int, n: int, k: int, blk: BlockShape,

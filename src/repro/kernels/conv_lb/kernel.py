@@ -1,36 +1,52 @@
-"""Paper-dataflow convolution Pallas kernel — spatially tiled (Fig. 6/7).
+"""Paper-dataflow convolution Pallas kernel — batch-folded u x z tiling
+with a fused epilogue (Fig. 6/7 + Eq. 13-15).
 
-Realizes the paper's psum-stationary u x z output block on TPU with
-*true spatial tiling* (the earlier revision kept the whole Ho x Wo
-plane in scratch and could not scale past small images):
+Realizes the paper's psum-stationary u x z output block on TPU.  The
+bound (Eq. 13-15) is over *output elements* u = B*Ho*Wo, so batch is a
+first-class tiling dimension, not a degenerate outermost grid axis: a
+``b_block`` of images folds into the u-dimension of every psum tile.
 
-  grid = (batch, y-tiles, x-tiles, Co-blocks, Ci-blocks)
+  grid = (batch-blocks, y-tiles, x-tiles, Co-blocks, Ci-blocks)
 
 Per grid step:
-  * the psum block — a (ty x tx) spatial tile times z = co_block output
-    channels, i.e. the paper's u x z block with u = ty*tx — is resident
-    in VMEM scratch across the whole Ci sweep (OutR: psums never touch
-    HBM, every output is written exactly once);
-  * a Ci-slice of the *halo-extended* input tile is streamed in through
-    an overlapping ``pl.Unblocked`` BlockSpec — neighbouring spatial
-    tiles re-read only the (Wk-1)/(Hk-1) halo rows/cols, and all Wk*Hk
-    shifted windows are served from the one VMEM-resident tile (WndR on
-    chip: "inputs are not unfolded so we can exploit WndR on chip");
-  * the matching z-kernel weight slice is streamed once per step
-    (balanced InR/WtR: per output block each operand panel is read
-    exactly once — Eq. (14)).
+  * the psum block — ``(bb, ty, tx, co_b)``, i.e. the paper's u x z
+    block with u = bb*ty*tx — is resident in VMEM scratch across the
+    whole Ci sweep (OutR: psums never touch HBM, every output is
+    written exactly once);
+  * a Ci-slice of the *halo-extended* input tile for all ``bb`` images
+    is streamed in through an overlapping ``pl.Unblocked`` BlockSpec —
+    neighbouring spatial tiles re-read only the (Wk-1)/(Hk-1) halo
+    rows/cols, and all Wk*Hk shifted windows are served from the one
+    VMEM-resident tile (WndR on chip); batch rows add u without adding
+    halo;
+  * the matching z-kernel weight slice is streamed **once per u x z
+    block regardless of bb** — ``reads_w`` stops scaling with batch:
+    folding b images into one block divides the weight traffic of the
+    layer by ``b_block`` (the batch-reuse term of Eq. (14)).
 
 The Hk x Wk window loop is unrolled in-kernel: each offset is one
-(ty*tx, ci_b) x (ci_b, co_b) MXU matmul — the implicit-GEMM form of
+(bb*ty*tx, ci_b) x (ci_b, co_b) MXU matmul — the implicit-GEMM form of
 the convolution-to-MM conversion of paper Fig. 3.  Stride and dilation
 are folded into the in-VMEM strided slice, so WndR survives both.
 
+Fused epilogue (applied inside the flush step, while the psum tile is
+still in VMEM): optional ``bias`` add, ``relu``, and an aligned
+``pool`` x ``pool`` max-pool (stride = pool, VALID).  This collapses a
+CNN layer's ``conv-write -> read -> bias/relu/pool -> write`` HBM round
+trip into the single mandatory output write — with pooling the write
+volume itself drops by pool**2.
+
 Tiling contract (``ops.py`` enforces it by padding):
-  * Ci % ci_block == 0, Co % co_block == 0;
+  * B % b_block == 0, Ci % ci_block == 0, Co % co_block == 0;
   * the padded output plane divides the spatial tile:
     Ho % y_block == 0 and Wo % x_block == 0;
+  * with pooling: y_block % pool == 0, x_block % pool == 0 (tiles
+    start at pool-aligned rows, so pool windows never straddle tiles),
+    and the *true* Ho/Wo are divisible by pool;
   * the input is padded so every tile's halo read stays in bounds:
-    Hp == (Ho-1)*stride_y + (Hk-1)*dil_y + 1 (same for W).
+    Hp == (Ho-1)*stride_y + (Hk-1)*dil_y + 1 (same for W);
+  * ``bias`` arrives as a (1, Co) row so the (1, co_block) slice rides
+    the same Co-block sweep as the weights.
 """
 
 from __future__ import annotations
@@ -52,9 +68,16 @@ def halo_dims(y_block: int, x_block: int, hk: int, wk: int,
     return yp, xp
 
 
-def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *,
-                 nci: int, hk: int, wk: int, ty: int, tx: int,
-                 stride: tuple[int, int], dilation: tuple[int, int]):
+def _conv_kernel(*refs, nci: int, hk: int, wk: int,
+                 bb: int, ty: int, tx: int,
+                 stride: tuple[int, int], dilation: tuple[int, int],
+                 has_bias: bool, relu: bool, pool: int):
+    if has_bias:
+        x_ref, w_ref, b_ref, o_ref, acc_ref = refs
+    else:
+        x_ref, w_ref, o_ref, acc_ref = refs
+        b_ref = None
+
     @pl.when(pl.program_id(4) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -66,27 +89,40 @@ def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *,
     for ky in range(hk):                      # unrolled window sweep:
         for kx in range(wk):                  # WndR served from VMEM
             xs = jax.lax.slice(
-                x_ref[0],
-                (ky * dy, kx * dx, 0),
-                (ky * dy + (ty - 1) * sy + 1,
+                x_ref[...],
+                (0, ky * dy, kx * dx, 0),
+                (bb, ky * dy + (ty - 1) * sy + 1,
                  kx * dx + (tx - 1) * sx + 1, cib),
-                (sy, sx, 1))                  # (ty, tx, cib)
+                (1, sy, sx, 1))               # (bb, ty, tx, cib)
             acc_ref[...] += jnp.dot(
-                xs.reshape(ty * tx, cib), w_ref[ky, kx],
-                preferred_element_type=jnp.float32).reshape(ty, tx, cob)
+                xs.reshape(bb * ty * tx, cib), w_ref[ky, kx],
+                preferred_element_type=jnp.float32
+            ).reshape(bb, ty, tx, cob)
 
     @pl.when(pl.program_id(4) == nci - 1)
     def _flush():
-        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+        acc = acc_ref[...]
+        if b_ref is not None:                 # fused epilogue: the psum
+            acc = acc + b_ref[0]              # tile is still in VMEM
+        if relu:
+            acc = jnp.maximum(acc, 0.0)
+        if pool > 1:
+            acc = acc.reshape(bb, ty // pool, pool,
+                              tx // pool, pool, cob).max(axis=(2, 4))
+        o_ref[...] = acc.astype(o_ref.dtype)
 
 
 def conv_lb_call(x: jax.Array, w: jax.Array, *,
+                 bias: jax.Array | None = None,
+                 relu: bool = False, pool: int = 1,
                  stride: tuple[int, int] = (1, 1),
                  dilation: tuple[int, int] = (1, 1),
+                 b_block: int = 1,
                  y_block: int, x_block: int,
                  ci_block: int, co_block: int,
                  out_dtype=None, interpret: bool = True) -> jax.Array:
-    """x: (B, Hp, Wp, Ci) pre-padded NHWC; w: (Hk, Wk, Ci, Co).
+    """x: (B, Hp, Wp, Ci) pre-padded NHWC; w: (Hk, Wk, Ci, Co);
+    bias: (1, Co) or None.
 
     See the module docstring for the padding/divisibility contract."""
     b, hp, wp, ci = x.shape
@@ -94,37 +130,49 @@ def conv_lb_call(x: jax.Array, w: jax.Array, *,
     sy, sx = stride
     dy, dx = dilation
     assert ci == ci2 and ci % ci_block == 0 and co % co_block == 0
+    assert b % b_block == 0, (b, b_block)
     ho = (hp - ((hk - 1) * dy + 1)) // sy + 1
     wo = (wp - ((wk - 1) * dx + 1)) // sx + 1
     assert ho % y_block == 0 and wo % x_block == 0, (
         f"output plane {ho}x{wo} does not divide tile "
         f"{y_block}x{x_block}; ops.py must pad")
-    ny, nx = ho // y_block, wo // x_block
+    assert y_block % pool == 0 and x_block % pool == 0, (
+        f"tile {y_block}x{x_block} not divisible by pool={pool}")
+    nb, ny, nx = b // b_block, ho // y_block, wo // x_block
     nci, nco = ci // ci_block, co // co_block
     yp, xp = halo_dims(y_block, x_block, hk, wk, stride, dilation)
     out_dtype = out_dtype or x.dtype
     kern = functools.partial(_conv_kernel, nci=nci, hk=hk, wk=wk,
-                             ty=y_block, tx=x_block,
-                             stride=stride, dilation=dilation)
+                             bb=b_block, ty=y_block, tx=x_block,
+                             stride=stride, dilation=dilation,
+                             has_bias=bias is not None,
+                             relu=relu, pool=pool)
+    in_specs = [
+        # overlapping halo tile: element offsets, not block indices
+        pl.BlockSpec(
+            (b_block, yp, xp, ci_block),
+            lambda bi, yi, xi, coi, cii: (
+                bi * b_block, yi * y_block * sy, xi * x_block * sx,
+                cii * ci_block),
+            indexing_mode=pl.Unblocked()),
+        pl.BlockSpec((hk, wk, ci_block, co_block),
+                     lambda bi, yi, xi, coi, cii: (0, 0, cii, coi)),
+    ]
+    operands = [x, w]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec(
+            (1, co_block), lambda bi, yi, xi, coi, cii: (0, coi)))
+        operands.append(bias)
     return pl.pallas_call(
         kern,
-        grid=(b, ny, nx, nco, nci),
-        in_specs=[
-            # overlapping halo tile: element offsets, not block indices
-            pl.BlockSpec(
-                (1, yp, xp, ci_block),
-                lambda bi, yi, xi, coi, cii: (
-                    bi, yi * y_block * sy, xi * x_block * sx,
-                    cii * ci_block),
-                indexing_mode=pl.Unblocked()),
-            pl.BlockSpec((hk, wk, ci_block, co_block),
-                         lambda bi, yi, xi, coi, cii: (0, 0, cii, coi)),
-        ],
+        grid=(nb, ny, nx, nco, nci),
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
-            (1, y_block, x_block, co_block),
+            (b_block, y_block // pool, x_block // pool, co_block),
             lambda bi, yi, xi, coi, cii: (bi, yi, xi, coi)),
-        out_shape=jax.ShapeDtypeStruct((b, ho, wo, co), out_dtype),
-        scratch_shapes=[pltpu.VMEM((y_block, x_block, co_block),
+        out_shape=jax.ShapeDtypeStruct(
+            (b, ho // pool, wo // pool, co), out_dtype),
+        scratch_shapes=[pltpu.VMEM((b_block, y_block, x_block, co_block),
                                    jnp.float32)],
         interpret=interpret,
-    )(x, w)
+    )(*operands)

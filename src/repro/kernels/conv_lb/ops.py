@@ -1,34 +1,64 @@
 """jit'd wrapper + HBM-traffic accountant for the paper-dataflow conv.
 
-Block-size selection routes the paper's closed form (Sec. IV-C's two
-key conditions, :func:`repro.core.lower_bound.optimal_block`) through
-:func:`repro.core.tpu_adapter.conv_lb_block_shape` — the single block
-chooser shared with the matmul kernel.  The wrapper owns the tiling
-contract (padding so tiles divide the output plane and every halo read
-is in bounds) and supports strided, dilated and grouped convolutions;
-``fallback=True`` routes the same surface through
-``lax.conv_general_dilated`` (XLA's schedule, identical math).
-Input (lhs) dilation and asymmetric before/after padding are out of
-scope for both paths — express those directly via ``jax.lax``.
+Block-size selection is a two-stage plan search, memoized per layer
+geometry (:func:`plan_conv` is LRU-cached, so jit retraces never
+re-plan):
+
+  1. the paper's closed form (Sec. IV-C's two key conditions,
+     :func:`repro.core.lower_bound.optimal_block`) seeds a candidate
+     via :func:`repro.core.tpu_adapter.conv_lb_block_shape` — the
+     single block chooser shared with the matmul kernel, now on the
+     *batch-folded* matmul view (M = B*Ho*Wo);
+  2. a traffic-guided autotuner (:func:`autotune_conv_blocks`)
+     enumerates candidate ``(b_block, y, x, ci, co)`` shapes under the
+     VMEM budget and keeps whichever :func:`conv_lb_traffic` scores
+     cheapest.  The closed form is always in the candidate set, so the
+     tuned plan can never score worse than it.
+
+The wrapper owns the tiling contract (padding so tiles divide the
+output plane, batch divides into b_block images, and every halo read
+is in bounds) and supports strided, dilated and grouped convolutions
+plus a *fused epilogue* (``bias``/``relu``/aligned max-``pool``)
+applied while the psum tile is still in VMEM; ``fallback=True`` routes
+the same surface through ``lax.conv_general_dilated`` (XLA's schedule,
+identical math).  Input (lhs) dilation and asymmetric before/after
+padding are out of scope for both paths — express those directly via
+``jax.lax``.
 
 ``conv_lb_traffic`` is the analytic per-BlockSpec accountant: it
 counts exactly the HBM words the ``pallas_call`` moves (a block is
 re-fetched whenever its index-map output changes between consecutive
 grid steps — Pallas' pipelining rule), giving the *measured* side of
 the paper's Eq. (14)/(15) validation in tests and benchmarks.
+
+The batch-reuse term of Eq. (14)/(15): the bound is over output
+elements u = B*Ho*Wo, so per u x z block the z-kernel weight slice is
+read once *regardless of how many images the block folds* — weight
+traffic for a layer is ``(B/b_block) * Nyx * Wk*Hk*Ci*Co`` and stops
+scaling with batch once ``b_block -> B``.  A per-image schedule
+(b_block = 1) re-fetches the weights ``nco*nci`` times per image,
+which is exactly the gap Eq. (15) charges it for: at serving-scale
+batch the sqrt(R*S) denominator is only attainable with u folded
+across images.  The fused epilogue attacks the second term of
+Eq. (15), |outputs|: bias/relu happen before the single mandatory
+write, and a fused pool divides that write volume by pool**2 while
+eliminating the separate read-modify-write pass a layer-by-layer
+schedule would issue.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.dataflow import Traffic
-from repro.core.tpu_adapter import (ConvBlockShape, conv_lb_block_shape,
-                                    round_up)
+from repro.core.layer import ceil_div
+from repro.core.tpu_adapter import (VMEM_BYTES, ConvBlockShape,
+                                    balanced_tile, conv_block_candidates,
+                                    conv_lb_block_shape, round_up)
 
 
 def _pair(v) -> tuple[int, int]:
@@ -53,22 +83,140 @@ class ConvPlan:
     co_pad: int
     stride: tuple[int, int]
     dilation: tuple[int, int]
+    pool: int = 1      # fused epilogue max-pool window (1 = none)
 
     @property
     def grid(self) -> tuple[int, int, int, int]:
-        """(ny, nx, nco, nci) — spatial/channel grid extents."""
+        """(ny, nx, nco, nci) — spatial/channel grid extents (the
+        batch extent is ceil(B / blocks.b), B is not plan state)."""
         return (self.ho_pad // self.blocks.y,
                 self.wo_pad // self.blocks.x,
                 self.co_pad // self.blocks.co,
                 self.ci_pad // self.blocks.ci)
 
 
+def _blocks_traffic(batch: int, blk: ConvBlockShape, hk: int, wk: int,
+                    ho: int, wo: int, ci: int, co: int,
+                    pool: int = 1) -> Traffic:
+    """HBM words moved by the kernel's BlockSpecs for one group.
+
+    Pallas re-fetches an operand block whenever its index-map output
+    changes between consecutive steps of the grid
+    (nb, ny, nx, nco, nci) — nci innermost.  Hence per grid step the
+    halo'd input tile (b*halo_y*halo_x*ci_b) and the weight slice
+    (hk*wk*ci_b*co_b) are each fetched once — except that a sole
+    Ci-block lets the input tile persist across the whole Co sweep, and
+    a sole (Ci, Co) block pins the weights for the entire run.  The
+    weight slice is fetched once per u x z block *regardless of blk.b*:
+    reads_w scales with B/b_block, not B — the batch-reuse term.
+    Outputs flush exactly once per (bi, yi, xi, coi): the
+    psum-stationary OutR guarantee (reads_out = 0, writes = padded
+    |outputs| / pool**2 when the epilogue pool is fused).
+
+    Not counted: the fused bias row's (1, co_b) fetches — O(nb*ny*nx*co)
+    words, vanishing next to any conv operand panel (the smallest of
+    which carries an hk*wk*ci_b factor per fetch).
+    """
+    ho_pad, wo_pad = round_up(ho, blk.y), round_up(wo, blk.x)
+    ci_pad, co_pad = round_up(ci, blk.ci), round_up(co, blk.co)
+    tb = max(1, min(blk.b, batch))
+    nb = ceil_div(batch, tb)
+    ny, nx = ho_pad // blk.y, wo_pad // blk.x
+    nco, nci = co_pad // blk.co, ci_pad // blk.ci
+    steps = nb * ny * nx * nco * nci
+    in_fetches = steps if nci > 1 else nb * ny * nx
+    w_fetches = steps if nco * nci > 1 else 1
+    reads_in = in_fetches * tb * blk.halo_y * blk.halo_x * blk.ci
+    reads_w = w_fetches * hk * wk * blk.ci * blk.co
+    writes = nb * tb * (ho_pad // pool) * (wo_pad // pool) * co_pad
+    return Traffic(reads_in=float(reads_in), reads_w=float(reads_w),
+                   reads_out=0.0, writes_out=float(writes))
+
+
+def _snap_pool(t: int, dim: int, pool: int) -> int:
+    """Round a tile up to a pool multiple (tiles stay pool-aligned so
+    fused pool windows never straddle tile boundaries)."""
+    return min(dim, round_up(t, pool)) if pool > 1 else t
+
+
+# Extra score charge per weight word moved, on top of its 1x share of
+# the total.  At serving scale the weights are the *recurring* HBM
+# term — re-streamed from DRAM for every inference batch, forever —
+# while each activation word flows through once per request, so the
+# planner buys weight reuse with activation traffic whenever the
+# exchange is better than 1:2 (the Hong-Kung balance point treats all
+# words equally; serving does not).
+W_READ_BIAS = 2.0
+
+
+def conv_plan_score(t: Traffic) -> float:
+    """The autotuner's serving-oriented traffic score (lower=better)."""
+    return t.total + W_READ_BIAS * t.reads_w
+
+
+def autotune_conv_blocks(batch: int, ho: int, wo: int, ci: int, co: int,
+                         hk: int, wk: int, *,
+                         stride: tuple[int, int],
+                         dilation: tuple[int, int],
+                         pool: int = 1, dtype_bytes: int = 4,
+                         vmem_budget: int,
+                         seed: ConvBlockShape) -> ConvBlockShape:
+    """Traffic-guided plan autotuner (the 'exhaustive search' of the
+    paper's methodology, collapsed): enumerate balanced candidate
+    ``(b, y, x, ci_b)`` shapes, solve the best ``co_b`` analytically
+    (largest fitting the budget — weight traffic is ~co_b-independent
+    while input traffic strictly falls with co_b, cf.
+    ``OursDataflow._z_max``), plus the fully weight-pinned candidate
+    (sole Ci & Co block — single-buffered, fetched once for the whole
+    grid) when it fits, and keep whichever :func:`conv_plan_score`
+    rates cheapest.  ``seed`` (the closed form) is always a candidate,
+    so the result never scores worse than the closed form."""
+    sy, sx = stride
+    dy, dx = dilation
+    db = dtype_bytes
+    kk = hk * wk
+
+    def traffic(blk: ConvBlockShape) -> Traffic:
+        return _blocks_traffic(batch, blk, hk, wk, ho, wo, ci, co, pool)
+
+    cands = [(traffic(seed), seed)]
+    for b, y, x, cib in conv_block_candidates(batch, ho, wo, ci):
+        y, x = _snap_pool(y, ho, pool), _snap_pool(x, wo, pool)
+        yp = (y - 1) * sy + (hk - 1) * dy + 1
+        xp = (x - 1) * sx + (wk - 1) * dx + 1
+        # largest co_b under the budget: psums 4*b*y*x*co_b plus
+        # double-buffered input (b*yp*xp*cib) and weight (kk*cib*co_b)
+        free = vmem_budget - 2 * db * b * yp * xp * cib
+        denom = 4 * b * y * x + 2 * db * kk * cib
+        cobs = []
+        if free // denom >= 1:
+            cobs.append(min(co, int(free // denom)))
+        if cib >= ci:
+            cobs.append(co)         # weight-pinned: one fetch, 1x buffer
+        for cob in cobs:
+            cob = balanced_tile(co, cob)
+            blk = ConvBlockShape(y=y, x=x, co=cob, ci=cib,
+                                 halo_y=yp, halo_x=xp, b=b)
+            pinned = cib >= ci and cob >= co
+            if blk.vmem_bytes(hk, wk, db, w_pinned=pinned) <= vmem_budget:
+                cands.append((traffic(blk), blk))
+    return min(cands,
+               key=lambda tb: (conv_plan_score(tb[0]),
+                               tb[0].reads_w))[1]
+
+
+@lru_cache(maxsize=1024)
 def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
-              stride=(1, 1), padding=(0, 0), dilation=(1, 1),
+              batch: int = 1, stride=(1, 1), padding=(0, 0),
+              dilation=(1, 1), pool: int = 1,
               blocks: ConvBlockShape | None = None,
               dtype_bytes: int = 4,
-              vmem_budget: int | None = None) -> ConvPlan:
-    """Resolve blocks + padding for an (H, W, Ci) -> Co conv."""
+              vmem_budget: int | None = None,
+              autotune: bool = True) -> ConvPlan:
+    """Resolve blocks + padding for a (B, H, W, Ci) -> Co conv.
+
+    LRU-cached on the full layer geometry: the same geometry inside a
+    jit retrace (or across layers of a model) pays no re-planning."""
     sy, sx = _pair(stride)
     py, px = _pair(padding)
     dy, dx = _pair(dilation)
@@ -76,16 +224,28 @@ def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
     ekh, ekw = (hk - 1) * dy + 1, (wk - 1) * dx + 1   # dilated extent
     ho = (hp - ekh) // sy + 1
     wo = (wp - ekw) // sx + 1
+    if pool > 1 and (ho % pool or wo % pool):
+        raise ValueError(f"fused pool={pool} needs pool-divisible "
+                         f"output plane, got {ho}x{wo}")
+    budget = VMEM_BYTES // 2 if vmem_budget is None else vmem_budget
     if blocks is None:
-        kw = {} if vmem_budget is None else {"vmem_budget": vmem_budget}
         blocks = conv_lb_block_shape(ho, wo, ci, co, hk, wk,
-                                     stride=(sy, sx), dilation=(dy, dx),
-                                     dtype_bytes=dtype_bytes, **kw)
-    ty, tx = min(blocks.y, ho), min(blocks.x, wo)
+                                     batch=batch, stride=(sy, sx),
+                                     dilation=(dy, dx),
+                                     dtype_bytes=dtype_bytes,
+                                     vmem_budget=budget)
+        if autotune:
+            blocks = autotune_conv_blocks(
+                batch, ho, wo, ci, co, hk, wk, stride=(sy, sx),
+                dilation=(dy, dx), pool=pool, dtype_bytes=dtype_bytes,
+                vmem_budget=budget, seed=blocks)
+    ty = _snap_pool(min(blocks.y, ho), ho, pool)
+    tx = _snap_pool(min(blocks.x, wo), wo, pool)
     cib, cob = min(blocks.ci, ci), min(blocks.co, co)
+    tb = max(1, min(blocks.b, batch))
     blocks = ConvBlockShape(y=ty, x=tx, co=cob, ci=cib,
                             halo_y=(ty - 1) * sy + ekh,
-                            halo_x=(tx - 1) * sx + ekw)
+                            halo_x=(tx - 1) * sx + ekw, b=tb)
     ho_pad, wo_pad = round_up(ho, ty), round_up(wo, tx)
     # max(): a strided conv can have unused trailing input rows/cols —
     # keep them (blocks never index past the last tile's halo)
@@ -94,7 +254,7 @@ def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
                     hp_pad=max(hp, (ho_pad - 1) * sy + ekh),
                     wp_pad=max(wp, (wo_pad - 1) * sx + ekw),
                     ci_pad=round_up(ci, cib), co_pad=round_up(co, cob),
-                    stride=(sy, sx), dilation=(dy, dx))
+                    stride=(sy, sx), dilation=(dy, dx), pool=pool)
 
 
 def _pad_axis(a, axis, target):
@@ -106,21 +266,27 @@ def _pad_axis(a, axis, target):
     return a
 
 
-def _conv_one_group(x, w, plan: ConvPlan, py: int, px: int,
-                    out_dtype, interpret: bool) -> jax.Array:
+def _conv_one_group(x, w, bias, plan: ConvPlan, py: int, px: int,
+                    relu: bool, out_dtype, interpret: bool) -> jax.Array:
     from repro.kernels.conv_lb.kernel import conv_lb_call
 
     b = x.shape[0]
     co = w.shape[3]
+    blk = plan.blocks
     x = jnp.pad(x, ((0, 0), (py, plan.hp_pad - x.shape[1] - py),
                     (px, plan.wp_pad - x.shape[2] - px), (0, 0)))
-    x = _pad_axis(x, 3, plan.ci_pad)
+    x = _pad_axis(_pad_axis(x, 3, plan.ci_pad), 0, round_up(b, blk.b))
     w = _pad_axis(_pad_axis(w, 2, plan.ci_pad), 3, plan.co_pad)
-    out = conv_lb_call(x, w, stride=plan.stride, dilation=plan.dilation,
-                       y_block=plan.blocks.y, x_block=plan.blocks.x,
-                       ci_block=plan.blocks.ci, co_block=plan.blocks.co,
+    bias2d = None
+    if bias is not None:
+        bias2d = _pad_axis(bias.reshape(1, -1).astype(jnp.float32),
+                           1, plan.co_pad)
+    out = conv_lb_call(x, w, bias=bias2d, relu=relu, pool=plan.pool,
+                       stride=plan.stride, dilation=plan.dilation,
+                       b_block=blk.b, y_block=blk.y, x_block=blk.x,
+                       ci_block=blk.ci, co_block=blk.co,
                        out_dtype=out_dtype, interpret=interpret)
-    return out[:, :plan.ho, :plan.wo, :co]
+    return out[:b, :plan.ho // plan.pool, :plan.wo // plan.pool, :co]
 
 
 def _lax_conv(x, w, sy, sx, py, px, dy, dx, groups):
@@ -132,27 +298,50 @@ def _lax_conv(x, w, sy, sx, py, px, dy, dx, groups):
         preferred_element_type=jnp.float32).astype(x.dtype)
 
 
+def _lax_epilogue(y, bias, relu, pool):
+    """The unfused reference epilogue (bias -> relu -> maxpool)."""
+    if bias is not None:
+        y = (y.astype(jnp.float32) + bias.astype(jnp.float32)
+             ).astype(y.dtype)
+    if relu:
+        y = jnp.maximum(y, 0).astype(y.dtype)
+    if pool > 1:
+        y = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max,
+                                  (1, pool, pool, 1), (1, pool, pool, 1),
+                                  "VALID")
+    return y
+
+
 @partial(jax.jit, static_argnames=("stride", "padding", "dilation",
-                                   "groups", "interpret", "fallback",
-                                   "y_block", "x_block",
+                                   "groups", "relu", "pool",
+                                   "interpret", "fallback", "autotune",
+                                   "b_block", "y_block", "x_block",
                                    "ci_block", "co_block"))
-def conv2d_lb(x: jax.Array, w: jax.Array, *, stride=1, padding=0,
-              dilation=1, groups: int = 1,
+def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
+              *, stride=1, padding=0, dilation=1, groups: int = 1,
+              relu: bool = False, pool: int = 1,
+              b_block: int | None = None,
               y_block: int | None = None, x_block: int | None = None,
               ci_block: int | None = None, co_block: int | None = None,
-              interpret: bool = True,
+              interpret: bool = True, autotune: bool = True,
               fallback: bool = False) -> jax.Array:
-    """NHWC conv through the paper-dataflow spatially-tiled kernel.
+    """NHWC conv through the paper-dataflow batch-folded tiled kernel.
 
-    x: (B, H, W, Ci); w: (Hk, Wk, Ci/groups, Co) -> (B, Ho, Wo, Co).
+    x: (B, H, W, Ci); w: (Hk, Wk, Ci/groups, Co)
+    -> (B, Ho/pool, Wo/pool, Co).
     ``stride``/``padding``/``dilation`` take an int or an (h, w) pair;
-    ``dilation`` is kernel (rhs) dilation.  ``fallback=True`` routes
-    through ``lax.conv_general_dilated`` (same math, XLA's schedule).
+    ``dilation`` is kernel (rhs) dilation.  ``bias`` (shape (Co,)),
+    ``relu`` and ``pool`` (an aligned pool x pool max-pool, stride =
+    pool) form the fused epilogue: applied in-kernel on the VMEM psum
+    tile, so the layer issues a single output write and no separate
+    bias/relu/pool HBM round trip.  ``fallback=True`` routes through
+    ``lax.conv_general_dilated`` + the unfused epilogue (same math,
+    XLA's schedule).
 
     Differentiable: the forward runs the Pallas dataflow; the custom
-    VJP derives both gradients from the exact ``lax`` counterpart (a
+    VJP derives all gradients from the exact ``lax`` counterpart (a
     conv's backward is itself a conv — XLA already schedules it), so
-    the VGG training path can ride the kernel end to end.
+    the VGG training path can ride the fused kernel end to end.
     """
     sy, sx = _pair(stride)
     py, px = _pair(padding)
@@ -162,46 +351,55 @@ def conv2d_lb(x: jax.Array, w: jax.Array, *, stride=1, padding=0,
     if ci_g * groups != ci or co % groups:
         raise ValueError(f"groups={groups} incompatible with "
                          f"Ci={ci}, w Ci={ci_g}, Co={co}")
-    if fallback:
-        return _lax_conv(x, w, sy, sx, py, px, dy, dx, groups)
 
-    plan = plan_conv(h, wd, ci_g, co // groups, hk, wk,
+    def _lax_full(x, w, bias=None):
+        return _lax_epilogue(_lax_conv(x, w, sy, sx, py, px, dy, dx,
+                                       groups), bias, relu, pool)
+
+    if fallback:
+        return _lax_full(x, w, bias)
+
+    plan = plan_conv(h, wd, ci_g, co // groups, hk, wk, batch=b,
                      stride=(sy, sx), padding=(py, px),
-                     dilation=(dy, dx),
-                     dtype_bytes=x.dtype.itemsize)
-    if any(v is not None for v in (y_block, x_block, ci_block, co_block)):
+                     dilation=(dy, dx), pool=pool,
+                     dtype_bytes=x.dtype.itemsize, autotune=autotune)
+    if any(v is not None for v in (b_block, y_block, x_block,
+                                   ci_block, co_block)):
         bk = plan.blocks
         override = ConvBlockShape(
             y=y_block or bk.y, x=x_block or bk.x,
             co=co_block or bk.co, ci=ci_block or bk.ci,
-            halo_y=0, halo_x=0)
-        plan = plan_conv(h, wd, ci_g, co // groups, hk, wk,
+            halo_y=0, halo_x=0, b=b_block or bk.b)
+        plan = plan_conv(h, wd, ci_g, co // groups, hk, wk, batch=b,
                          stride=(sy, sx), padding=(py, px),
-                         dilation=(dy, dx), blocks=override)
+                         dilation=(dy, dx), pool=pool, blocks=override)
     co_g = co // groups
 
-    @jax.custom_vjp
-    def kernel_conv(x, w):
+    def _run(x, w, bias):
         outs = []
         for g in range(groups):
             xg = x[..., g * ci_g:(g + 1) * ci_g]
             wg = w[..., g * co_g:(g + 1) * co_g]
-            outs.append(_conv_one_group(xg, wg, plan, py, px,
-                                        x.dtype, interpret))
+            bg = None if bias is None else bias[g * co_g:(g + 1) * co_g]
+            outs.append(_conv_one_group(xg, wg, bg, plan, py, px,
+                                        relu, x.dtype, interpret))
         return outs[0] if groups == 1 else jnp.concatenate(outs, axis=-1)
 
-    def _fwd(x, w):
-        return kernel_conv(x, w), (x, w)
+    @jax.custom_vjp
+    def kernel_conv(x, w, bias):
+        return _run(x, w, bias)
+
+    def _fwd(x, w, bias):
+        return kernel_conv(x, w, bias), (x, w, bias)
 
     def _bwd(res, g):
-        xr, wr = res
-        _, vjp = jax.vjp(
-            lambda a, b: _lax_conv(a, b, sy, sx, py, px, dy, dx, groups),
-            xr, wr)
+        # bias=None is a leafless pytree primal: jax.vjp hands back a
+        # matching None cotangent, so one scaffold covers both arities
+        _, vjp = jax.vjp(_lax_full, *res)
         return vjp(g)
 
     kernel_conv.defvjp(_fwd, _bwd)
-    return kernel_conv(x, w)
+    return kernel_conv(x, w, bias)
 
 
 # --------------------------------------------------------------------------
@@ -210,41 +408,35 @@ def conv2d_lb(x: jax.Array, w: jax.Array, *, stride=1, padding=0,
 
 def conv_lb_traffic(batch: int, h: int, w: int, ci: int, co: int,
                     hk: int, wk: int, *, stride=1, padding=0,
-                    dilation=1, groups: int = 1,
+                    dilation=1, groups: int = 1, pool: int = 1,
                     plan: ConvPlan | None = None,
                     vmem_budget: int | None = None,
-                    dtype_bytes: int = 4) -> tuple[Traffic, ConvPlan]:
+                    dtype_bytes: int = 4,
+                    autotune: bool = True) -> tuple[Traffic, ConvPlan]:
     """Exact HBM words moved by ``conv2d_lb`` for this layer (per group
-    geometry x ``groups``), derived from the kernel's BlockSpecs.
-
-    Pallas re-fetches an operand block whenever its index-map output
-    changes between consecutive steps of the grid
-    (b, ny, nx, nco, nci) — nci innermost.  Hence per grid step the
-    halo'd input tile (halo_y*halo_x*ci_b) and the weight slice
-    (hk*wk*ci_b*co_b) are each fetched once — except that a sole
-    Ci-block lets the input tile persist across the whole Co sweep, and
-    a sole (Ci, Co) block pins the weights for the entire run.  Outputs
-    flush exactly once per (b, yi, xi, coi): the psum-stationary OutR
-    guarantee (reads_out = 0, writes = padded |outputs|).
-    """
+    geometry x ``groups``), derived from the kernel's BlockSpecs — see
+    :func:`_blocks_traffic` for the fetch rule.  ``autotune=False``
+    scores the closed-form (non-tuned) plan instead.  With an explicit
+    ``plan``, an explicit ``pool`` (> 1) overrides the plan's (the
+    blocks must be pool-aligned); ``pool=1`` defers to ``plan.pool``."""
     ci_g, co_g = ci // groups, co // groups
     if plan is None:
-        plan = plan_conv(h, w, ci_g, co_g, hk, wk, stride=_pair(stride),
-                         padding=_pair(padding), dilation=_pair(dilation),
+        plan = plan_conv(h, w, ci_g, co_g, hk, wk, batch=batch,
+                         stride=_pair(stride), padding=_pair(padding),
+                         dilation=_pair(dilation), pool=pool,
                          dtype_bytes=dtype_bytes,
-                         vmem_budget=vmem_budget)
-    ny, nx, nco, nci = plan.grid
-    blk = plan.blocks
-    steps = batch * ny * nx * nco * nci
-    in_fetches = steps if nci > 1 else batch * ny * nx
-    w_fetches = steps if nco * nci > 1 else 1
-    reads_in = in_fetches * blk.halo_y * blk.halo_x * blk.ci
-    reads_w = w_fetches * hk * wk * blk.ci * blk.co
-    writes = batch * plan.ho_pad * plan.wo_pad * plan.co_pad
-    t = Traffic(reads_in=float(reads_in * groups),
-                reads_w=float(reads_w * groups),
+                         vmem_budget=vmem_budget, autotune=autotune)
+    elif pool > 1 and plan.pool != pool:
+        if plan.blocks.y % pool or plan.blocks.x % pool:
+            raise ValueError(f"plan tiles {plan.blocks.y}x{plan.blocks.x}"
+                             f" are not pool={pool} aligned")
+        plan = dataclasses.replace(plan, pool=pool)
+    t = _blocks_traffic(batch, plan.blocks, hk, wk, plan.ho, plan.wo,
+                        plan.ci_pad, plan.co_pad, plan.pool)
+    t = Traffic(reads_in=t.reads_in * groups,
+                reads_w=t.reads_w * groups,
                 reads_out=0.0,
-                writes_out=float(writes * groups))
+                writes_out=t.writes_out * groups)
     return t, plan
 
 

@@ -1,8 +1,9 @@
 """Pure-jnp oracle for the conv kernel (lax.conv in NHWC).
 
 Mirrors the full ``conv2d_lb`` surface — stride/padding/dilation may be
-an int or an (h, w) pair, plus grouped convolution — so parity tests
-sweep one oracle for every kernel mode.
+an int or an (h, w) pair, grouped convolution, plus the fused epilogue
+(``bias``/``relu``/aligned max-``pool``) as the explicitly *unfused*
+composition — so parity tests sweep one oracle for every kernel mode.
 """
 
 import jax
@@ -13,9 +14,10 @@ def _pair(v):
     return tuple(v) if isinstance(v, (tuple, list)) else (int(v), int(v))
 
 
-def conv2d_ref(x, w, *, stride=1, padding=0, dilation=1,
-               groups: int = 1):
-    """x: (B, H, W, Ci); w: (Hk, Wk, Ci/groups, Co) -> (B, Ho, Wo, Co)."""
+def conv2d_ref(x, w, bias=None, *, stride=1, padding=0, dilation=1,
+               groups: int = 1, relu: bool = False, pool: int = 1):
+    """x: (B, H, W, Ci); w: (Hk, Wk, Ci/groups, Co)
+    -> (B, Ho/pool, Wo/pool, Co)."""
     sy, sx = _pair(stride)
     py, px = _pair(padding)
     dy, dx = _pair(dilation)
@@ -26,4 +28,12 @@ def conv2d_ref(x, w, *, stride=1, padding=0, dilation=1,
         rhs_dilation=(dy, dx),
         feature_group_count=groups,
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    if pool > 1:
+        out = jax.lax.reduce_window(out, -jnp.inf, jax.lax.max,
+                                    (1, pool, pool, 1),
+                                    (1, pool, pool, 1), "VALID")
     return out.astype(x.dtype)

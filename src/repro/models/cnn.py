@@ -52,7 +52,12 @@ _POOL_AFTER = {"conv1_2", "conv2_2", "conv3_3", "conv4_3", "conv5_3"}
 
 
 def vgg_forward(params, images, use_kernel: bool = False):
-    """images: (B, H, W, 3) -> logits (B, n_classes)."""
+    """images: (B, H, W, 3) -> logits (B, n_classes).
+
+    With ``use_kernel`` the conv layers run the batch-folded Pallas
+    kernel with the bias/relu/(2x2 maxpool) epilogue *fused*: each
+    layer issues a single HBM output write instead of the unfused
+    ``conv-write -> read -> bias/relu/pool -> write`` round trip."""
     if use_kernel:
         from repro.kernels.conv_lb.ops import conv2d_lb as conv_fn
     else:
@@ -63,17 +68,22 @@ def vgg_forward(params, images, use_kernel: bool = False):
     for p, (name, *_rest) in zip(params["convs"], _CFG):
         if h.shape[-1] != p["w"].shape[2]:
             break  # reduced-width smoke configs may truncate the stack
+        pool = name in _POOL_AFTER and h.shape[1] >= 2 and h.shape[2] >= 2
+        # the fused epilogue needs pool-aligned planes; odd dims take
+        # the (rare) unfused pool after the fused conv+bias+relu
+        fuse_pool = pool and h.shape[1] % 2 == 0 and h.shape[2] % 2 == 0
         if conv_fn is not None:
-            h = conv_fn(h, p["w"], padding=1)
+            h = conv_fn(h, p["w"], p["b"], padding=1, relu=True,
+                        pool=2 if fuse_pool else 1)
         else:
             h = jax.lax.conv_general_dilated(
                 h, p["w"], window_strides=(1, 1), padding="SAME",
                 dimension_numbers=("NHWC", "HWIO", "NHWC"))
-        h = jax.nn.relu(h + p["b"])
-        if name in _POOL_AFTER and h.shape[1] >= 2 and h.shape[2] >= 2:
+            h = jax.nn.relu(h + p["b"])
+        if pool and not (fuse_pool and conv_fn is not None):
             h = jax.lax.reduce_window(
-                h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
-                "VALID")
+                h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                (1, 2, 2, 1), "VALID")
     h = h.mean(axis=(1, 2))
     return h @ params["head"]
 

@@ -127,6 +127,74 @@ def test_conv_lb_grad_matches_reference(s, p, d, g):
     _allclose(gw, rw, jnp.float32)
 
 
+@pytest.mark.parametrize("relu,pool,use_bias", [
+    (False, 1, True),
+    (True, 1, True),
+    (True, 2, True),
+    (True, 2, False),
+    (False, 2, False),
+])
+def test_conv_lb_fused_epilogue_matches_unfused(relu, pool, use_bias):
+    """Fused bias/relu/maxpool epilogue == the unfused lax composition
+    to <= 1e-5, forward and both/all grads (acceptance criterion)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 12, 12, 6))
+    wt = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 6, 8)) * 0.2
+    b = (jax.random.normal(jax.random.PRNGKey(2), (8,)) * 0.1
+         if use_bias else None)
+
+    out = conv2d_lb(x, wt, b, padding=1, relu=relu, pool=pool)
+    ref = conv2d_ref(x, wt, b, padding=1, relu=relu, pool=pool)
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+    args = (x, wt) if b is None else (x, wt, b)
+    nums = tuple(range(len(args)))
+
+    def f_kernel(*a):
+        return jnp.mean(conv2d_lb(*a, padding=1, relu=relu,
+                                  pool=pool) ** 2)
+
+    def f_ref(*a):
+        return jnp.mean(conv2d_ref(*a, padding=1, relu=relu,
+                                   pool=pool) ** 2)
+
+    gk = jax.grad(f_kernel, argnums=nums)(*args)
+    gr = jax.grad(f_ref, argnums=nums)(*args)
+    for a, c in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_conv_lb_fused_epilogue_grouped():
+    """Per-group bias slicing composes with the fused epilogue."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8, 8))
+    wt = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 4, 12)) * 0.2
+    b = jax.random.normal(jax.random.PRNGKey(2), (12,)) * 0.1
+    out = conv2d_lb(x, wt, b, padding=1, groups=2, relu=True, pool=2)
+    ref = conv2d_ref(x, wt, b, padding=1, groups=2, relu=True, pool=2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_conv_lb_batch_fold_invariance():
+    """b_block is a pure dataflow choice: folding 1, 2 or all 4 images
+    into a psum tile (and the odd-batch padded case) is bit-equivalent
+    work."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 10, 10, 6))
+    wt = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 6, 8)) * 0.2
+    ref = conv2d_ref(x, wt, padding=1)
+    for bb in (1, 2, 4):
+        out = conv2d_lb(x, wt, padding=1, b_block=bb, y_block=5,
+                        x_block=10, ci_block=6, co_block=8)
+        _allclose(out, ref, jnp.float32)
+    # batch 3 with b_block 2: the wrapper pads the batch axis
+    x3 = x[:3]
+    out = conv2d_lb(x3, wt, padding=1, b_block=2, y_block=5,
+                    x_block=10, ci_block=6, co_block=8)
+    _allclose(out, conv2d_ref(x3, wt, padding=1), jnp.float32)
+
+
 def test_conv_lb_fallback_matches_kernel():
     """The lax fallback path computes the same convolution."""
     x = jax.random.normal(jax.random.PRNGKey(0), (1, 12, 12, 6))

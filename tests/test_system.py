@@ -83,14 +83,63 @@ def test_vgg_cnn_trains(tmp_path):
 
 
 def test_vgg_kernel_path_matches_xla():
-    """vgg_forward(use_kernel=True) routes through the Pallas conv and
-    must agree with the lax.conv path."""
+    """vgg_forward(use_kernel=True) routes through the Pallas conv
+    (bias/relu/pool fused into the kernel epilogue) and must agree
+    with the unfused lax.conv path."""
     key = jax.random.PRNGKey(0)
     params = init_vgg(key, n_classes=4, width_mult=0.05)
     imgs = jax.random.normal(key, (2, 16, 16, 3))
     a = vgg_forward(params, imgs, use_kernel=False)
     b = vgg_forward(params, imgs, use_kernel=True)
     assert float(jnp.max(jnp.abs(a - b))) < 1e-3
+
+
+def test_vgg_kernel_path_fuses_epilogue():
+    """The fused layers issue no separate bias/relu/pool HBM round
+    trip: the kernel-path jaxpr contains no reduce_window (pool) and no
+    conv-shaped max (relu) outside the pallas_call, while the lax path
+    contains both."""
+    key = jax.random.PRNGKey(0)
+    params = init_vgg(key, n_classes=4, width_mult=0.05)
+    imgs = jax.random.normal(key, (2, 16, 16, 3))
+
+    def prims(use_kernel):
+        jaxpr = jax.make_jaxpr(
+            lambda p, x: vgg_forward(p, x, use_kernel=use_kernel)
+        )(params, imgs)
+        return str(jaxpr)
+
+    lax_path, kernel_path = prims(False), prims(True)
+    assert "reduce_window_max" in lax_path
+    assert "reduce_window_max" not in kernel_path
+    assert "conv_general_dilated" not in kernel_path
+
+
+@pytest.mark.slow
+def test_vgg_kernel_trains(tmp_path):
+    """Interpret-mode VGG training straight through the fused Pallas
+    path: gradients flow through the batch-folded kernel + epilogue
+    and the loss actually drops.  Slow (interpret-mode grids) — run
+    with `pytest -m slow`."""
+    key = jax.random.PRNGKey(0)
+    params = init_vgg(key, n_classes=4, width_mult=0.1)
+    imgs = jax.random.normal(key, (8, 16, 16, 3))
+    labels = jnp.arange(8) % 4
+    imgs = imgs + labels[:, None, None, None] * 0.5
+    batch = {"images": imgs, "labels": labels}
+    loss0 = float(vgg_loss(params, batch, use_kernel=True))
+
+    @jax.jit
+    def step(p):
+        l, g = jax.value_and_grad(
+            lambda q: vgg_loss(q, batch, use_kernel=True))(p)
+        return l, jax.tree_util.tree_map(lambda a, b: a - 0.08 * b, p, g)
+
+    best = loss0
+    for _ in range(100):
+        loss, params = step(params)
+        best = min(best, float(loss))
+    assert best < loss0 - 0.2
 
 
 def test_serve_continuous_batching():
