@@ -20,8 +20,9 @@ def main() -> None:
     from benchmarks.kernel_bench import ALL_KERNELS
     from benchmarks.paper_tables import ALL_TABLES
     from benchmarks.roofline_bench import ALL_ROOFLINE
+    from benchmarks.serve_bench import ALL_SERVE
 
-    benches = ALL_TABLES + ALL_KERNELS
+    benches = ALL_TABLES + ALL_KERNELS + ALL_SERVE
     if not args.skip_roofline:
         benches = benches + ALL_ROOFLINE
 

@@ -1,0 +1,58 @@
+"""Serving-path traffic benchmarks: the bucketed image server's
+per-request HBM economics at paper scale (account-only mode, so the
+full VGG16/224x224 geometry is measurable without running the
+interpret-mode kernel)."""
+
+from __future__ import annotations
+
+
+def bench_serve_traffic():
+    """16 mixed-size requests (32 images) through the bucketed server
+    at the paper's 1 MiB accounting budget: distance to Eq. (15),
+    weight amortization vs per-image dispatch, and the serving-horizon
+    ratio (weights amortized over every image the plans served)."""
+    import jax
+
+    from repro.models.cnn import init_vgg
+    from repro.serve import ImageServer
+
+    params = init_vgg(jax.random.PRNGKey(0), n_classes=10,
+                      width_mult=1.0)
+    t = [0.0]
+    server = ImageServer(params, 224, 224, compute=False,
+                         clock=lambda: t[0], wait_budget=0.05)
+    # FIFO-packs into four full 8-buckets (the steady-traffic regime)
+    for n in (1, 2, 1, 4, 2, 1, 1, 4, 2, 1, 3, 2, 1, 2, 4, 1):
+        server.submit(n_images=n, now=t[0])
+    server.poll(now=t[0])
+    server.drain(now=t[0])
+    s = server.ledger.summary()
+    rows = [
+        ("serve/vgg16_mixed16/vs_bound_x", 0.0,
+         round(s["vs_bound_x"], 3)),
+        ("serve/vgg16_mixed16/w_amortization_x", 0.0,
+         round(s["w_amortization_x"], 2)),
+        ("serve/vgg16_mixed16/vs_serving_x", 0.0,
+         round(s["vs_serving_x"], 3)),
+        ("serve/vgg16_mixed16/MB_per_image", 0.0,
+         round(s["bytes_per_image"] / 1e6, 1)),
+        ("serve/vgg16_mixed16/dispatches", 0.0, s["dispatches"]),
+    ]
+
+    # tail scenario: a lone odd-size request flushed on deadline — the
+    # padding cost the bucket ladder charges a partial dispatch
+    t2 = [0.0]
+    tail = ImageServer(params, 224, 224, compute=False,
+                       clock=lambda: t2[0], wait_budget=0.05)
+    tail.submit(n_images=3, now=0.0)
+    t2[0] = 0.1                              # past the wait budget
+    tail.poll(now=t2[0])
+    st = tail.ledger.summary()
+    rows.append(("serve/vgg16_partial3of4/vs_bound_x", 0.0,
+                 round(st["vs_bound_x"], 3)))
+    rows.append(("serve/vgg16_partial3of4/padded_images", 0.0,
+                 st["padded_images"]))
+    return rows
+
+
+ALL_SERVE = [bench_serve_traffic]

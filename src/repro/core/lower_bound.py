@@ -63,6 +63,23 @@ def q_dram_practical(layer: ConvLayer, s: int) -> float:
     return max(read + write, q_dram_ideal(layer))
 
 
+def q_dram_serving(layer: ConvLayer, s: int, *, requests: int) -> float:
+    """Serving-horizon Eq. (15): per-image attainable bound when one
+    plan serves ``requests`` images over its lifetime.
+
+    The bound is over output elements u = B*Ho*Wo, so a serving horizon
+    of n images through the same compiled plan is just the layer at
+    batch = n: the MAC/sqrt(R*S) term and |outputs| scale per image,
+    while the once-per-word weight floor inside ``q_dram_ideal``
+    amortizes 1/n — the number a bucketed server should be judged
+    against, since its weights are resident across requests rather than
+    re-justified per dispatch.  Returns words *per image*.
+    """
+    n = max(1, int(requests))
+    horizon = dataclasses.replace(layer, batch=n)
+    return q_dram_practical(horizon, s) / n
+
+
 def q_dram_naive(layer: ConvLayer) -> float:
     """No-reuse implementation: 2 accesses per MAC (Sec. III-B)."""
     return 2.0 * layer.macs

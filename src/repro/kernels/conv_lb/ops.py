@@ -70,7 +70,10 @@ class ConvPlan:
     """Concrete grid/padding geometry for one conv_lb_call.
 
     Shared between the wrapper and the traffic accountant so the bytes
-    we account are the bytes the kernel moves — by construction."""
+    we account are the bytes the kernel moves — by construction.
+    :meth:`traffic` surfaces the per-plan HBM volume directly to
+    callers (the serve-path ledger charges requests off plan handles
+    built with this machinery, normalized to its accounting budget)."""
 
     blocks: ConvBlockShape
     ho: int            # true output dims
@@ -83,6 +86,8 @@ class ConvPlan:
     co_pad: int
     stride: tuple[int, int]
     dilation: tuple[int, int]
+    hk: int            # kernel extent (accounting needs the w panel)
+    wk: int
     pool: int = 1      # fused epilogue max-pool window (1 = none)
 
     @property
@@ -93,6 +98,22 @@ class ConvPlan:
                 self.wo_pad // self.blocks.x,
                 self.co_pad // self.blocks.co,
                 self.ci_pad // self.blocks.ci)
+
+    def traffic(self, batch: int) -> Traffic:
+        """HBM words this plan moves for one group at ``batch`` images
+        (the batch extent is not plan state: the same memoized plan
+        serves every arrival batch that shares a ``b_block`` bucket)."""
+        return _blocks_traffic(batch, self.blocks, self.hk, self.wk,
+                               self.ho, self.wo, self.ci_pad,
+                               self.co_pad, self.pool)
+
+    def traffic_bytes(self, batch: int, dtype_bytes: int = 4) -> float:
+        return self.traffic(batch).total * dtype_bytes
+
+    def footprint_elems(self) -> int:
+        """Realized on-chip words S (the paper-model footprint the
+        Eq. (15) comparisons are evaluated at)."""
+        return self.blocks.footprint_elems(self.hk, self.wk)
 
 
 def _blocks_traffic(batch: int, blk: ConvBlockShape, hk: int, wk: int,
@@ -254,7 +275,8 @@ def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
                     hp_pad=max(hp, (ho_pad - 1) * sy + ekh),
                     wp_pad=max(wp, (wo_pad - 1) * sx + ekw),
                     ci_pad=round_up(ci, cib), co_pad=round_up(co, cob),
-                    stride=(sy, sx), dilation=(dy, dx), pool=pool)
+                    stride=(sy, sx), dilation=(dy, dx), pool=pool,
+                    hk=hk, wk=wk)
 
 
 def _pad_axis(a, axis, target):
@@ -431,8 +453,7 @@ def conv_lb_traffic(batch: int, h: int, w: int, ci: int, co: int,
             raise ValueError(f"plan tiles {plan.blocks.y}x{plan.blocks.x}"
                              f" are not pool={pool} aligned")
         plan = dataclasses.replace(plan, pool=pool)
-    t = _blocks_traffic(batch, plan.blocks, hk, wk, plan.ho, plan.wo,
-                        plan.ci_pad, plan.co_pad, plan.pool)
+    t = plan.traffic(batch)
     t = Traffic(reads_in=t.reads_in * groups,
                 reads_w=t.reads_w * groups,
                 reads_out=0.0,
@@ -440,7 +461,14 @@ def conv_lb_traffic(batch: int, h: int, w: int, ci: int, co: int,
     return t, plan
 
 
-def conv_lb_traffic_bytes(*args, dtype_bytes: int = 4, **kw) -> float:
-    """Total HBM bytes moved (all tensors at ``dtype_bytes``)."""
+def conv_lb_traffic_bytes(*args, dtype=None, dtype_bytes: int | None = None,
+                          **kw) -> float:
+    """Total HBM bytes moved (all tensors at one word size).
+
+    The word size comes from ``dtype`` (anything ``jnp.dtype`` accepts,
+    e.g. ``jnp.bfloat16`` for bf16 serving) when given; an explicit
+    ``dtype_bytes`` overrides it; with neither, f32 words."""
+    if dtype_bytes is None:
+        dtype_bytes = jnp.dtype(dtype).itemsize if dtype is not None else 4
     t, _ = conv_lb_traffic(*args, dtype_bytes=dtype_bytes, **kw)
     return t.total * dtype_bytes

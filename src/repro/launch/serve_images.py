@@ -1,0 +1,83 @@
+"""Batched image-serving driver (the CNN counterpart of serve.py).
+
+Feeds a stream of mixed-size classification requests through the
+bucketed :class:`repro.serve.ImageServer` and prints the per-request
+traffic ledger: bytes/image, distance to the Eq. (15) bound at the
+accounting budget, and the weight-read amortization the bucketing
+bought vs per-image dispatch.
+
+  # real compute on a reduced-width stack (interpret-mode kernel):
+  PYTHONPATH=src python -m repro.launch.serve_images \
+      --width-mult 0.08 --image 16 --requests 6
+
+  # paper-scale serving economics (no compute, milliseconds):
+  PYTHONPATH=src python -m repro.launch.serve_images \
+      --account-only --width-mult 1.0 --image 224 --requests 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.models.cnn import init_vgg
+from repro.serve import ImageServer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--width-mult", type=float, default=0.08)
+    ap.add_argument("--image", type=int, default=16,
+                    help="square image edge")
+    ap.add_argument("--classes", type=int, default=10)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--buckets", type=int, nargs="+",
+                    default=[1, 2, 4, 8])
+    ap.add_argument("--wait-ms", type=float, default=20.0,
+                    help="deadline flush budget for partial buckets")
+    ap.add_argument("--budget-kib", type=int, default=1024,
+                    help="on-chip accounting budget (ledger scale)")
+    ap.add_argument("--account-only", action="store_true",
+                    help="plan + account without executing pipelines")
+    ap.add_argument("--no-kernel", action="store_true",
+                    help="run the lax fallback instead of the "
+                         "Pallas kernel path")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(args.seed)
+    params = init_vgg(key, n_classes=args.classes,
+                      width_mult=args.width_mult)
+    server = ImageServer(params, args.image, args.image,
+                         buckets=args.buckets,
+                         wait_budget=args.wait_ms / 1e3,
+                         account_budget=args.budget_kib * 1024,
+                         use_kernel=not args.no_kernel,
+                         compute=not args.account_only)
+
+    max_req = max(1, min(4, max(args.buckets)))
+    t0 = time.time()
+    results = []
+    for rid in range(args.requests):
+        k = jax.random.fold_in(key, 1000 + rid)
+        n = 1 + int(jax.random.randint(k, (), 0, max_req))
+        if args.account_only:
+            server.submit(n_images=n)
+        else:
+            server.submit(jax.random.normal(k, (n, args.image,
+                                                args.image, 3)))
+        results += server.poll()
+    results += server.drain()
+    dt = time.time() - t0
+
+    s = server.ledger.summary()
+    print(server.ledger.format_summary())
+    print(f"stats: {server.stats}")
+    print(f"served {s['requests']} requests / {s['images']} images in "
+          f"{dt:.2f}s ({s['images'] / max(dt, 1e-9):.1f} img/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,7 @@ signal ~sqrt(2)^13 ~= 90x and training plateaus at the entropy floor
 
 from __future__ import annotations
 
+import dataclasses
 import math
 
 import jax
@@ -51,36 +52,114 @@ def init_vgg(key, n_classes: int = 10, width_mult: float = 1.0,
 _POOL_AFTER = {"conv1_2", "conv2_2", "conv3_3", "conv4_3", "conv5_3"}
 
 
+@dataclasses.dataclass(frozen=True)
+class ConvStage:
+    """One conv layer of the stack as the forward pass will execute it
+    for a given input-plane geometry (the single source of truth shared
+    by :func:`vgg_forward` and the serve-path traffic accounting)."""
+
+    name: str
+    ci: int
+    co: int
+    h: int             # input plane entering this layer
+    w: int
+    pool: bool         # a 2x2 maxpool follows this layer
+    fused_pool: bool   # ... and the kernel path fuses it in-epilogue
+
+
+def vgg_conv_geometry(params, h: int, w: int,
+                      in_ch: int = 3) -> list[ConvStage]:
+    """Walk the conv stack for an (h, w, in_ch) image.
+
+    Channel counts come from the param shapes (params may be built with
+    any ``width_mult``; reduced-width smoke configs may truncate the
+    stack at the first channel mismatch), plane sizes from the pool
+    cadence — exactly the layers/epilogues ``vgg_forward`` will run, so
+    plans and traffic charged off this walk match the executed jaxpr.
+    """
+    stages = []
+    for p, (name, *_rest) in zip(params["convs"], _CFG):
+        ci, co = int(p["w"].shape[2]), int(p["w"].shape[3])
+        if in_ch != ci:
+            break
+        pool = name in _POOL_AFTER and h >= 2 and w >= 2
+        # the fused epilogue needs pool-aligned planes; odd dims take
+        # the (rare) unfused pool after the fused conv+bias+relu
+        fused = pool and h % 2 == 0 and w % 2 == 0
+        stages.append(ConvStage(name=name, ci=ci, co=co, h=h, w=w,
+                                pool=pool, fused_pool=fused))
+        if pool:
+            h, w = h // 2, w // 2
+        in_ch = co
+    return stages
+
+
+def vgg_conv_layers_for(params, h: int, w: int, *, batch: int,
+                        in_ch: int = 3):
+    """The stack as :class:`repro.core.layer.ConvLayer` workloads at an
+    arrival batch — the analytic side of the serve ledger."""
+    from repro.core.layer import ConvLayer
+
+    return [ConvLayer(name=g.name, batch=batch, ci=g.ci, co=g.co,
+                      hi=g.h, wi=g.w, hk=3, wk=3, stride=1, pad=1)
+            for g in vgg_conv_geometry(params, h, w, in_ch)]
+
+
+def vgg_plan_handles(params, h: int, w: int, *, batch: int,
+                     in_ch: int = 3, dtype_bytes: int = 4,
+                     vmem_budget: int | None = None):
+    """Exported plan handles: [(ConvLayer, ConvPlan)] per conv stage at
+    this arrival batch, from the same memoized ``plan_conv`` cache the
+    kernel path's jit trace resolves against — one planning pass per
+    (bucket, layer-geometry), then every dispatch reuses the handle.
+
+    ``vmem_budget=None`` yields the kernel's own execution plans; an
+    explicit budget (e.g. the paper's 1 MiB GBuf scale) yields the
+    accounting plans the ledger scores distance-to-bound with.
+    """
+    from repro.core.layer import ConvLayer
+    from repro.kernels.conv_lb.ops import plan_conv
+
+    handles = []
+    for g in vgg_conv_geometry(params, h, w, in_ch):
+        layer = ConvLayer(name=g.name, batch=batch, ci=g.ci, co=g.co,
+                          hi=g.h, wi=g.w, hk=3, wk=3, stride=1, pad=1)
+        plan = plan_conv(g.h, g.w, g.ci, g.co, 3, 3, batch=batch,
+                         stride=(1, 1), padding=(1, 1),
+                         pool=2 if g.fused_pool else 1,
+                         dtype_bytes=dtype_bytes,
+                         vmem_budget=vmem_budget)
+        handles.append((layer, plan))
+    return handles
+
+
 def vgg_forward(params, images, use_kernel: bool = False):
     """images: (B, H, W, 3) -> logits (B, n_classes).
 
-    With ``use_kernel`` the conv layers run the batch-folded Pallas
-    kernel with the bias/relu/(2x2 maxpool) epilogue *fused*: each
-    layer issues a single HBM output write instead of the unfused
+    Batch-polymorphic: the kernel path re-plans (memoized) per arrival
+    batch, so a serving bucket of b images folds straight into the
+    kernel's ``b_block`` tiling dimension.  With ``use_kernel`` the
+    conv layers run the batch-folded Pallas kernel with the
+    bias/relu/(2x2 maxpool) epilogue *fused*: each layer issues a
+    single HBM output write instead of the unfused
     ``conv-write -> read -> bias/relu/pool -> write`` round trip."""
     if use_kernel:
         from repro.kernels.conv_lb.ops import conv2d_lb as conv_fn
     else:
         conv_fn = None
     h = images
-    # zip on layer *names* only: params may be built with any
-    # width_mult, so channel counts come from the param shapes
-    for p, (name, *_rest) in zip(params["convs"], _CFG):
-        if h.shape[-1] != p["w"].shape[2]:
-            break  # reduced-width smoke configs may truncate the stack
-        pool = name in _POOL_AFTER and h.shape[1] >= 2 and h.shape[2] >= 2
-        # the fused epilogue needs pool-aligned planes; odd dims take
-        # the (rare) unfused pool after the fused conv+bias+relu
-        fuse_pool = pool and h.shape[1] % 2 == 0 and h.shape[2] % 2 == 0
+    stages = vgg_conv_geometry(params, images.shape[1], images.shape[2],
+                               images.shape[3])
+    for p, g in zip(params["convs"], stages):
         if conv_fn is not None:
             h = conv_fn(h, p["w"], p["b"], padding=1, relu=True,
-                        pool=2 if fuse_pool else 1)
+                        pool=2 if g.fused_pool else 1)
         else:
             h = jax.lax.conv_general_dilated(
                 h, p["w"], window_strides=(1, 1), padding="SAME",
                 dimension_numbers=("NHWC", "HWIO", "NHWC"))
             h = jax.nn.relu(h + p["b"])
-        if pool and not (fuse_pool and conv_fn is not None):
+        if g.pool and not (g.fused_pool and conv_fn is not None):
             h = jax.lax.reduce_window(
                 h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
                 (1, 2, 2, 1), "VALID")

@@ -1,0 +1,11 @@
+"""Batched image-serving subsystem (bucketed admission + per-request
+HBM-traffic accounting over the paper-dataflow conv kernel)."""
+
+from repro.serve.bucketing import (DEFAULT_BUCKETS, AdmissionQueue,
+                                   ImageRequest, bucket_for)
+from repro.serve.ledger import RequestCharge, TrafficLedger
+from repro.serve.server import ImageServer, ServeResult
+
+__all__ = ["DEFAULT_BUCKETS", "AdmissionQueue", "ImageRequest",
+           "bucket_for", "RequestCharge", "TrafficLedger",
+           "ImageServer", "ServeResult"]

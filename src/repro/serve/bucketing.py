@@ -1,0 +1,122 @@
+"""Bucketed admission for the batched image server.
+
+The batch-folded conv plans (PR 2) are memoized per (batch, layer
+geometry): every distinct arrival batch costs a plan search and a jit
+trace.  Admission therefore *buckets*: arrival batches are padded up
+to a small ladder of plan-friendly batch sizes (default {1, 2, 4, 8}),
+so the steady state touches only ``len(buckets)`` compiled pipelines
+and every ``plan_conv`` lookup is a cache hit.
+
+Policy (FIFO, head-of-line order preserved):
+
+  * requests queue in arrival order; a dispatch group is the longest
+    FIFO prefix whose image total fits the largest bucket;
+  * a group dispatches immediately once it is *maximal* — its total
+    hits the largest bucket, or the next pending request would
+    overflow it (waiting cannot improve a FIFO prefix that can no
+    longer grow);
+  * otherwise the group waits for more arrivals until the oldest
+    pending request has waited past ``wait_budget`` seconds, then the
+    partial group is flushed and padded up to the smallest covering
+    bucket (deadline-aware flush: tail latency is bounded by
+    ``wait_budget`` + one pipeline execution).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Deque, Sequence
+
+DEFAULT_BUCKETS = (1, 2, 4, 8)
+
+
+def bucket_for(n_images: int, buckets: Sequence[int] = DEFAULT_BUCKETS
+               ) -> int:
+    """Smallest bucket covering ``n_images`` (the padding target)."""
+    for b in sorted(buckets):
+        if n_images <= b:
+            return b
+    raise ValueError(f"{n_images} images exceed the largest bucket "
+                     f"{max(buckets)}; split the request on submit")
+
+
+@dataclasses.dataclass
+class ImageRequest:
+    """One inference request: ``n_images`` images classified together.
+
+    ``images`` is the (n_images, H, W, C) payload, or None in
+    account-only serving (planning + ledger without compute)."""
+
+    rid: int
+    n_images: int
+    arrival: float
+    images: Any = None
+    done: float | None = None        # dispatch-completion timestamp
+
+    @property
+    def latency(self) -> float:
+        return 0.0 if self.done is None else self.done - self.arrival
+
+
+class AdmissionQueue:
+    """FIFO queue with bucketed, deadline-aware group formation."""
+
+    def __init__(self, buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 wait_budget: float = 0.02):
+        if not buckets:
+            raise ValueError("need at least one bucket size")
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        self.wait_budget = float(wait_budget)
+        self.pending: Deque[ImageRequest] = deque()
+
+    @property
+    def max_bucket(self) -> int:
+        return self.buckets[-1]
+
+    @property
+    def depth(self) -> int:
+        return len(self.pending)
+
+    def submit(self, req: ImageRequest) -> None:
+        if req.n_images < 1:
+            raise ValueError("empty request")
+        if req.n_images > self.max_bucket:
+            raise ValueError(f"request of {req.n_images} images exceeds "
+                             f"the largest bucket {self.max_bucket}")
+        self.pending.append(req)
+
+    def _prefix(self) -> tuple[int, int]:
+        """(count, images) of the longest FIFO prefix fitting the
+        largest bucket."""
+        count = total = 0
+        for r in self.pending:
+            if total + r.n_images > self.max_bucket:
+                break
+            total += r.n_images
+            count += 1
+        return count, total
+
+    def _pop(self, count: int, total: int
+             ) -> tuple[list[ImageRequest], int]:
+        group = [self.pending.popleft() for _ in range(count)]
+        return group, bucket_for(total, self.buckets)
+
+    def pop_ready(self, now: float
+                  ) -> tuple[list[ImageRequest], int] | None:
+        """The next dispatchable (group, bucket), or None to keep
+        waiting.  Call repeatedly until None to drain all ready work."""
+        if not self.pending:
+            return None
+        count, total = self._prefix()
+        maximal = (total == self.max_bucket
+                   or count < len(self.pending))
+        if maximal or now - self.pending[0].arrival >= self.wait_budget:
+            return self._pop(count, total)
+        return None
+
+    def flush(self) -> tuple[list[ImageRequest], int] | None:
+        """Force the next group out regardless of deadline (drain)."""
+        if not self.pending:
+            return None
+        return self._pop(*self._prefix())

@@ -1,0 +1,237 @@
+"""Per-request HBM-traffic ledger for the batched image server.
+
+Every dispatch moves a knowable number of HBM bytes:
+:meth:`ConvPlan.traffic` gives the exact per-BlockSpec volume of a
+plan, analytically — no sampling, no counters.  The charged plans are
+the server's *accounting* handles, normalized to one on-chip budget
+(default: the paper's 1 MiB GBuf), so numbers are comparable across
+dtypes/buckets and meaningful even in account-only or fallback
+serving; the executed kernel plans at its own VMEM default, so the
+ledger is a budget-normalized model of the dispatch, not a counter on
+the compiled binary.  Each request in a dispatch group is charged its
+image-proportional share (padding waste is borne by the real
+requests: a half-empty bucket shows up as a worse per-request number,
+which is the point).
+
+Three observables per request / per horizon:
+
+  * ``vs_bound_x``     — accounted bytes vs Eq. (15) at the realized
+                         plan footprints (the paper's "Lower bound"
+                         curves, paid per dispatch batch);
+  * ``w_amortization_x`` — accounted weight bytes per image vs the
+                         pre-batch-fold per-image planner (b_block=1,
+                         closed form): how much of the batch-reuse
+                         term of Eq. (14) the bucketing recovered;
+  * ``vs_serving_x``   — accounted bytes vs the serving-horizon bound
+                         :func:`repro.core.lower_bound.q_dram_serving`
+                         (weights amortized over every image the plan
+                         served), the steady-state distance-to-bound.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Sequence
+
+from repro.core.lower_bound import q_dram_practical, q_dram_serving
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestCharge:
+    """One request's share of one dispatch's accounted traffic."""
+
+    rid: int
+    images: int
+    bucket: int
+    group_images: int          # real images in the dispatch group
+    bytes_total: float
+    bytes_weights: float
+    bound_bytes: float         # Eq. (15) share at the dispatch batch
+    latency_s: float = 0.0
+
+    @property
+    def vs_bound_x(self) -> float:
+        return self.bytes_total / max(self.bound_bytes, 1e-30)
+
+
+@dataclasses.dataclass
+class _GeometryTally:
+    """Per layer-stack-geometry running totals (horizon accounting).
+
+    Footprints are tracked per bucket (plans differ across dispatch
+    batches), while images amortize jointly across buckets — the
+    weights are the same params whichever bucket served them."""
+
+    layers_b1: list            # ConvLayer at batch=1, per stage
+    footprints: dict = dataclasses.field(default_factory=dict)
+    #                          # bucket -> realized S per stage
+    images_by_bucket: dict = dataclasses.field(default_factory=dict)
+    baseline_w_words: float | None = None   # per-image, b_block=1 plan
+
+    @property
+    def images(self) -> int:
+        return sum(self.images_by_bucket.values())
+
+
+class TrafficLedger:
+    """Charges dispatches to requests; summarizes distance-to-bound.
+
+    ``vmem_budget`` is the accounting scale (default: the paper's
+    1 MiB GBuf), used only for the per-image baseline plans — measured
+    traffic always comes from the dispatch's own plan handles.
+
+    Byte/bound totals are running aggregates, so a long-serving ledger
+    stays O(1); per-request :class:`RequestCharge` records are kept in
+    a bounded window of the most recent ``keep_charges`` (latency
+    percentiles in :meth:`summary` are over that window).
+    """
+
+    def __init__(self, *, vmem_budget: int = 1 << 20,
+                 dtype_bytes: int = 4, keep_charges: int = 4096):
+        self.vmem_budget = int(vmem_budget)
+        self.dtype_bytes = int(dtype_bytes)
+        self.charges: deque[RequestCharge] = deque(maxlen=keep_charges)
+        self.dispatches = 0
+        self.padded_images = 0
+        self._geos: dict[tuple, _GeometryTally] = {}
+        self._sum_bytes = self._sum_w = self._sum_bound = 0.0
+        self._n_requests = self._n_images = 0
+
+    # -- charging ----------------------------------------------------------
+
+    @staticmethod
+    def _geo_key(handles) -> tuple:
+        return tuple((l.name, l.hi, l.wi, l.ci, l.co, l.hk, l.wk,
+                      l.stride, l.pad) for l, _ in handles)
+
+    def _tally(self, handles, bucket: int) -> _GeometryTally:
+        key = self._geo_key(handles)
+        if key not in self._geos:
+            self._geos[key] = _GeometryTally(
+                layers_b1=[dataclasses.replace(l, batch=1)
+                           for l, _ in handles])
+        tally = self._geos[key]
+        tally.footprints.setdefault(
+            bucket, [p.footprint_elems() for _, p in handles])
+        return tally
+
+    def charge_batch(self, entries: Sequence[tuple[int, int]], handles,
+                     *, bucket: int,
+                     latencies: dict[int, float] | None = None
+                     ) -> list[RequestCharge]:
+        """Account one dispatch: ``entries`` is [(rid, n_images)] for
+        the real requests in the group, ``handles`` the
+        [(ConvLayer, ConvPlan)] pairs at batch == ``bucket`` the
+        pipeline executed."""
+        n_real = sum(n for _, n in entries)
+        if n_real < 1 or n_real > bucket:
+            raise ValueError(f"group of {n_real} images in a "
+                             f"bucket-{bucket} dispatch")
+        total_w = total_all = bound_w = 0.0
+        for layer, plan in handles:
+            t = plan.traffic(bucket)
+            total_all += t.total
+            total_w += t.reads_w
+            bound_w += q_dram_practical(layer, plan.footprint_elems())
+        db = self.dtype_bytes
+        tally = self._tally(handles, bucket)
+        tally.images_by_bucket[bucket] = (
+            tally.images_by_bucket.get(bucket, 0) + n_real)
+        self.dispatches += 1
+        self.padded_images += bucket - n_real
+        out = []
+        for rid, n in entries:
+            charge = RequestCharge(
+                rid=rid, images=n, bucket=bucket, group_images=n_real,
+                bytes_total=total_all * db * n / n_real,
+                bytes_weights=total_w * db * n / n_real,
+                bound_bytes=bound_w * db * n / bucket,
+                latency_s=(latencies or {}).get(rid, 0.0))
+            self.charges.append(charge)
+            self._sum_bytes += charge.bytes_total
+            self._sum_w += charge.bytes_weights
+            self._sum_bound += charge.bound_bytes
+            self._n_requests += 1
+            self._n_images += n
+            out.append(charge)
+        return out
+
+    # -- baselines & summary -----------------------------------------------
+
+    def _baseline_w_words(self, tally: _GeometryTally) -> float:
+        """Per-image weight words of the pre-batch-fold schedule: the
+        closed-form per-image planner (b_block=1) PR 2 measured its
+        >=4x batch-reuse win against — 'batch=1 dispatch'."""
+        if tally.baseline_w_words is None:
+            from repro.kernels.conv_lb.ops import plan_conv
+            words = 0.0
+            for layer in tally.layers_b1:
+                plan = plan_conv(layer.hi, layer.wi, layer.ci, layer.co,
+                                 layer.hk, layer.wk, batch=1,
+                                 stride=(layer.stride,) * 2,
+                                 padding=(layer.pad,) * 2,
+                                 dtype_bytes=self.dtype_bytes,
+                                 vmem_budget=self.vmem_budget,
+                                 autotune=False)
+                words += plan.traffic(1).reads_w
+            tally.baseline_w_words = words
+        return tally.baseline_w_words
+
+    @property
+    def total_bytes(self) -> float:
+        return self._sum_bytes
+
+    @property
+    def total_images(self) -> int:
+        return self._n_images
+
+    def summary(self) -> dict:
+        if not self._n_requests:
+            return {"requests": 0, "images": 0, "dispatches": 0}
+        images = self._n_images
+        total = self._sum_bytes
+        weights = self._sum_w
+        bound = self._sum_bound
+        db = self.dtype_bytes
+        baseline_w = horizon = 0.0
+        for tally in self._geos.values():
+            baseline_w += self._baseline_w_words(tally) * tally.images
+            # weights amortize over the geometry's whole horizon, but
+            # each bucket's images are bounded at that bucket's plan
+            # footprints (deterministic in arrival order)
+            for bucket, n_imgs in sorted(tally.images_by_bucket.items()):
+                horizon += sum(
+                    q_dram_serving(layer, s, requests=tally.images)
+                    for layer, s in zip(tally.layers_b1,
+                                        tally.footprints[bucket])
+                ) * n_imgs
+        lat = sorted(c.latency_s for c in self.charges)
+        return {
+            "requests": self._n_requests,
+            "images": images,
+            "dispatches": self.dispatches,
+            "padded_images": self.padded_images,
+            "bytes_per_image": total / images,
+            "weight_bytes_per_image": weights / images,
+            "vs_bound_x": total / max(bound, 1e-30),
+            "w_amortization_x": baseline_w * db / max(weights, 1e-30),
+            "vs_serving_x": total / max(horizon * db, 1e-30),
+            "p50_latency_s": lat[len(lat) // 2],
+            "max_latency_s": lat[-1],
+        }
+
+    def format_summary(self) -> str:
+        s = self.summary()
+        if not s["requests"]:
+            return "ledger: no traffic charged"
+        return (f"ledger: {s['requests']} req / {s['images']} img in "
+                f"{s['dispatches']} dispatches (+{s['padded_images']} pad)\n"
+                f"  {s['bytes_per_image'] / 1e6:.2f} MB/img "
+                f"({s['weight_bytes_per_image'] / 1e6:.2f} MB weights)\n"
+                f"  vs Eq.(15) bound     {s['vs_bound_x']:.3f}x\n"
+                f"  weight amortization  {s['w_amortization_x']:.2f}x "
+                f"vs per-image dispatch\n"
+                f"  vs serving horizon   {s['vs_serving_x']:.3f}x\n"
+                f"  latency p50/max      {s['p50_latency_s'] * 1e3:.1f}/"
+                f"{s['max_latency_s'] * 1e3:.1f} ms")

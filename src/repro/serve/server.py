@@ -1,0 +1,214 @@
+"""Batched CNN inference server over the paper-dataflow conv kernel.
+
+Rides ``vgg_forward(use_kernel=True)`` end to end: bucketed admission
+(:mod:`repro.serve.bucketing`) pads arrival batches to a plan-friendly
+bucket ladder, a per-bucket plan + jit cache makes every steady-state
+dispatch hit a compiled fused-epilogue VGG pipeline whose conv
+``b_block`` tiling tracks the bucket (the batch-reuse term of
+Eq. (14)/(15) is only attainable when the kernel folds the *actual*
+arrival batch), and a per-request traffic ledger
+(:mod:`repro.serve.ledger`) charges each request its share of the
+accounted ``conv_lb_traffic`` bytes.
+
+Two costs are cached independently and paid once per bucket:
+
+  * *planning* — ``plan_conv`` is memoized on (batch, layer geometry),
+    so bucket b's 13-layer plan search runs once per process;
+  * *tracing*  — one ``jax.jit`` pipeline per bucket; padded dispatch
+    shapes are always (bucket, H, W, C), so no retraces in steady
+    state (``stats["traces"]`` counts them; watch it stay flat).
+
+``compute=False`` runs the whole serving loop — admission, bucketing,
+planning, ledger — without executing the pipelines (account-only
+mode): full-scale VGG16/224x224 serving economics are measurable in
+milliseconds, which is how the benchmarks and acceptance tests drive
+the paper-scale geometry the interpret-mode kernel could never run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cnn import vgg_forward, vgg_plan_handles
+from repro.serve.bucketing import (DEFAULT_BUCKETS, AdmissionQueue,
+                                   ImageRequest)
+from repro.serve.ledger import RequestCharge, TrafficLedger
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """One completed request: logits per image + its traffic charge."""
+
+    rid: int
+    logits: Any                # (n_images, n_classes) or None
+    charge: RequestCharge
+    latency_s: float
+
+
+class ImageServer:
+    """Bucketed, ledger-accounted VGG image-classification server.
+
+    ``params`` come from :func:`repro.models.cnn.init_vgg`; every
+    request carries 1..max(buckets) images of the fixed
+    ``(h, w, in_ch)`` serving geometry.  ``account_budget`` is the
+    on-chip scale the ledger scores distance-to-bound at (default: the
+    paper's 1 MiB GBuf); execution plans use the kernel's own VMEM
+    default regardless.
+    """
+
+    def __init__(self, params, h: int, w: int, in_ch: int = 3, *,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 wait_budget: float = 0.02,
+                 account_budget: int = 1 << 20,
+                 dtype=jnp.float32,
+                 use_kernel: bool = True,
+                 compute: bool = True,
+                 keep_results: int = 1024,
+                 clock=time.monotonic):
+        self.params = params
+        self.h, self.w, self.in_ch = int(h), int(w), int(in_ch)
+        self.use_kernel = bool(use_kernel)
+        self.compute = bool(compute)
+        self.dtype = jnp.dtype(dtype)
+        self.account_budget = int(account_budget)
+        self._clock = clock
+        self.queue = AdmissionQueue(buckets, wait_budget)
+        self.ledger = TrafficLedger(vmem_budget=account_budget,
+                                    dtype_bytes=self.dtype.itemsize)
+        self._handles: dict[int, list] = {}
+        self._pipelines: dict[int, Any] = {}
+        # bounded lookup of recent results (insertion-ordered dict,
+        # oldest evicted past keep_results): dispatch return values are
+        # the durable hand-off, this is a convenience window — a
+        # long-serving process must not pin every logits array alive
+        self.keep_results = int(keep_results)
+        self.results: dict[int, ServeResult] = {}
+        self.stats = {"dispatches": 0, "traces": 0, "pipeline_hits": 0,
+                      "plan_hits": 0}
+        self._next_rid = 0
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, images=None, *, n_images: int | None = None,
+               now: float | None = None) -> int:
+        """Enqueue one request; returns its rid.
+
+        ``images``: (n, H, W, C) or (H, W, C); account-only servers may
+        pass ``n_images`` alone."""
+        now = self._clock() if now is None else now
+        if images is None:
+            if self.compute:
+                raise ValueError("compute servers need image payloads")
+            n = 1 if n_images is None else int(n_images)
+        else:
+            images = jnp.asarray(images, self.dtype)
+            if images.ndim == 3:
+                images = images[None]
+            if images.shape[1:] != (self.h, self.w, self.in_ch):
+                raise ValueError(f"expected (*, {self.h}, {self.w}, "
+                                 f"{self.in_ch}) images, got "
+                                 f"{images.shape}")
+            n = int(images.shape[0])
+            if n_images is not None and n_images != n:
+                raise ValueError("n_images disagrees with payload")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.submit(ImageRequest(rid=rid, n_images=n, arrival=now,
+                                       images=images))
+        return rid
+
+    # -- bucket caches -----------------------------------------------------
+
+    def plan_handles(self, bucket: int):
+        """The (ConvLayer, ConvPlan) accounting handles for a bucket —
+        planned once, then served from the per-bucket cache."""
+        if bucket not in self._handles:
+            self._handles[bucket] = vgg_plan_handles(
+                self.params, self.h, self.w, batch=bucket,
+                in_ch=self.in_ch, dtype_bytes=self.dtype.itemsize,
+                vmem_budget=self.account_budget)
+        else:
+            self.stats["plan_hits"] += 1
+        return self._handles[bucket]
+
+    def pipeline(self, bucket: int):
+        """The compiled (bucket, H, W, C) -> logits pipeline."""
+        if bucket in self._pipelines:
+            self.stats["pipeline_hits"] += 1
+            return self._pipelines[bucket]
+
+        def fwd(params, imgs):
+            self.stats["traces"] += 1        # bumped at trace time only
+            return vgg_forward(params, imgs, use_kernel=self.use_kernel)
+
+        self._pipelines[bucket] = jax.jit(fwd)
+        return self._pipelines[bucket]
+
+    def warm(self, buckets: Sequence[int] | None = None) -> None:
+        """Pre-plan (and pre-trace, when computing) the bucket ladder
+        so first-arrival latency doesn't eat the compile."""
+        for b in buckets or self.queue.buckets:
+            self.plan_handles(b)
+            if self.compute:
+                zeros = jnp.zeros((b, self.h, self.w, self.in_ch),
+                                  self.dtype)
+                jax.block_until_ready(self.pipeline(b)(self.params,
+                                                       zeros))
+
+    # -- dispatch ----------------------------------------------------------
+
+    def _dispatch(self, group: list[ImageRequest], bucket: int,
+                  now: float) -> list[ServeResult]:
+        logits = None
+        if self.compute:
+            payload = jnp.concatenate([r.images for r in group], axis=0)
+            pad = bucket - payload.shape[0]
+            if pad:
+                payload = jnp.pad(payload,
+                                  ((0, pad), (0, 0), (0, 0), (0, 0)))
+            logits = jax.block_until_ready(
+                self.pipeline(bucket)(self.params, payload))
+        # virtual clocks (tests) may stand still; never go backwards
+        done = max(self._clock(), now)
+        for r in group:
+            r.done = done
+        handles = self.plan_handles(bucket)
+        entries = [(r.rid, r.n_images) for r in group]
+        charges = self.ledger.charge_batch(
+            entries, handles, bucket=bucket,
+            latencies={r.rid: r.latency for r in group})
+        self.stats["dispatches"] += 1
+        results = []
+        off = 0
+        for r, charge in zip(group, charges):
+            sl = None if logits is None else logits[off:off + r.n_images]
+            off += r.n_images
+            res = ServeResult(rid=r.rid, logits=sl, charge=charge,
+                              latency_s=r.latency)
+            self.results[r.rid] = res
+            results.append(res)
+        while len(self.results) > self.keep_results:
+            self.results.pop(next(iter(self.results)))
+        return results
+
+    def poll(self, now: float | None = None) -> list[ServeResult]:
+        """Dispatch every ready group (full buckets immediately,
+        partial ones past the wait budget)."""
+        now = self._clock() if now is None else now
+        out = []
+        while (ready := self.queue.pop_ready(now)) is not None:
+            out.extend(self._dispatch(*ready, now=now))
+        return out
+
+    def drain(self, now: float | None = None) -> list[ServeResult]:
+        """Flush the queue to empty regardless of deadlines."""
+        now = self._clock() if now is None else now
+        out = []
+        while (ready := self.queue.flush()) is not None:
+            out.extend(self._dispatch(*ready, now=now))
+        return out

@@ -1,0 +1,367 @@
+"""Bucketed image-serving subsystem: admission, plan/jit caching,
+deadline flush, per-request traffic ledger, and the serving-scale
+acceptance numbers (Eq. (15) attainment + weight-read amortization).
+
+The paper-scale assertions run the server in account-only mode
+(planning + ledger without compute) so the full VGG16/224x224 serving
+geometry is exercised in milliseconds; the compute-path tests use a
+reduced-width stack on tiny images through the real interpret-mode
+kernel pipelines.
+"""
+
+import importlib.util
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.lower_bound import q_dram_practical, q_dram_serving
+from repro.core.vgg import vgg16_conv_layers
+from repro.kernels.conv_lb.ops import (conv_lb_traffic,
+                                       conv_lb_traffic_bytes, plan_conv)
+from repro.models.cnn import init_vgg, vgg_conv_geometry, vgg_plan_handles
+from repro.serve import AdmissionQueue, ImageRequest, ImageServer, bucket_for
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _load(path: Path):
+    spec = importlib.util.spec_from_file_location(path.stem, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# --------------------------------------------------------------------------
+# bucketed admission
+# --------------------------------------------------------------------------
+
+def test_bucket_for_ladder():
+    assert bucket_for(1) == 1
+    assert bucket_for(2) == 2
+    assert bucket_for(3) == 4
+    assert bucket_for(5) == 8
+    with pytest.raises(ValueError):
+        bucket_for(9, (1, 2, 4, 8))
+
+
+def test_full_bucket_dispatches_immediately():
+    q = AdmissionQueue(buckets=(1, 2, 4), wait_budget=10.0)
+    for rid, n in enumerate((1, 2, 1)):
+        q.submit(ImageRequest(rid=rid, n_images=n, arrival=0.0))
+    group, bucket = q.pop_ready(now=0.0)     # 1+2+1 == max bucket
+    assert bucket == 4
+    assert [r.rid for r in group] == [0, 1, 2]
+    assert q.pop_ready(now=0.0) is None      # queue drained
+
+
+def test_maximal_group_dispatches_without_waiting():
+    """FIFO prefix that can no longer grow (next request would
+    overflow) dispatches at once — waiting cannot improve it."""
+    q = AdmissionQueue(buckets=(1, 2, 4, 8), wait_budget=10.0)
+    q.submit(ImageRequest(rid=0, n_images=5, arrival=0.0))
+    q.submit(ImageRequest(rid=1, n_images=4, arrival=0.0))
+    group, bucket = q.pop_ready(now=0.0)
+    assert [r.rid for r in group] == [0]     # 5+4 > 8: head goes alone
+    assert bucket == 8                       # padded 5 -> 8
+    assert q.pop_ready(now=0.0) is None      # [4] waits for company
+
+
+def test_flush_on_deadline_dispatches_partial_bucket():
+    q = AdmissionQueue(buckets=(1, 2, 4, 8), wait_budget=0.05)
+    q.submit(ImageRequest(rid=0, n_images=3, arrival=0.0))
+    assert q.pop_ready(now=0.01) is None     # within the wait budget
+    group, bucket = q.pop_ready(now=0.06)    # oldest overdue: flush
+    assert [r.rid for r in group] == [0]
+    assert bucket == 4                       # smallest covering bucket
+
+
+def test_mixed_arrival_sizes_pad_to_right_bucket():
+    """Server-level: charges record the covering bucket and the ledger
+    counts the padding images the bucketing cost."""
+    params = init_vgg(jax.random.PRNGKey(0), n_classes=4,
+                      width_mult=0.05)
+    t = [0.0]
+    srv = ImageServer(params, 8, 8, compute=False, clock=lambda: t[0],
+                      wait_budget=0.05)
+    srv.submit(n_images=3, now=0.0)          # -> bucket 4, 1 pad
+    assert srv.poll(now=0.0) == []           # not overdue, not maximal
+    t[0] = 0.1
+    results = srv.poll(now=t[0])             # deadline flush: 3 -> 4
+    srv.submit(n_images=5, now=t[0])         # -> bucket 8, 3 pad
+    assert srv.poll(now=t[0]) == []
+    t[0] = 0.2
+    results += srv.poll(now=t[0])            # deadline flush: 5 -> 8
+    assert [r.charge.bucket for r in results] == [4, 8]
+    assert srv.ledger.padded_images == 4
+    # padding is charged to the real requests: the request's bytes are
+    # the whole dispatch's bytes (it is alone in its group)
+    for r, handles in zip(results, (srv.plan_handles(4),
+                                    srv.plan_handles(8))):
+        whole = sum(p.traffic(r.charge.bucket).total for _, p in handles)
+        assert r.charge.bytes_total == pytest.approx(whole * 4)
+
+
+def test_result_and_charge_retention_is_bounded():
+    """Long-serving processes: the results window and the ledger's
+    per-request records are bounded; aggregates keep counting."""
+    params = init_vgg(jax.random.PRNGKey(0), n_classes=4,
+                      width_mult=0.05)
+    t = [0.0]
+    srv = ImageServer(params, 8, 8, compute=False, clock=lambda: t[0],
+                      wait_budget=0.0, keep_results=2)
+    srv.ledger.charges = type(srv.ledger.charges)(maxlen=2)
+    rids = [srv.submit(n_images=1, now=0.0) for _ in range(5)]
+    srv.poll(now=0.0)
+    assert set(srv.results) == set(rids[-2:])   # oldest evicted
+    assert len(srv.ledger.charges) == 2
+    s = srv.ledger.summary()
+    assert s["requests"] == 5 and s["images"] == 5  # aggregates intact
+
+
+def test_oversized_request_rejected():
+    q = AdmissionQueue(buckets=(1, 2, 4), wait_budget=0.0)
+    with pytest.raises(ValueError):
+        q.submit(ImageRequest(rid=0, n_images=5, arrival=0.0))
+
+
+# --------------------------------------------------------------------------
+# per-bucket plan + jit cache (compute path, real kernel pipelines)
+# --------------------------------------------------------------------------
+
+def test_same_bucket_hits_plan_and_jit_cache():
+    """Second dispatch of the same bucket: no re-plan (plan_conv cache
+    untouched), no re-trace (trace counter flat), pipeline served from
+    the per-bucket cache."""
+    params = init_vgg(jax.random.PRNGKey(0), n_classes=4,
+                      width_mult=0.05)
+    srv = ImageServer(params, 8, 8, buckets=(2,), wait_budget=0.0)
+    key = jax.random.PRNGKey(1)
+    srv.submit(jax.random.normal(key, (2, 8, 8, 3)))
+    first = srv.poll()
+    assert len(first) == 1 and first[0].logits.shape == (2, 4)
+    assert srv.stats["traces"] == 1
+    misses0 = plan_conv.cache_info().misses
+    traces0 = srv.stats["traces"]
+    srv.submit(jax.random.normal(jax.random.fold_in(key, 1), (2, 8, 8, 3)))
+    second = srv.poll()
+    assert len(second) == 1 and second[0].logits.shape == (2, 4)
+    assert srv.stats["traces"] == traces0                  # no re-trace
+    assert plan_conv.cache_info().misses == misses0        # no re-plan
+    assert srv.stats["pipeline_hits"] >= 1
+    assert srv.stats["plan_hits"] >= 1
+    # different results for different inputs (the pipeline really ran)
+    assert not jnp.allclose(first[0].logits, second[0].logits)
+
+
+def test_kernel_and_fallback_pipelines_agree():
+    """The bucketed kernel pipeline computes the same logits as the
+    lax fallback server on identical inputs."""
+    params = init_vgg(jax.random.PRNGKey(0), n_classes=4,
+                      width_mult=0.05)
+    imgs = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 8, 3))
+    out = {}
+    for use_kernel in (True, False):
+        srv = ImageServer(params, 8, 8, buckets=(2,), wait_budget=0.0,
+                          use_kernel=use_kernel)
+        srv.submit(imgs)
+        out[use_kernel] = srv.poll()[0].logits
+    assert jnp.allclose(out[True], out[False], atol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# acceptance: serving-scale traffic economics (account-only, VGG16)
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def vgg16_server():
+    params = init_vgg(jax.random.PRNGKey(0), n_classes=10,
+                      width_mult=1.0)
+    t = [0.0]
+    srv = ImageServer(params, 224, 224, compute=False,
+                      clock=lambda: t[0], wait_budget=0.05)
+    # N=16 mixed-size requests, FIFO-packing into four full 8-buckets
+    for n in (1, 2, 1, 4, 2, 1, 1, 4, 2, 1, 3, 2, 1, 2, 4, 1):
+        srv.submit(n_images=n, now=0.0)
+    srv.poll(now=0.0)
+    srv.drain(now=0.0)
+    return srv
+
+
+def test_serving_mixed16_amortizes_weight_reads_4x(vgg16_server):
+    """Acceptance: N=16 mixed-size requests through the bucketed
+    server read >= 4x fewer accounted weight bytes per request than
+    batch=1 dispatch (the pre-batch-fold per-image planner) on the
+    VGG16 stack."""
+    s = vgg16_server.ledger.summary()
+    assert s["requests"] == 16
+    assert s["dispatches"] == 4              # four full 8-buckets
+    assert s["padded_images"] == 0
+    assert s["w_amortization_x"] >= 4.0, s
+
+
+def test_serving_mixed16_attains_eq15_per_request(vgg16_server):
+    """Acceptance: every request's accounted bytes stay within 1.25x
+    of its Eq. (15) share at the 1 MiB accounting budget."""
+    charges = vgg16_server.ledger.charges
+    assert len(charges) == 16
+    for c in charges:
+        assert c.vs_bound_x <= 1.25, (c.rid, c.vs_bound_x)
+    s = vgg16_server.ledger.summary()
+    assert s["vs_bound_x"] <= 1.25
+    # the serving-horizon bound (weights amortized over the horizon)
+    # is tighter than per-dispatch Eq. (15), never looser
+    assert s["vs_serving_x"] >= 0.95 * s["vs_bound_x"]
+
+
+def test_vgg_plan_handles_match_geometry():
+    """Exported plan handles walk exactly the stages vgg_forward runs,
+    with pool fused where the plane allows it."""
+    params = init_vgg(jax.random.PRNGKey(0), n_classes=10,
+                      width_mult=0.1)
+    stages = vgg_conv_geometry(params, 32, 32)
+    handles = vgg_plan_handles(params, 32, 32, batch=4,
+                               vmem_budget=1 << 20)
+    assert len(handles) == len(stages) == 13
+    for (layer, plan), g in zip(handles, stages):
+        assert (layer.hi, layer.wi) == (g.h, g.w)
+        assert layer.batch == 4
+        assert plan.pool == (2 if g.fused_pool else 1)
+        # per-plan traffic surface agrees with the accountant
+        t, _ = conv_lb_traffic(4, g.h, g.w, g.ci, g.co, 3, 3,
+                               stride=1, padding=1,
+                               pool=2 if g.fused_pool else 1,
+                               vmem_budget=1 << 20)
+        assert plan.traffic(4).total == t.total
+
+
+# --------------------------------------------------------------------------
+# dtype-aware accounting + serving-horizon bound
+# --------------------------------------------------------------------------
+
+def test_traffic_bytes_infers_dtype():
+    layer = vgg16_conv_layers(batch=2)[4]
+    kw = dict(stride=layer.stride, padding=layer.pad,
+              vmem_budget=1 << 20)
+    args = (layer.batch, layer.hi, layer.wi, layer.ci, layer.co,
+            layer.hk, layer.wk)
+    b_f32 = conv_lb_traffic_bytes(*args, **kw)
+    b_bf16 = conv_lb_traffic_bytes(*args, dtype=jnp.bfloat16, **kw)
+    t2, _ = conv_lb_traffic(*args, dtype_bytes=2, **kw)
+    assert b_f32 == conv_lb_traffic_bytes(*args, dtype_bytes=4, **kw)
+    assert b_bf16 == t2.total * 2            # bf16 words at 2 bytes
+    assert b_bf16 < b_f32                    # cheaper serving dtype
+
+
+def test_ledger_accounts_bf16_serving():
+    """A bf16 server charges 2-byte words: same plan handles -> half
+    the bytes of the f32 ledger for identical word volume."""
+    params = init_vgg(jax.random.PRNGKey(0), n_classes=4,
+                      width_mult=0.05)
+    charges = {}
+    for dtype in (jnp.float32, jnp.bfloat16):
+        t = [0.0]
+        srv = ImageServer(params, 8, 8, compute=False, dtype=dtype,
+                          clock=lambda: t[0], wait_budget=0.0)
+        srv.submit(n_images=4, now=0.0)
+        (res,) = srv.poll(now=0.0)
+        words = sum(p.traffic(4).total
+                    for _, p in srv.plan_handles(4))
+        assert res.charge.bytes_total == pytest.approx(
+            words * jnp.dtype(dtype).itemsize)
+        charges[jnp.dtype(dtype).name] = res.charge
+    assert (charges["bfloat16"].bytes_total
+            < charges["float32"].bytes_total)
+
+
+def test_q_dram_serving_amortizes_weights():
+    layer = vgg16_conv_layers(batch=1)[-1]   # weight-heavy late layer
+    s = 256 * 1024 // 4
+    per_dispatch = q_dram_practical(layer, s)
+    assert q_dram_serving(layer, s, requests=1) == per_dispatch
+    horizon = [q_dram_serving(layer, s, requests=n)
+               for n in (1, 8, 64, 4096)]
+    assert horizon == sorted(horizon, reverse=True)  # monotone down
+    # floor: per-image inputs+outputs can never amortize away
+    floor = (layer.ci * layer.hi * layer.wi
+             + layer.co * layer.ho * layer.wo)
+    assert horizon[-1] >= floor
+
+
+# --------------------------------------------------------------------------
+# smoke: serve examples stay collected + runnable in-process
+# --------------------------------------------------------------------------
+
+def test_example_serve_images_smoke(monkeypatch, capsys):
+    mod = _load(REPO / "examples" / "serve_images.py")
+    monkeypatch.setattr(sys, "argv",
+                        ["serve_images.py", "--requests", "3",
+                         "--image", "8", "--width-mult", "0.05"])
+    mod.main()
+    out = capsys.readouterr().out
+    assert "ledger:" in out and "vs Eq.(15) bound" in out
+
+
+def test_example_serve_batched_smoke(monkeypatch, capsys):
+    mod = _load(REPO / "examples" / "serve_batched.py")
+    monkeypatch.setattr(sys, "argv",
+                        ["serve_batched.py", "--arch", "minitron-4b",
+                         "--requests", "2", "--slots", "2",
+                         "--gen", "2"])
+    mod.main()
+    assert "served 2 requests" in capsys.readouterr().out
+
+
+def test_launch_serve_images_cli_smoke(monkeypatch, capsys):
+    """The launch/ driver end to end in account-only mode (paper-scale
+    geometry, no compute)."""
+    from repro.launch import serve_images
+    monkeypatch.setattr(sys, "argv",
+                        ["serve_images", "--account-only",
+                         "--width-mult", "1.0", "--image", "224",
+                         "--requests", "6"])
+    serve_images.main()
+    out = capsys.readouterr().out
+    assert "weight amortization" in out
+    assert "served 6 requests" in out
+
+
+def test_diff_bench_gates_regressions(tmp_path):
+    """diff_bench: >10% regressions (in either metric direction) exit
+    nonzero; improvements and single records pass."""
+    db = _load(REPO / "benchmarks" / "diff_bench.py")
+
+    def record(name, rows):
+        import json
+        p = tmp_path / name
+        p.write_text(json.dumps(
+            [{"name": n, "us_per_call": 0.0, "derived": v}
+             for n, v in rows]))
+        return str(p)
+
+    old = record("BENCH_1.json", [("k/vs_bound_x", 1.0),
+                                  ("k/w_reduction_x", 4.0)])
+    good = record("BENCH_2.json", [("k/vs_bound_x", 1.05),
+                                   ("k/w_reduction_x", 4.2)])
+    bad = record("BENCH_3.json", [("k/vs_bound_x", 1.3),
+                                  ("k/w_reduction_x", 4.0)])
+    worse_w = record("BENCH_4.json", [("k/vs_bound_x", 1.0),
+                                      ("k/w_reduction_x", 3.0)])
+    assert db.main([old]) == 0               # single record: baseline
+    assert db.main([old, good]) == 0         # within tolerance
+    assert db.main([old, bad]) == 1          # vs_bound_x up 30%
+    assert db.main([old, worse_w]) == 1      # w_reduction_x down 25%
+    assert db.main([str(tmp_path / "missing.json")]) == 2
+
+
+def test_committed_bench_records_pass_gate():
+    """The repo's own committed BENCH_*.json records must satisfy the
+    regression gate (ROADMAP: traffic regression tracking)."""
+    db = _load(REPO / "benchmarks" / "diff_bench.py")
+    # numeric order: lexicographic would misplace BENCH_10 before BENCH_2
+    records = [str(p) for p in sorted(REPO.glob("BENCH_*.json"),
+                                      key=db._bench_index)]
+    assert records, "commit a BENCH_<n>.json via benchmarks/run.py --json"
+    assert db.main(records) == 0
