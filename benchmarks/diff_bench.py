@@ -7,8 +7,9 @@ on a >10% regression — the ROADMAP's traffic-regression tracking.
 
 Tracked metrics (by row-name suffix):
 
-  * ``.../vs_bound_x``, ``.../vs_serving_x`` — measured/bound, lower
-    is better;
+  * ``.../vs_bound_x``, ``.../vs_serving_x``,
+    ``.../train_vs_bound_x`` — measured/bound ratios (the last over a
+    full fwd+dgrad+wgrad training step), lower is better;
   * ``.../w_reduction_x``, ``.../w_amortization_x``,
     ``.../reduction_x``, ``.../autotune_vs_closed_x`` — improvement
     factors, higher is better.
@@ -27,6 +28,7 @@ from pathlib import Path
 
 # suffix -> True when lower values are better
 TRACKED = {
+    "train_vs_bound_x": True,    # training-step fwd+dgrad+wgrad ratio
     "vs_bound_x": True,
     "vs_serving_x": True,
     "w_reduction_x": False,

@@ -21,8 +21,9 @@ def main() -> None:
     from benchmarks.paper_tables import ALL_TABLES
     from benchmarks.roofline_bench import ALL_ROOFLINE
     from benchmarks.serve_bench import ALL_SERVE
+    from benchmarks.train_traffic_bench import ALL_TRAIN
 
-    benches = ALL_TABLES + ALL_KERNELS + ALL_SERVE
+    benches = ALL_TABLES + ALL_KERNELS + ALL_SERVE + ALL_TRAIN
     if not args.skip_roofline:
         benches = benches + ALL_ROOFLINE
 

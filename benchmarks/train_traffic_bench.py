@@ -1,0 +1,49 @@
+"""Training-step traffic benchmarks: the planned backward pass's HBM
+economics at paper scale (account-only — the plan handles are analytic,
+so the full VGG16/224x224 training geometry is measurable without
+executing the interpret-mode kernel).
+
+One training step moves the forward conv's words plus its two backward
+convs (dgrad through the same batch-folded kernel dataflow, wgrad
+through the dW-stationary schedule), and ``q_dram_training`` is the
+per-step Eq. (15) sum the ratios are scored against.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def bench_train_traffic():
+    """VGG16 training step at batch 8 and the paper's 1 MiB budget:
+    accounted fwd+dgrad+wgrad bytes vs ``q_dram_training`` (each pass's
+    Eq. (15) term at its realized plan footprint), the backward's byte
+    share, and how many layers run dgrad through the planned kernel."""
+    import jax
+
+    from repro.models.cnn import init_vgg, vgg_training_step_report
+
+    params = init_vgg(jax.random.PRNGKey(0), n_classes=10,
+                      width_mult=1.0)
+    t0 = time.perf_counter()
+    rep = vgg_training_step_report(params, 224, 224, batch=8,
+                                   vmem_budget=1 << 20)
+    plan_us = (time.perf_counter() - t0) * 1e6
+    rows = [
+        ("train/vgg16_b8/train_vs_bound_x", plan_us,
+         round(rep["train_vs_bound_x"], 3)),
+        ("train/vgg16_b8/GB_per_step", 0.0,
+         round(rep["bytes_per_step"] / 1e9, 2)),
+        ("train/vgg16_b8/bwd_share", 0.0, round(rep["bwd_share"], 3)),
+        ("train/vgg16_b8/dgrad_kernel_layers", 0.0,
+         rep["dgrad_kernel_layers"]),
+    ]
+    # inference-vs-training byte blowup at the same batch: what the
+    # accountant was blind to before the backward was planned
+    fwd_only = rep["bytes_per_step"] * (1.0 - rep["bwd_share"])
+    rows.append(("train/vgg16_b8/step_vs_fwd_bytes_x", 0.0,
+                 round(rep["bytes_per_step"] / fwd_only, 2)))
+    return rows
+
+
+ALL_TRAIN = [bench_train_traffic]

@@ -31,6 +31,14 @@ re-fetched whenever its index-map output changes between consecutive
 grid steps — Pallas' pipelining rule), giving the *measured* side of
 the paper's Eq. (14)/(15) validation in tests and benchmarks.
 
+The backward pass is planned through the same machinery (the paper's
+bound holds for dgrad/wgrad — they are convs too): stride-1 dgrad
+executes through the kernel itself via :func:`plan_conv_dgrad`,
+wgrad is accounted off the dW-stationary :class:`WgradPlan`, and
+:func:`plan_conv_training` / :meth:`ConvPlan.training_traffic` bundle
+the per-training-step triple scored against
+``lower_bound.q_dram_training``.
+
 The batch-reuse term of Eq. (14)/(15): the bound is over output
 elements u = B*Ho*Wo, so per u x z block the z-kernel weight slice is
 read once *regardless of how many images the block folds* — weight
@@ -89,6 +97,15 @@ class ConvPlan:
     hk: int            # kernel extent (accounting needs the w panel)
     wk: int
     pool: int = 1      # fused epilogue max-pool window (1 = none)
+    # true (pre-padding) layer geometry — what the plan was planned
+    # *for*; lets the backward planners derive the dgrad/wgrad conv
+    # geometry from a forward handle alone
+    h: int = 0         # input plane entering the conv
+    w: int = 0
+    ci: int = 0        # per-group channel counts
+    co: int = 0
+    py: int = 0        # conv padding
+    px: int = 0
 
     @property
     def grid(self) -> tuple[int, int, int, int]:
@@ -114,6 +131,17 @@ class ConvPlan:
         """Realized on-chip words S (the paper-model footprint the
         Eq. (15) comparisons are evaluated at)."""
         return self.blocks.footprint_elems(self.hk, self.wk)
+
+    def training_traffic(self, batch: int, *, dtype_bytes: int = 4,
+                         vmem_budget: int | None = None,
+                         autotune: bool = True) -> "TrainingTraffic":
+        """HBM words one *training step* moves through this layer:
+        forward + dgrad + wgrad, each accounted off its own planned
+        dataflow (the bwd plans are derived from this forward handle
+        via :func:`plan_conv_training` and memoized like any plan)."""
+        return plan_conv_training(
+            self, batch=batch, dtype_bytes=dtype_bytes,
+            vmem_budget=vmem_budget, autotune=autotune).traffic(batch)
 
 
 def _blocks_traffic(batch: int, blk: ConvBlockShape, hk: int, wk: int,
@@ -276,7 +304,271 @@ def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
                     wp_pad=max(wp, (wo_pad - 1) * sx + ekw),
                     ci_pad=round_up(ci, cib), co_pad=round_up(co, cob),
                     stride=(sy, sx), dilation=(dy, dx), pool=pool,
-                    hk=hk, wk=wk)
+                    hk=hk, wk=wk,
+                    h=h, w=w, ci=ci, co=co, py=py, px=px)
+
+
+# --------------------------------------------------------------------------
+# backward pass: dgrad / wgrad as planned convs
+# --------------------------------------------------------------------------
+
+def _flip_w(w: jax.Array) -> jax.Array:
+    """(Hk, Wk, Ci, Co) -> spatially flipped (Hk, Wk, Co, Ci): the
+    dgrad conv's kernel."""
+    return w[::-1, ::-1].transpose(0, 1, 3, 2)
+
+
+def dgrad_rides_kernel(plan: ConvPlan) -> bool:
+    """True when the layer's dgrad can execute through the planned
+    conv_lb kernel itself: unit forward stride (the dgrad conv is then
+    an ordinary conv over the flipped weights — no lhs dilation) and a
+    forward padding the full-padding transform can absorb."""
+    ekh = (plan.hk - 1) * plan.dilation[0] + 1
+    ekw = (plan.wk - 1) * plan.dilation[1] + 1
+    return (plan.stride == (1, 1)
+            and plan.py <= ekh - 1 and plan.px <= ekw - 1)
+
+
+def plan_conv_dgrad(plan: ConvPlan, *, batch: int = 1,
+                    dtype_bytes: int = 4,
+                    vmem_budget: int | None = None,
+                    autotune: bool = True) -> ConvPlan:
+    """Plan the layer's *dgrad* conv (dx from dy) off a forward handle.
+
+    dx is the conv of dy with the spatially-flipped ``(Hk, Wk, Co, Ci)``
+    weights at unit stride and full padding — for unit forward stride
+    it is exactly the conv the batch-folded kernel runs
+    (:func:`dgrad_rides_kernel`); a strided forward dilates the dy
+    plane first (lhs dilation), which the kernel does not execute, but
+    the dataflow is planned and accounted all the same over the dilated
+    plane (the lax fallback moves at least those words).
+    """
+    sy, sx = plan.stride
+    hd = plan.ho if sy == 1 else (plan.ho - 1) * sy + 1
+    wd = plan.wo if sx == 1 else (plan.wo - 1) * sx + 1
+    ekh = (plan.hk - 1) * plan.dilation[0] + 1
+    ekw = (plan.wk - 1) * plan.dilation[1] + 1
+    return plan_conv(hd, wd, plan.co, plan.ci, plan.hk, plan.wk,
+                     batch=batch, stride=(1, 1),
+                     padding=(max(0, ekh - 1 - plan.py),
+                              max(0, ekw - 1 - plan.px)),
+                     dilation=plan.dilation, dtype_bytes=dtype_bytes,
+                     vmem_budget=vmem_budget, autotune=autotune)
+
+
+@dataclasses.dataclass(frozen=True)
+class WgradPlan:
+    """dW-stationary tiled schedule for the layer's *wgrad* conv.
+
+    dW is the conv of the padded input with the incoming gradient as
+    the kernel plane:
+
+      dW[ky, kx, ci, co] = sum_{b, oy, ox}
+          x_pad[b, ky*dil + oy*stride, kx*dil + ox*stride, ci]
+          * dy[b, oy, ox, co]
+
+    **Batch folds into the reduction** (every image accumulates into
+    the same dW), so the natural bound-attaining dataflow is the
+    mirror image of the forward's psum-stationary u x z block: a
+    ``(Hk, Wk, ci_b, co_b)`` block of *dW* stays resident (OutR on the
+    weight gradient — written exactly once), while matching spatial
+    strips of x and dy stream through on-chip memory, image after
+    image.  Forcing wgrad through the forward's u x z machinery
+    instead would re-stream whole activation planes per (Ci, Co) block
+    (the dW output plane is only Hk x Wk — u cannot grow), landing
+    10-60x off Eq. (15); this schedule attains the once-per-word floor
+    outright whenever the full dW fits on chip.
+
+    Per (ci-block, co-block) sweep the strips roll: consecutive x
+    strips share ``ekh - stride`` halo rows that simply *stay
+    resident* (the dW psums never evict them), so each plane pass
+    reads every touched x row exactly once — x is re-fetched once per
+    Co-block sweep, dy once per Ci-block sweep.  ``strip`` is the
+    footprint knob (rows in flight), not a re-read multiplier.
+    Execution currently rides lax (XLA's schedule); this plan is the
+    analytic accounting/bound handle — the charged volume is what the
+    schedule provably needs, cf. the paper's WtR-B stationarity
+    analysis.
+    """
+
+    hk: int            # dW spatial extent (= fwd kernel)
+    wk: int
+    ci: int
+    co: int
+    ho: int            # dy plane (the wgrad reduction's spatial extent)
+    wo: int
+    wp: int            # padded input plane cols
+    ekh: int           # dilated kernel extent (x strip halo rows)
+    sy: int            # fwd stride (x rows advanced per dy row)
+    ci_b: int          # resident dW block channels
+    co_b: int
+    strip: int         # dy rows streamed per strip
+
+    @property
+    def grid(self) -> tuple[int, int, int]:
+        """(n_ci_blocks, n_co_blocks, n_strips)."""
+        return (ceil_div(self.ci, self.ci_b),
+                ceil_div(self.co, self.co_b),
+                ceil_div(self.ho, self.strip))
+
+    def _x_rows(self) -> int:
+        """x rows read per image-channel plane pass: the rolling
+        window re-uses the (ekh - stride) shared halo rows already on
+        chip, so every touched row is read once."""
+        return (self.ho - 1) * self.sy + self.ekh
+
+    def traffic(self, batch: int) -> Traffic:
+        """HBM words one wgrad pass moves at ``batch`` images: x is
+        re-read once per Co-block sweep, dy once per Ci-block sweep,
+        the dW block accumulates on chip and is written once."""
+        nci, nco, _ = self.grid
+        ci_pad = nci * self.ci_b
+        co_pad = nco * self.co_b
+        reads_x = nco * batch * ci_pad * self._x_rows() * self.wp
+        reads_dy = nci * batch * co_pad * self.ho * self.wo
+        writes = self.hk * self.wk * ci_pad * co_pad
+        return Traffic(reads_in=float(reads_x), reads_w=float(reads_dy),
+                       reads_out=0.0, writes_out=float(writes))
+
+    def traffic_bytes(self, batch: int, dtype_bytes: int = 4) -> float:
+        return self.traffic(batch).total * dtype_bytes
+
+    def footprint_elems(self) -> int:
+        """On-chip words S of the paper's model: resident dW block +
+        one x strip + one dy strip (no double buffering)."""
+        xrows = (self.strip - 1) * self.sy + self.ekh
+        return (self.hk * self.wk * self.ci_b * self.co_b
+                + xrows * self.wp * self.ci_b
+                + self.strip * self.wo * self.co_b)
+
+
+@lru_cache(maxsize=1024)
+def plan_conv_wgrad(plan: ConvPlan, *, dtype_bytes: int = 4,
+                    vmem_budget: int | None = None,
+                    autotune: bool = True) -> WgradPlan:
+    """Choose the dW-stationary blocks for a layer's wgrad conv off a
+    forward handle: minimize the re-read volume
+    ``n_co_blocks*|x| + n_ci_blocks*|dy|`` under the VMEM budget
+    (resident f32 dW block + double-buffered x/dy strips).  The plan
+    carries no batch extent — like :class:`ConvPlan`, the same handle
+    accounts any training batch via ``traffic(batch)``.  LRU-cached on
+    the (hashable) forward handle, like ``plan_conv``."""
+    from repro.core.layer import balanced_candidates
+
+    budget = VMEM_BYTES // 2 if vmem_budget is None else vmem_budget
+    db = dtype_bytes
+    sy = plan.stride[0]
+    ekh = (plan.hk - 1) * plan.dilation[0] + 1
+    wp = plan.w + 2 * plan.px
+
+    def mk(cib, cob, s):
+        return WgradPlan(hk=plan.hk, wk=plan.wk, ci=plan.ci, co=plan.co,
+                         ho=plan.ho, wo=plan.wo, wp=wp, ekh=ekh, sy=sy,
+                         ci_b=cib, co_b=cob, strip=s)
+
+    def vmem_bytes(cib, cob, s):
+        xrows = (s - 1) * sy + ekh
+        return (4 * plan.hk * plan.wk * cib * cob     # f32 dW psums
+                + 2 * db * xrows * wp * cib           # double-buffered
+                + 2 * db * s * plan.wo * cob)         # streamed strips
+
+    ci_cands = balanced_candidates(plan.ci)
+    co_cands = balanced_candidates(plan.co)
+    s_cands = balanced_candidates(plan.ho) if autotune else [1]
+    best = mk(1, 1, 1)      # minimal block: always the fallback
+    best_cost = None
+    for cib in ci_cands:
+        for cob in co_cands:
+            for s in s_cands:
+                if vmem_bytes(cib, cob, s) > budget:
+                    continue
+                cand = mk(cib, cob, s)
+                # reads scale uniformly with batch and writes are
+                # batch-free, so ranking at batch=1 is batch-robust
+                cost = cand.traffic(1).total
+                if best_cost is None or cost < best_cost:
+                    best, best_cost = cand, cost
+    return best
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainingTraffic:
+    """Per-training-step HBM words, split by pass."""
+
+    fwd: Traffic
+    dgrad: Traffic
+    wgrad: Traffic
+
+    @property
+    def total(self) -> float:
+        return self.fwd.total + self.dgrad.total + self.wgrad.total
+
+    @property
+    def bwd_share(self) -> float:
+        """Fraction of the step's words moved by the backward convs."""
+        return (self.dgrad.total + self.wgrad.total) / max(self.total,
+                                                           1e-30)
+
+    def total_bytes(self, dtype_bytes: int = 4) -> float:
+        return self.total * dtype_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvTrainingPlan:
+    """The three planned convs of one layer's training step.
+
+    ``dgrad_kernel`` records whether dx executes through the planned
+    conv_lb kernel (unit-stride layers) or falls back to lax while
+    remaining planned and accounted (strided layers — see ROADMAP's
+    compiled-mode follow-up)."""
+
+    fwd: ConvPlan
+    dgrad: ConvPlan
+    wgrad: WgradPlan
+    dgrad_kernel: bool
+
+    def traffic(self, batch: int) -> TrainingTraffic:
+        """Words per training step at ``batch`` images."""
+        return TrainingTraffic(fwd=self.fwd.traffic(batch),
+                               dgrad=self.dgrad.traffic(batch),
+                               wgrad=self.wgrad.traffic(batch))
+
+    def traffic_bytes(self, batch: int, dtype_bytes: int = 4) -> float:
+        return self.traffic(batch).total_bytes(dtype_bytes)
+
+    def bound_words(self, layer) -> float:
+        """q_dram_training with each pass's Eq. (15) term evaluated at
+        that pass's *realized* plan footprint (the same convention the
+        forward tests score distance-to-bound with)."""
+        from repro.core.lower_bound import (q_dram_dgrad,
+                                            q_dram_practical,
+                                            q_dram_wgrad)
+
+        return (q_dram_practical(layer, self.fwd.footprint_elems())
+                + q_dram_dgrad(layer, self.dgrad.footprint_elems())
+                + q_dram_wgrad(layer, self.wgrad.footprint_elems()))
+
+
+def plan_conv_training(fwd: ConvPlan, *, batch: int, groups: int = 1,
+                       dtype_bytes: int = 4,
+                       vmem_budget: int | None = None,
+                       autotune: bool = True) -> ConvTrainingPlan:
+    """Derive the full training-step plan triple from a forward handle
+    (every constituent ``plan_conv`` call is memoized, so this is as
+    cheap as the forward planning after first touch).  ``groups`` is
+    the executed conv's group count — plans carry per-*group*
+    geometry, and grouped backwards take the lax fallback in
+    ``conv2d_lb`` even at unit stride, so it gates ``dgrad_kernel``."""
+    if not (fwd.ci and fwd.co):
+        raise ValueError("forward plan carries no layer geometry; "
+                         "build it via plan_conv")
+    kw = dict(dtype_bytes=dtype_bytes, vmem_budget=vmem_budget,
+              autotune=autotune)
+    return ConvTrainingPlan(
+        fwd=fwd,
+        dgrad=plan_conv_dgrad(fwd, batch=batch, **kw),
+        wgrad=plan_conv_wgrad(fwd, **kw),
+        dgrad_kernel=dgrad_rides_kernel(fwd) and groups == 1)
 
 
 def _pad_axis(a, axis, target):
@@ -360,10 +652,15 @@ def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
     ``lax.conv_general_dilated`` + the unfused epilogue (same math,
     XLA's schedule).
 
-    Differentiable: the forward runs the Pallas dataflow; the custom
-    VJP derives all gradients from the exact ``lax`` counterpart (a
-    conv's backward is itself a conv — XLA already schedules it), so
-    the VGG training path can ride the fused kernel end to end.
+    Differentiable, with a *planned* backward: for unit-stride
+    ungrouped layers (the whole VGG stack) dx is computed by the
+    batch-folded Pallas kernel itself — the dgrad conv of dy against
+    the spatially-flipped ``(Hk, Wk, Co, Ci)`` weights at full padding
+    (:func:`plan_conv_dgrad`) — and dW/db come from the exact ``lax``
+    counterparts (wgrad execution is accounted analytically via
+    :func:`plan_conv_wgrad`).  Strided or grouped layers fall back to
+    the ``lax`` VJP wholesale but remain planned and accounted through
+    the same handles.
     """
     sy, sx = _pair(stride)
     py, px = _pair(padding)
@@ -388,10 +685,17 @@ def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
     if any(v is not None for v in (b_block, y_block, x_block,
                                    ci_block, co_block)):
         bk = plan.blocks
+        # halo placeholders only: plan_conv recomputes the overlapping
+        # BlockSpec halos from the override's (y, x) and the layer's
+        # stride/dilation (an override must never keep the tuned plan's
+        # halos — they belong to the tuned tile sizes)
         override = ConvBlockShape(
-            y=y_block or bk.y, x=x_block or bk.x,
-            co=co_block or bk.co, ci=ci_block or bk.ci,
-            halo_y=0, halo_x=0, b=b_block or bk.b)
+            y=bk.y if y_block is None else y_block,
+            x=bk.x if x_block is None else x_block,
+            co=bk.co if co_block is None else co_block,
+            ci=bk.ci if ci_block is None else ci_block,
+            halo_y=0, halo_x=0,
+            b=bk.b if b_block is None else b_block)
         plan = plan_conv(h, wd, ci_g, co // groups, hk, wk, batch=b,
                          stride=(sy, sx), padding=(py, px),
                          dilation=(dy, dx), pool=pool, blocks=override)
@@ -415,10 +719,35 @@ def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
         return kernel_conv(x, w, bias), (x, w, bias)
 
     def _bwd(res, g):
-        # bias=None is a leafless pytree primal: jax.vjp hands back a
-        # matching None cotangent, so one scaffold covers both arities
-        _, vjp = jax.vjp(_lax_full, *res)
-        return vjp(g)
+        x, w, bias = res
+        if not (dgrad_rides_kernel(plan) and groups == 1):
+            # strided/grouped: lax VJP wholesale (still planned and
+            # accounted via plan_conv_dgrad/plan_conv_wgrad handles).
+            # bias=None is a leafless pytree primal: jax.vjp hands
+            # back a matching None cotangent, so one scaffold covers
+            # both arities
+            _, vjp = jax.vjp(_lax_full, *res)
+            return vjp(g)
+        # 1) peel the epilogue: recompute the pre-epilogue conv output
+        #    (cheaper than spilling it from the fused kernel, whose
+        #    whole point is the single post-epilogue write) and pull g
+        #    back through bias/relu/pool; db falls out here
+        y = _lax_conv(x, w, sy, sx, py, px, dy, dx, 1)
+        _, epi_vjp = jax.vjp(
+            lambda yy, bb: _lax_epilogue(yy, bb, relu, pool), y, bias)
+        gy, db = epi_vjp(g)
+        # 2) dgrad through the planned kernel: dy * flipped weights at
+        #    full padding rides the same batch-folded u x z dataflow
+        gx = conv2d_lb(gy, _flip_w(w), None, stride=1,
+                       padding=((hk - 1) * dy - py, (wk - 1) * dx - px),
+                       dilation=(dy, dx), interpret=interpret,
+                       autotune=autotune)
+        # 3) wgrad via the exact lax counterpart (accounted off
+        #    plan_conv_wgrad; kernel execution is a ROADMAP follow-up)
+        _, w_vjp = jax.vjp(
+            lambda ww: _lax_conv(x, ww, sy, sx, py, px, dy, dx, 1), w)
+        (gw,) = w_vjp(gy)
+        return gx, gw, db
 
     kernel_conv.defvjp(_fwd, _bwd)
     return kernel_conv(x, w, bias)

@@ -107,7 +107,8 @@ def vgg_conv_layers_for(params, h: int, w: int, *, batch: int,
 
 def vgg_plan_handles(params, h: int, w: int, *, batch: int,
                      in_ch: int = 3, dtype_bytes: int = 4,
-                     vmem_budget: int | None = None):
+                     vmem_budget: int | None = None,
+                     training: bool = False):
     """Exported plan handles: [(ConvLayer, ConvPlan)] per conv stage at
     this arrival batch, from the same memoized ``plan_conv`` cache the
     kernel path's jit trace resolves against — one planning pass per
@@ -116,9 +117,15 @@ def vgg_plan_handles(params, h: int, w: int, *, batch: int,
     ``vmem_budget=None`` yields the kernel's own execution plans; an
     explicit budget (e.g. the paper's 1 MiB GBuf scale) yields the
     accounting plans the ledger scores distance-to-bound with.
+
+    ``training=True`` exports ``(ConvLayer, ConvTrainingPlan)``
+    instead: the forward handle plus the planned dgrad/wgrad convs of
+    the layer's backward (``plan_conv_training``), so a training step's
+    fwd+dgrad+wgrad bytes are accountable per layer against
+    ``q_dram_training``.
     """
     from repro.core.layer import ConvLayer
-    from repro.kernels.conv_lb.ops import plan_conv
+    from repro.kernels.conv_lb.ops import plan_conv, plan_conv_training
 
     handles = []
     for g in vgg_conv_geometry(params, h, w, in_ch):
@@ -129,8 +136,45 @@ def vgg_plan_handles(params, h: int, w: int, *, batch: int,
                          pool=2 if g.fused_pool else 1,
                          dtype_bytes=dtype_bytes,
                          vmem_budget=vmem_budget)
-        handles.append((layer, plan))
+        if training:
+            handles.append((layer, plan_conv_training(
+                plan, batch=batch, dtype_bytes=dtype_bytes,
+                vmem_budget=vmem_budget)))
+        else:
+            handles.append((layer, plan))
     return handles
+
+
+def vgg_training_step_report(params, h: int, w: int, *, batch: int,
+                             in_ch: int = 3, dtype_bytes: int = 4,
+                             vmem_budget: int | None = None) -> dict:
+    """Per-training-step traffic accounting for the conv stack.
+
+    Sums every layer's planned fwd+dgrad+wgrad words
+    (:meth:`ConvTrainingPlan.traffic`) and scores them against
+    ``q_dram_training`` with each pass's Eq. (15) term at its realized
+    plan footprint — the training-step counterpart of the serve
+    ledger's ``vs_bound_x``.
+    """
+    handles = vgg_plan_handles(params, h, w, batch=batch, in_ch=in_ch,
+                               dtype_bytes=dtype_bytes,
+                               vmem_budget=vmem_budget, training=True)
+    words = fwd_words = bound = 0.0
+    kernel_layers = 0
+    for layer, tp in handles:
+        t = tp.traffic(batch)
+        words += t.total
+        fwd_words += t.fwd.total
+        bound += tp.bound_words(layer)
+        kernel_layers += int(tp.dgrad_kernel)
+    return {
+        "layers": len(handles),
+        "dgrad_kernel_layers": kernel_layers,
+        "bytes_per_step": words * dtype_bytes,
+        "bound_bytes_per_step": bound * dtype_bytes,
+        "train_vs_bound_x": words / max(bound, 1e-30),
+        "bwd_share": (words - fwd_words) / max(words, 1e-30),
+    }
 
 
 def vgg_forward(params, images, use_kernel: bool = False):

@@ -55,8 +55,12 @@ class ImageRequest:
     done: float | None = None        # dispatch-completion timestamp
 
     @property
-    def latency(self) -> float:
-        return 0.0 if self.done is None else self.done - self.arrival
+    def latency(self) -> float | None:
+        """Seconds from arrival to dispatch completion, or ``None``
+        while the request is still pending.  (Reporting 0.0 for
+        in-flight work would silently deflate any latency percentile
+        computed over a window that contains it.)"""
+        return None if self.done is None else self.done - self.arrival
 
 
 class AdmissionQueue:
@@ -116,7 +120,20 @@ class AdmissionQueue:
         return None
 
     def flush(self) -> tuple[list[ImageRequest], int] | None:
-        """Force the next group out regardless of deadline (drain)."""
+        """Force the *next group only* out regardless of deadline.
+
+        One call pops at most one bucket's worth of requests — a
+        shutdown path that calls ``flush()`` once can silently drop
+        every trailing group.  Drain loops must iterate until ``None``
+        (or use :meth:`drain`, which owns that loop)."""
         if not self.pending:
             return None
         return self._pop(*self._prefix())
+
+    def drain(self):
+        """Yield (group, bucket) until the queue is empty — the
+        loop-until-``None`` contract around :meth:`flush` that every
+        shutdown/drain call site must use so trailing requests are
+        never dropped."""
+        while (ready := self.flush()) is not None:
+            yield ready

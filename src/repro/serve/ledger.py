@@ -31,6 +31,7 @@ Three observables per request / per horizon:
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Sequence
 
@@ -48,7 +49,7 @@ class RequestCharge:
     bytes_total: float
     bytes_weights: float
     bound_bytes: float         # Eq. (15) share at the dispatch batch
-    latency_s: float = 0.0
+    latency_s: float | None = None   # None: not (yet) measured
 
     @property
     def vs_bound_x(self) -> float:
@@ -147,7 +148,7 @@ class TrafficLedger:
                 bytes_total=total_all * db * n / n_real,
                 bytes_weights=total_w * db * n / n_real,
                 bound_bytes=bound_w * db * n / bucket,
-                latency_s=(latencies or {}).get(rid, 0.0))
+                latency_s=(latencies or {}).get(rid))
             self.charges.append(charge)
             self._sum_bytes += charge.bytes_total
             self._sum_w += charge.bytes_weights
@@ -206,7 +207,12 @@ class TrafficLedger:
                     for layer, s in zip(tally.layers_b1,
                                         tally.footprints[bucket])
                 ) * n_imgs
-        lat = sorted(c.latency_s for c in self.charges)
+        # latency percentiles are over *measured* requests only: a
+        # None/NaN latency marks in-flight or unmeasured work, and
+        # counting it as 0.0 would deflate every percentile
+        lat = sorted(c.latency_s for c in self.charges
+                     if c.latency_s is not None
+                     and not math.isnan(c.latency_s))
         return {
             "requests": self._n_requests,
             "images": images,
@@ -217,8 +223,9 @@ class TrafficLedger:
             "vs_bound_x": total / max(bound, 1e-30),
             "w_amortization_x": baseline_w * db / max(weights, 1e-30),
             "vs_serving_x": total / max(horizon * db, 1e-30),
-            "p50_latency_s": lat[len(lat) // 2],
-            "max_latency_s": lat[-1],
+            "measured_latencies": len(lat),
+            "p50_latency_s": lat[len(lat) // 2] if lat else float("nan"),
+            "max_latency_s": lat[-1] if lat else float("nan"),
         }
 
     def format_summary(self) -> str:

@@ -206,9 +206,11 @@ class ImageServer:
         return out
 
     def drain(self, now: float | None = None) -> list[ServeResult]:
-        """Flush the queue to empty regardless of deadlines."""
+        """Flush the queue to empty regardless of deadlines (the
+        queue's ``drain`` loops ``flush`` until ``None`` — one
+        ``flush()`` pops a single group and would drop the rest)."""
         now = self._clock() if now is None else now
         out = []
-        while (ready := self.queue.flush()) is not None:
+        for ready in self.queue.drain():
             out.extend(self._dispatch(*ready, now=now))
         return out

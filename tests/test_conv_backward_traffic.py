@@ -1,0 +1,402 @@
+"""Planned backward pass: dgrad/wgrad through the conv_lb dataflow,
+with training-step traffic accounting.
+
+The layer's backward is two more convs (paper Theorem 2 covers them
+like any conv):
+
+  * dgrad — dy against the spatially-flipped (Hk, Wk, Co, Ci) weights
+    at full padding; for unit-stride layers (the whole VGG stack) it
+    *executes through the planned batch-folded Pallas kernel itself*,
+    strided layers fall back to lax but stay planned and accounted
+    via ``plan_conv_dgrad``;
+  * wgrad — dW as the conv of the input with the incoming gradient,
+    batch folded into the reduction, accounted off the dW-stationary
+    ``WgradPlan`` (execution rides lax).
+
+``q_dram_training`` is the per-step Eq. (15) sum (weights read twice,
+dW written once) these accountings are scored against.
+"""
+
+import importlib.util
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.lower_bound import (q_dram_dgrad, q_dram_ideal,
+                                    q_dram_practical, q_dram_training,
+                                    q_dram_wgrad)
+from repro.core.vgg import vgg16_conv_layers
+from repro.kernels.conv_lb.ops import (conv2d_lb, dgrad_rides_kernel,
+                                       plan_conv, plan_conv_dgrad,
+                                       plan_conv_training,
+                                       plan_conv_wgrad)
+from repro.models.cnn import (init_vgg, vgg_loss, vgg_plan_handles,
+                              vgg_training_step_report)
+
+REPO = Path(__file__).resolve().parent.parent
+S_1M = 1024 * 1024
+
+
+def _load(path: Path):
+    spec = importlib.util.spec_from_file_location(path.stem, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# --------------------------------------------------------------------------
+# dgrad executes through the planned kernel and matches the lax VJP
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(padding=1),
+    dict(padding=1, relu=True, pool=2),      # fused epilogue peeled
+    dict(padding=0, relu=True),
+    dict(padding=1, dilation=2),             # dilated, still stride-1
+])
+def test_kernel_gradients_match_lax_vjp(kw):
+    """Acceptance: gradients of the kernel path (planned dgrad) match
+    ``jax.vjp`` of the lax path to 1e-4 — x, w and bias cotangents."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 8, 8, 3))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 3, 5)) * 0.3
+    b = jax.random.normal(jax.random.fold_in(key, 2), (5,)) * 0.1
+
+    def loss(fallback):
+        def f(x, w, b):
+            return (conv2d_lb(x, w, b, fallback=fallback, **kw) ** 2).sum()
+        return f
+
+    gk = jax.grad(loss(False), argnums=(0, 1, 2))(x, w, b)
+    gl = jax.grad(loss(True), argnums=(0, 1, 2))(x, w, b)
+    for a, c in zip(gk, gl):
+        assert float(jnp.max(jnp.abs(a - c))) < 1e-4
+
+
+def test_stride1_dgrad_rides_kernel_strided_falls_back():
+    """A unit-stride layer's grad-through jaxpr contains the dgrad
+    pallas_call (2 kernel calls: fwd + dgrad); a strided layer's
+    backward falls back to the lax VJP (1 kernel call — fwd only),
+    while still being planned via plan_conv_dgrad."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 9, 9, 4))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 4, 6)) * 0.2
+
+    def count(stride):
+        jaxpr = jax.make_jaxpr(jax.grad(
+            lambda x: (conv2d_lb(x, w, padding=1, stride=stride) ** 2
+                       ).sum()))(x)
+        return str(jaxpr).count("pallas_call")
+
+    assert count(1) == 2                      # fwd + planned dgrad
+    assert count(2) == 1                      # fwd only; dgrad via lax
+    p1 = plan_conv(9, 9, 4, 6, 3, 3, batch=2, stride=(1, 1),
+                   padding=(1, 1), vmem_budget=S_1M)
+    p2 = plan_conv(9, 9, 4, 6, 3, 3, batch=2, stride=(2, 2),
+                   padding=(1, 1), vmem_budget=S_1M)
+    assert dgrad_rides_kernel(p1) and not dgrad_rides_kernel(p2)
+
+
+def test_strided_and_grouped_fallback_gradients_match_lax():
+    """The non-kernel backward paths (strided, grouped) still agree
+    with the lax VJP exactly."""
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (2, 10, 10, 4))
+    for kw in (dict(stride=2, padding=1), dict(groups=2, padding=1)):
+        ci_g = 4 // kw.get("groups", 1)
+        w = jax.random.normal(jax.random.fold_in(key, 7),
+                              (3, 3, ci_g, 6)) * 0.2
+        gk = jax.grad(lambda x, w: (conv2d_lb(x, w, **kw) ** 2).sum(),
+                      argnums=(0, 1))(x, w)
+        gl = jax.grad(lambda x, w: (conv2d_lb(x, w, fallback=True,
+                                              **kw) ** 2).sum(),
+                      argnums=(0, 1))(x, w)
+        for a, c in zip(gk, gl):
+            assert float(jnp.max(jnp.abs(a - c))) < 1e-4
+
+
+def test_vgg_stack_grad_matches_lax_and_uses_kernel_dgrad():
+    """Acceptance at the model level: VGG grads through the kernel
+    path match the pure-lax path to 1e-4, and the backward jaxpr
+    carries dgrad pallas_calls beyond the forward's."""
+    key = jax.random.PRNGKey(0)
+    params = init_vgg(key, n_classes=4, width_mult=0.05)
+    imgs = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, 8, 3))
+    batch = {"images": imgs, "labels": jnp.arange(2) % 4}
+    gk = jax.grad(lambda p: vgg_loss(p, batch, use_kernel=True))(params)
+    gl = jax.grad(lambda p: vgg_loss(p, batch, use_kernel=False))(params)
+    flat_k, _ = jax.tree_util.tree_flatten(gk)
+    flat_l, _ = jax.tree_util.tree_flatten(gl)
+    for a, c in zip(flat_k, flat_l):
+        assert float(jnp.max(jnp.abs(a - c))) < 1e-4
+    fwd = str(jax.make_jaxpr(
+        lambda p: vgg_loss(p, batch, use_kernel=True))(params))
+    bwd = str(jax.make_jaxpr(jax.grad(
+        lambda p: vgg_loss(p, batch, use_kernel=True)))(params))
+    assert bwd.count("pallas_call") > fwd.count("pallas_call")
+
+
+# --------------------------------------------------------------------------
+# backward plans: geometry + accounting sanity
+# --------------------------------------------------------------------------
+
+def test_plan_conv_dgrad_geometry_roundtrips():
+    """The dgrad conv maps dy's plane back onto the input plane: same
+    kernel, transposed channels, full padding; strided layers plan
+    over the stride-dilated dy plane."""
+    fwd = plan_conv(14, 14, 8, 16, 3, 3, batch=2, stride=(1, 1),
+                    padding=(1, 1), vmem_budget=S_1M)
+    d = plan_conv_dgrad(fwd, batch=2, vmem_budget=S_1M)
+    assert (d.h, d.w) == (fwd.ho, fwd.wo)
+    assert (d.ci, d.co) == (fwd.co, fwd.ci)
+    assert (d.ho, d.wo) == (14, 14)           # recovers the input plane
+    assert (d.py, d.px) == (1, 1)             # full padding: 3-1-1
+    strided = plan_conv(14, 14, 8, 16, 3, 3, batch=2, stride=(2, 2),
+                        padding=(1, 1), vmem_budget=S_1M)
+    ds = plan_conv_dgrad(strided, batch=2, vmem_budget=S_1M)
+    assert (ds.h, ds.w) == (2 * strided.ho - 1, 2 * strided.wo - 1)
+    assert ds.traffic(2).total > 0
+
+
+def test_wgrad_plan_attains_floor_when_dw_fits():
+    """When the whole dW block fits on chip, the dW-stationary wgrad
+    schedule reads x and dy exactly once and writes dW once — the
+    once-per-word ideal."""
+    layer = vgg16_conv_layers(batch=8)[1]     # conv1_2: dW = 147 KiB
+    fwd = plan_conv(layer.hi, layer.wi, layer.ci, layer.co, 3, 3,
+                    batch=8, stride=(1, 1), padding=(1, 1),
+                    vmem_budget=S_1M)
+    wp = plan_conv_wgrad(fwd, vmem_budget=S_1M)
+    nci, nco, _ = wp.grid
+    assert (nci, nco) == (1, 1)               # full dW resident
+    t = wp.traffic(8)
+    assert t.writes_out == layer.n_weights
+    # x read once (padded plane + strip halo overlap), dy read once
+    assert t.reads_w == layer.n_outputs
+    padded_x = 8 * layer.ci * (layer.hi + 2) * (layer.wi + 2)
+    assert t.reads_in <= 1.1 * padded_x
+    assert t.reads_out == 0.0
+
+
+def test_wgrad_batch_folds_into_reduction():
+    """wgrad reads scale with batch but the dW write volume does not:
+    the batch-reuse term of the training step."""
+    layer = vgg16_conv_layers(batch=1)[-1]
+    fwd = plan_conv(layer.hi, layer.wi, layer.ci, layer.co, 3, 3,
+                    batch=8, stride=(1, 1), padding=(1, 1),
+                    vmem_budget=S_1M)
+    wp = plan_conv_wgrad(fwd, vmem_budget=S_1M)
+    t1, t8 = wp.traffic(1), wp.traffic(8)
+    assert t8.writes_out == t1.writes_out     # dW written once, period
+    assert t8.reads == pytest.approx(8 * t1.reads)
+
+
+def test_wgrad_traffic_never_beats_bounds():
+    """No wgrad accounting may undercut q_dram_wgrad at the realized
+    footprint, across the VGG stack and budgets."""
+    for layer in vgg16_conv_layers(batch=4):
+        for budget in (256 * 1024, S_1M):
+            fwd = plan_conv(layer.hi, layer.wi, layer.ci, layer.co,
+                            3, 3, batch=4, stride=(1, 1),
+                            padding=(1, 1), vmem_budget=budget)
+            wp = plan_conv_wgrad(fwd, vmem_budget=budget)
+            t = wp.traffic(4)
+            assert t.total >= 0.999 * q_dram_wgrad(
+                layer, wp.footprint_elems())
+
+
+def test_training_plan_triple_and_memoization():
+    """plan_conv_training derives all three handles from the forward
+    plan; repeated derivation is cache-served."""
+    fwd = plan_conv(16, 16, 8, 8, 3, 3, batch=4, stride=(1, 1),
+                    padding=(1, 1), vmem_budget=S_1M)
+    tp = plan_conv_training(fwd, batch=4, vmem_budget=S_1M)
+    assert tp.dgrad_kernel
+    t = tp.traffic(4)
+    assert t.total == (t.fwd.total + t.dgrad.total + t.wgrad.total)
+    assert 0.0 < t.bwd_share < 1.0
+    hits0 = plan_conv.cache_info().hits
+    tp2 = plan_conv_training(fwd, batch=4, vmem_budget=S_1M)
+    assert tp2.dgrad is tp.dgrad              # memoized plan object
+    assert plan_conv.cache_info().hits > hits0
+    # grouped convs take the lax backward even at unit stride — the
+    # training plan must not report kernel dgrad for them
+    tg = plan_conv_training(fwd, batch=4, groups=2, vmem_budget=S_1M)
+    assert not tg.dgrad_kernel
+    # the ConvPlan-level surface agrees with the triple
+    assert fwd.training_traffic(4, vmem_budget=S_1M).total == t.total
+
+
+# --------------------------------------------------------------------------
+# q_dram_training sanity suite
+# --------------------------------------------------------------------------
+
+def test_q_dram_training_reduces_to_practical_without_bwd():
+    for layer in vgg16_conv_layers(batch=3)[:4]:
+        s = S_1M // 4
+        assert q_dram_training(layer, s, bwd=False) == \
+            q_dram_practical(layer, s)
+
+
+def test_q_dram_training_monotone_in_s_and_above_fwd():
+    """More on-chip memory never raises the bound (Fig. 13's slope),
+    and a training step can never move fewer words than inference."""
+    for layer in (vgg16_conv_layers(batch=3)[0],
+                  vgg16_conv_layers(batch=3)[7]):
+        vals = [q_dram_training(layer, s)
+                for s in (16 * 1024, 64 * 1024, 256 * 1024, 1 << 20)]
+        assert vals == sorted(vals, reverse=True)
+        for s, v in zip((16 * 1024, 64 * 1024), vals):
+            assert v > q_dram_practical(layer, s)
+            assert q_dram_dgrad(layer, s) >= 0.999 * (
+                layer.n_outputs + layer.n_weights + layer.n_inputs)
+
+
+def test_q_dram_training_components_respect_ideal_floors():
+    layer = vgg16_conv_layers(batch=2)[5]
+    huge = 1 << 30                            # floors dominate
+    assert q_dram_practical(layer, huge) == q_dram_ideal(layer)
+    assert q_dram_dgrad(layer, huge) == (
+        layer.n_outputs + layer.n_weights + layer.n_inputs)
+    touched = layer.batch * layer.ci * layer.fetched_area(layer.wo,
+                                                          layer.ho)
+    assert q_dram_wgrad(layer, huge) == (
+        touched + layer.n_outputs + layer.n_weights)
+
+
+# --------------------------------------------------------------------------
+# acceptance: VGG16 training-step traffic within bound multiple
+# --------------------------------------------------------------------------
+
+def test_vgg16_training_step_within_bound_multiple():
+    """Acceptance: the accounted fwd+dgrad+wgrad bytes of a VGG16
+    training step (batch 8, 1 MiB accounting budget) stay within
+    1.25x of q_dram_training at the realized plan footprints, with
+    dgrad planned through the kernel on every (stride-1) layer."""
+    params = init_vgg(jax.random.PRNGKey(0), n_classes=10,
+                      width_mult=1.0)
+    rep = vgg_training_step_report(params, 224, 224, batch=8,
+                                   vmem_budget=1 << 20)
+    assert rep["layers"] == 13
+    assert rep["dgrad_kernel_layers"] == 13
+    assert rep["train_vs_bound_x"] <= 1.25, rep
+    # the backward really dominates a step (what the accountant was
+    # blind to while the VJP deferred wholesale to XLA)
+    assert 0.5 < rep["bwd_share"] < 0.9
+
+
+def test_vgg_plan_handles_training_export():
+    """training=True exports (layer, ConvTrainingPlan) riding the same
+    fwd plans as the inference handles."""
+    params = init_vgg(jax.random.PRNGKey(0), n_classes=10,
+                      width_mult=0.1)
+    infer = vgg_plan_handles(params, 32, 32, batch=4,
+                             vmem_budget=S_1M)
+    train = vgg_plan_handles(params, 32, 32, batch=4,
+                             vmem_budget=S_1M, training=True)
+    assert len(infer) == len(train) == 13
+    for (la, plan), (lb, tp) in zip(infer, train):
+        assert la == lb
+        assert tp.fwd is plan                 # same memoized handle
+        assert tp.traffic(4).fwd.total == plan.traffic(4).total
+        assert tp.wgrad.traffic(4).writes_out >= la.n_weights
+
+
+# --------------------------------------------------------------------------
+# satellite regressions: block override, latency sentinel, drain loop
+# --------------------------------------------------------------------------
+
+def test_block_override_recomputes_halos_and_stays_correct():
+    """plan_conv(blocks=override) must recompute the overlapping
+    BlockSpec halos (the override carries none), and an overridden
+    conv2d_lb still matches lax on a 3x3/pad-1 layer."""
+    from repro.core.tpu_adapter import ConvBlockShape
+
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (2, 9, 9, 4))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 4, 6)) * 0.2
+    ref = conv2d_lb(x, w, padding=1, fallback=True)
+    out = conv2d_lb(x, w, padding=1, y_block=4, x_block=5, ci_block=2)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+    p = plan_conv(9, 9, 4, 6, 3, 3, batch=2, stride=(1, 1),
+                  padding=(1, 1),
+                  blocks=ConvBlockShape(y=4, x=5, co=6, ci=2,
+                                        halo_y=0, halo_x=0, b=1))
+    assert (p.blocks.halo_y, p.blocks.halo_x) == (4 + 2, 5 + 2)
+    # an explicit 0 is an invalid block, not "use the tuned value":
+    # the is-not-None contract forwards it and the kernel padding
+    # machinery rejects it downstream rather than silently ignoring it
+    with pytest.raises(Exception):
+        conv2d_lb(x, w, padding=1, y_block=0).block_until_ready()
+
+
+def test_pending_latency_is_none_and_excluded_from_summary():
+    """Never-dispatched requests report latency None (not 0.0), and
+    ledger percentiles only cover measured latencies."""
+    from repro.serve import ImageRequest, TrafficLedger
+
+    req = ImageRequest(rid=0, n_images=1, arrival=5.0)
+    assert req.latency is None                # pending: unmeasured
+    req.done = 5.25
+    assert req.latency == pytest.approx(0.25)
+
+    params = init_vgg(jax.random.PRNGKey(0), n_classes=4,
+                      width_mult=0.05)
+    handles = vgg_plan_handles(params, 8, 8, batch=2, vmem_budget=S_1M)
+    ledger = TrafficLedger(vmem_budget=S_1M)
+    ledger.charge_batch([(0, 1)], handles, bucket=2,
+                        latencies={0: 0.5})
+    ledger.charge_batch([(1, 1)], handles, bucket=2)   # unmeasured
+    s = ledger.summary()
+    assert s["measured_latencies"] == 1
+    assert s["p50_latency_s"] == pytest.approx(0.5)    # 0.0 would
+    assert s["max_latency_s"] == pytest.approx(0.5)    # deflate these
+
+
+def test_queue_drain_loops_until_empty():
+    """flush() pops one group only; drain() must loop until None so
+    trailing requests are never dropped on shutdown."""
+    from repro.serve import AdmissionQueue, ImageRequest
+
+    q = AdmissionQueue(buckets=(1, 2, 4), wait_budget=100.0)
+    for rid in range(6):
+        q.submit(ImageRequest(rid=rid, n_images=2, arrival=0.0))
+    first = q.flush()
+    assert first is not None and q.depth > 0  # one flush != drained
+    groups = list(q.drain())
+    assert q.depth == 0
+    drained = [r.rid for g, _ in groups for r in g]
+    assert [r.rid for r in first[0]] + drained == list(range(6))
+
+
+def test_server_drain_serves_every_trailing_request():
+    """Shutdown path: a queue holding several trailing groups is fully
+    served by server.drain()."""
+    from repro.serve import ImageServer
+
+    params = init_vgg(jax.random.PRNGKey(0), n_classes=4,
+                      width_mult=0.05)
+    t = [0.0]
+    srv = ImageServer(params, 8, 8, compute=False, clock=lambda: t[0],
+                      wait_budget=100.0, buckets=(1, 2))
+    rids = [srv.submit(n_images=2, now=0.0) for _ in range(5)]
+    results = srv.drain(now=0.0)
+    assert sorted(r.rid for r in results) == rids
+    assert srv.queue.depth == 0
+
+
+# --------------------------------------------------------------------------
+# smoke: the training example runs and reports the ratio
+# --------------------------------------------------------------------------
+
+def test_example_train_vgg_smoke(monkeypatch, capsys):
+    mod = _load(REPO / "examples" / "train_vgg.py")
+    monkeypatch.setattr(sys, "argv",
+                        ["train_vgg.py", "--steps", "1", "--batch", "2",
+                         "--image", "8", "--width-mult", "0.05"])
+    mod.main()
+    out = capsys.readouterr().out
+    assert "q_dram_training" in out and "dgrad-through-kernel" in out

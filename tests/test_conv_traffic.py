@@ -223,6 +223,43 @@ def test_accountant_matches_simulated_fetches(groups, stride, dilation):
     assert t.reads_out == 0.0
 
 
+def test_pooled_accountant_matches_simulator_on_padded_plane():
+    """Pooled layer whose *tile-padded* output plane exceeds the true
+    plane (the `ho_pad // pool` writes term of `_blocks_traffic`):
+    the accountant must equal the simulated per-BlockSpec fetch count
+    — pool windows are counted on the padded plane, exactly as the
+    kernel's out BlockSpec flushes them — and the overridden pooled
+    kernel still computes the right output."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.tpu_adapter import ConvBlockShape
+    from repro.kernels.conv_lb.ops import conv2d_lb
+
+    # ho = wo = 6 (pool-divisible), forced 4x4 tiles -> ho_pad = 8:
+    # padded plane not a multiple of the true plane
+    blocks = ConvBlockShape(y=4, x=4, co=4, ci=2, halo_y=0, halo_x=0,
+                            b=2)
+    t, plan = conv_lb_traffic(4, 6, 6, 4, 8, 3, 3, stride=1, padding=1,
+                              pool=2, plan=plan_conv(
+                                  6, 6, 4, 8, 3, 3, batch=4,
+                                  stride=(1, 1), padding=(1, 1),
+                                  pool=2, blocks=blocks))
+    assert (plan.ho, plan.ho_pad) == (6, 8)
+    rin, rw, wr = _simulate_fetches(4, plan, 3, 3, 1)
+    assert t.reads_in == rin
+    assert t.reads_w == rw
+    assert t.writes_out == wr
+    # the same forced blocks through the kernel stay numerically right
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (4, 6, 6, 4))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 4, 8)) * 0.2
+    out = conv2d_lb(x, w, padding=1, relu=True, pool=2,
+                    y_block=4, x_block=4, ci_block=2)
+    ref = conv2d_lb(x, w, padding=1, relu=True, pool=2, fallback=True)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+
+
 def test_conv_block_chooser_respects_budget_and_balance():
     """The unified chooser: fits the budget and lands near the paper's
     two key conditions (u ~= R*z, small streamed k)."""
