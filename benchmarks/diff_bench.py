@@ -10,6 +10,9 @@ Tracked metrics (by row-name suffix):
   * ``.../vs_bound_x``, ``.../vs_serving_x``,
     ``.../train_vs_bound_x`` — measured/bound ratios (the last over a
     full fwd+dgrad+wgrad training step), lower is better;
+  * ``.../resnet_vs_bound_x``, ``.../resnet_train_vs_bound_x`` — the
+    cross-model (graph-level) serve/train ratio families, gated like
+    VGG's (listed first: most-specific suffix wins);
   * ``.../w_reduction_x``, ``.../w_amortization_x``,
     ``.../reduction_x``, ``.../autotune_vs_closed_x`` — improvement
     factors, higher is better.
@@ -26,8 +29,11 @@ import re
 import sys
 from pathlib import Path
 
-# suffix -> True when lower values are better
+# suffix -> True when lower values are better; iteration order is
+# match precedence, so most-specific suffixes come first
 TRACKED = {
+    "resnet_train_vs_bound_x": True,  # cross-model training ratio
+    "resnet_vs_bound_x": True,        # cross-model serving ratio
     "train_vs_bound_x": True,    # training-step fwd+dgrad+wgrad ratio
     "vs_bound_x": True,
     "vs_serving_x": True,

@@ -55,4 +55,39 @@ def bench_serve_traffic():
     return rows
 
 
-ALL_SERVE = [bench_serve_traffic]
+def bench_resnet_serve_traffic():
+    """Cross-model serving: a full-width ResNet-20 (CIFAR 32x32
+    geometry — stride-2 downsampling, 1x1 projection shortcuts, fused
+    residual joins) through the same bucketed account-only server at
+    the 1 MiB budget.  The ``resnet_vs_bound_x`` family regression-
+    gates the cross-model ratios like VGG's."""
+    import jax
+
+    from repro.models.cnn import init_resnet, resnet_graph
+    from repro.serve import ImageServer
+
+    graph = resnet_graph()
+    params = init_resnet(jax.random.PRNGKey(0), graph, n_classes=10)
+    t = [0.0]
+    server = ImageServer(params, 32, 32, graph=graph, compute=False,
+                         clock=lambda: t[0], wait_budget=0.05)
+    for n in (1, 2, 1, 4, 2, 1, 1, 4, 2, 1, 3, 2, 1, 2, 4, 1):
+        server.submit(n_images=n, now=t[0])
+    server.poll(now=t[0])
+    server.drain(now=t[0])
+    s = server.ledger.summary()
+    model = s["by_model"][graph.name]
+    return [
+        ("serve/resnet20_mixed16/resnet_vs_bound_x", 0.0,
+         round(model["vs_bound_x"], 3)),
+        ("serve/resnet20_mixed16/w_amortization_x", 0.0,
+         round(s["w_amortization_x"], 2)),
+        ("serve/resnet20_mixed16/vs_serving_x", 0.0,
+         round(s["vs_serving_x"], 3)),
+        ("serve/resnet20_mixed16/MB_per_image", 0.0,
+         round(s["bytes_per_image"] / 1e6, 2)),
+        ("serve/resnet20_mixed16/dispatches", 0.0, s["dispatches"]),
+    ]
+
+
+ALL_SERVE = [bench_serve_traffic, bench_resnet_serve_traffic]

@@ -46,4 +46,28 @@ def bench_train_traffic():
     return rows
 
 
-ALL_TRAIN = [bench_train_traffic]
+def bench_resnet_train_traffic():
+    """Cross-model training step: ResNet-20 at batch 8 / 1 MiB through
+    the graph-level planner — the strided downsample convs get
+    accounted dgrad/wgrad (lax-fallback execution, planned all the
+    same), the stride-1 majority rides the kernel dgrad."""
+    t0 = time.perf_counter()
+
+    from repro.models.cnn import resnet_graph
+    from repro.models.graph import graph_training_step_report
+
+    rep = graph_training_step_report(resnet_graph(), 32, 32, batch=8,
+                                     vmem_budget=1 << 20)
+    plan_us = (time.perf_counter() - t0) * 1e6
+    return [
+        ("train/resnet20_b8/resnet_train_vs_bound_x", plan_us,
+         round(rep["train_vs_bound_x"], 3)),
+        ("train/resnet20_b8/MB_per_step", 0.0,
+         round(rep["bytes_per_step"] / 1e6, 1)),
+        ("train/resnet20_b8/bwd_share", 0.0, round(rep["bwd_share"], 3)),
+        ("train/resnet20_b8/dgrad_kernel_layers", 0.0,
+         rep["dgrad_kernel_layers"]),
+    ]
+
+
+ALL_TRAIN = [bench_train_traffic, bench_resnet_train_traffic]

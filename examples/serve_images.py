@@ -6,8 +6,13 @@ batches are padded to plan-friendly buckets so the batch-folded conv
 kernel's ``b_block`` tracks the dispatch batch, every bucket's
 plan + jit is cached after first use, and the per-request traffic
 ledger reports each request's HBM bytes against the Eq. (15) bound.
+``--model resnet`` serves a ResNet BasicBlock stack instead of VGG —
+same server, same ledger: the conv-graph IR makes the serving path
+model-agnostic (stride-2 downsampling, 1x1 projection shortcuts and
+fused residual joins ride the identical plan/accounting machinery).
 
   PYTHONPATH=src python examples/serve_images.py
+  PYTHONPATH=src python examples/serve_images.py --model resnet
 """
 
 import argparse
@@ -15,12 +20,13 @@ import time
 
 import jax
 
-from repro.models.cnn import init_vgg
+from repro.models.cnn import init_resnet, init_vgg, resnet_graph
 from repro.serve import ImageServer
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--model", choices=("vgg", "resnet"), default="vgg")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--image", type=int, default=16)
     ap.add_argument("--width-mult", type=float, default=0.08)
@@ -28,8 +34,13 @@ def main():
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
-    params = init_vgg(key, n_classes=10, width_mult=args.width_mult)
-    server = ImageServer(params, args.image, args.image,
+    if args.model == "resnet":
+        graph = resnet_graph(width_mult=args.width_mult)
+        params = init_resnet(key, graph, n_classes=10)
+    else:
+        graph = None
+        params = init_vgg(key, n_classes=10, width_mult=args.width_mult)
+    server = ImageServer(params, args.image, args.image, graph=graph,
                          buckets=(1, 2, 4), wait_budget=0.01,
                          compute=not args.account_only)
 

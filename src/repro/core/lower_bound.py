@@ -138,6 +138,30 @@ def q_dram_training(layer: ConvLayer, s: int, *, bwd: bool = True) -> float:
     return q
 
 
+def q_dram_graph(stages, *, bwd: bool = False) -> float:
+    """Per-graph Eq. (15) sum over heterogeneous layers.
+
+    The bound is per-conv, so a conv network's bound is the sum over
+    its layers — strided, 1x1, grouped alike.  ``stages`` is a
+    sequence of ``(ConvLayer, S)`` pairs (each layer scored at its own
+    realized footprint, the convention every distance-to-bound test
+    uses); ``bwd=True`` sums the training-step form
+    (:func:`q_dram_training`) instead of the inference form.  Residual
+    joins add their mandatory read on the *plan* side
+    (``ConvPlan.bound_words``), not here — this is the pure per-layer
+    conv sum."""
+    return sum(q_dram_training(layer, s, bwd=bwd) for layer, s in stages)
+
+
+def q_dram_graph_serving(stages, *, requests: int) -> float:
+    """Serving-horizon per-graph bound: the :func:`q_dram_serving` sum
+    over heterogeneous ``(ConvLayer, S)`` pairs — words *per image*
+    when one set of compiled plans serves ``requests`` images (the
+    weights of every layer amortize over the horizon jointly)."""
+    return sum(q_dram_serving(layer, s, requests=requests)
+               for layer, s in stages)
+
+
 def q_dram_naive(layer: ConvLayer) -> float:
     """No-reuse implementation: 2 accesses per MAC (Sec. III-B)."""
     return 2.0 * layer.macs

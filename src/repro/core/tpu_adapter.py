@@ -133,18 +133,23 @@ class ConvBlockShape:
                 + hk * wk * self.ci * self.co) * dtype_bytes
 
     def vmem_bytes(self, hk: int, wk: int, dtype_bytes: int = 4,
-                   w_pinned: bool = False) -> int:
+                   w_pinned: bool = False, residual: bool = False) -> int:
         # double-buffered streamed panels + resident psums; a weight
         # block whose index map is constant over the whole grid (sole
         # Ci and Co block) is never re-fetched, so it needs no second
-        # pipelining buffer — pass w_pinned=True to count it once
+        # pipelining buffer — pass w_pinned=True to count it once.
+        # A fused residual join streams one more double-buffered
+        # psum-tile-shaped operand (u x co at the serving dtype)
         in_buf = 2 * self.b * self.halo_y * self.halo_x * self.ci
         w_buf = (1 if w_pinned else 2) * hk * wk * self.ci * self.co
-        return self.psum_bytes + (in_buf + w_buf) * dtype_bytes
+        r_buf = 2 * self.u * self.co if residual else 0
+        return self.psum_bytes + (in_buf + w_buf + r_buf) * dtype_bytes
 
-    def footprint_elems(self, hk: int, wk: int) -> int:
-        """On-chip words S of the paper's model (no double buffering)."""
-        return (self.u * self.co
+    def footprint_elems(self, hk: int, wk: int,
+                        residual: bool = False) -> int:
+        """On-chip words S of the paper's model (no double buffering).
+        A fused residual join holds one more u x co operand tile."""
+        return (self.u * self.co * (2 if residual else 1)
                 + self.b * self.halo_y * self.halo_x * self.ci
                 + hk * wk * self.ci * self.co)
 

@@ -71,12 +71,14 @@ def halo_dims(y_block: int, x_block: int, hk: int, wk: int,
 def _conv_kernel(*refs, nci: int, hk: int, wk: int,
                  bb: int, ty: int, tx: int,
                  stride: tuple[int, int], dilation: tuple[int, int],
-                 has_bias: bool, relu: bool, pool: int):
-    if has_bias:
-        x_ref, w_ref, b_ref, o_ref, acc_ref = refs
-    else:
-        x_ref, w_ref, o_ref, acc_ref = refs
-        b_ref = None
+                 has_bias: bool, has_residual: bool, relu: bool,
+                 pool: int):
+    refs = list(refs)
+    x_ref, w_ref = refs[:2]
+    rest = refs[2:]
+    b_ref = rest.pop(0) if has_bias else None
+    r_ref = rest.pop(0) if has_residual else None
+    o_ref, acc_ref = rest
 
     @pl.when(pl.program_id(4) == 0)
     def _init():
@@ -104,6 +106,8 @@ def _conv_kernel(*refs, nci: int, hk: int, wk: int,
         acc = acc_ref[...]
         if b_ref is not None:                 # fused epilogue: the psum
             acc = acc + b_ref[0]              # tile is still in VMEM
+        if r_ref is not None:                 # residual join, pre-ReLU:
+            acc = acc + r_ref[...].astype(jnp.float32)
         if relu:
             acc = jnp.maximum(acc, 0.0)
         if pool > 1:
@@ -114,6 +118,7 @@ def _conv_kernel(*refs, nci: int, hk: int, wk: int,
 
 def conv_lb_call(x: jax.Array, w: jax.Array, *,
                  bias: jax.Array | None = None,
+                 residual: jax.Array | None = None,
                  relu: bool = False, pool: int = 1,
                  stride: tuple[int, int] = (1, 1),
                  dilation: tuple[int, int] = (1, 1),
@@ -122,7 +127,10 @@ def conv_lb_call(x: jax.Array, w: jax.Array, *,
                  ci_block: int, co_block: int,
                  out_dtype=None, interpret: bool = True) -> jax.Array:
     """x: (B, Hp, Wp, Ci) pre-padded NHWC; w: (Hk, Wk, Ci, Co);
-    bias: (1, Co) or None.
+    bias: (1, Co) or None; residual: (B, Ho, Wo, Co) pre-pool tensor
+    added on the psum tile before the ReLU (the residual join of a
+    BasicBlock, served by one streamed read per output tile instead of
+    a separate HBM round trip) or None.
 
     See the module docstring for the padding/divisibility contract."""
     b, hp, wp, ci = x.shape
@@ -142,10 +150,14 @@ def conv_lb_call(x: jax.Array, w: jax.Array, *,
     nci, nco = ci // ci_block, co // co_block
     yp, xp = halo_dims(y_block, x_block, hk, wk, stride, dilation)
     out_dtype = out_dtype or x.dtype
+    if residual is not None:
+        assert residual.shape == (b, ho, wo, co), (residual.shape,
+                                                   (b, ho, wo, co))
     kern = functools.partial(_conv_kernel, nci=nci, hk=hk, wk=wk,
                              bb=b_block, ty=y_block, tx=x_block,
                              stride=stride, dilation=dilation,
                              has_bias=bias is not None,
+                             has_residual=residual is not None,
                              relu=relu, pool=pool)
     in_specs = [
         # overlapping halo tile: element offsets, not block indices
@@ -163,6 +175,13 @@ def conv_lb_call(x: jax.Array, w: jax.Array, *,
         in_specs.append(pl.BlockSpec(
             (1, co_block), lambda bi, yi, xi, coi, cii: (0, coi)))
         operands.append(bias)
+    if residual is not None:
+        # pre-pool psum-tile geometry: one streamed fetch per
+        # (bi, yi, xi, coi) — the Ci sweep never re-reads it
+        in_specs.append(pl.BlockSpec(
+            (b_block, y_block, x_block, co_block),
+            lambda bi, yi, xi, coi, cii: (bi, yi, xi, coi)))
+        operands.append(residual)
     return pl.pallas_call(
         kern,
         grid=(nb, ny, nx, nco, nci),

@@ -18,8 +18,10 @@ re-plan):
 The wrapper owns the tiling contract (padding so tiles divide the
 output plane, batch divides into b_block images, and every halo read
 is in bounds) and supports strided, dilated and grouped convolutions
-plus a *fused epilogue* (``bias``/``relu``/aligned max-``pool``)
-applied while the psum tile is still in VMEM; ``fallback=True`` routes
+plus a *fused epilogue* (``bias``/``residual`` join/``relu``/aligned
+max-``pool``) applied while the psum tile is still in VMEM — a
+residual shortcut is added before the ReLU for one streamed read
+instead of a separate HBM round trip; ``fallback=True`` routes
 the same surface through ``lax.conv_general_dilated`` (XLA's schedule,
 identical math).  Input (lhs) dilation and asymmetric before/after
 padding are out of scope for both paths — express those directly via
@@ -106,6 +108,10 @@ class ConvPlan:
     co: int = 0
     py: int = 0        # conv padding
     px: int = 0
+    # a residual join lands on this conv's output: the fused epilogue
+    # streams one pre-pool output-shaped read per psum tile (accounted
+    # in traffic()), and the bound gains the join's mandatory read
+    residual: bool = False
 
     @property
     def grid(self) -> tuple[int, int, int, int]:
@@ -122,15 +128,31 @@ class ConvPlan:
         serves every arrival batch that shares a ``b_block`` bucket)."""
         return _blocks_traffic(batch, self.blocks, self.hk, self.wk,
                                self.ho, self.wo, self.ci_pad,
-                               self.co_pad, self.pool)
+                               self.co_pad, self.pool,
+                               residual=self.residual)
 
     def traffic_bytes(self, batch: int, dtype_bytes: int = 4) -> float:
         return self.traffic(batch).total * dtype_bytes
 
     def footprint_elems(self) -> int:
         """Realized on-chip words S (the paper-model footprint the
-        Eq. (15) comparisons are evaluated at)."""
-        return self.blocks.footprint_elems(self.hk, self.wk)
+        Eq. (15) comparisons are evaluated at — a fused residual
+        join's streamed operand tile is part of it)."""
+        return self.blocks.footprint_elems(self.hk, self.wk,
+                                           residual=self.residual)
+
+    def bound_words(self, layer) -> float:
+        """This layer's Eq. (15) bound at the realized plan footprint,
+        plus the residual join's mandatory once-per-word read when the
+        plan fuses one (the join operand must enter the chip exactly
+        like any input — the bound side of the fused epilogue's
+        streamed read)."""
+        from repro.core.lower_bound import q_dram_practical
+
+        q = q_dram_practical(layer, self.footprint_elems())
+        if self.residual:
+            q += float(layer.n_outputs)
+        return q
 
     def training_traffic(self, batch: int, *, dtype_bytes: int = 4,
                          vmem_budget: int | None = None,
@@ -146,7 +168,7 @@ class ConvPlan:
 
 def _blocks_traffic(batch: int, blk: ConvBlockShape, hk: int, wk: int,
                     ho: int, wo: int, ci: int, co: int,
-                    pool: int = 1) -> Traffic:
+                    pool: int = 1, residual: bool = False) -> Traffic:
     """HBM words moved by the kernel's BlockSpecs for one group.
 
     Pallas re-fetches an operand block whenever its index-map output
@@ -177,6 +199,11 @@ def _blocks_traffic(batch: int, blk: ConvBlockShape, hk: int, wk: int,
     w_fetches = steps if nco * nci > 1 else 1
     reads_in = in_fetches * tb * blk.halo_y * blk.halo_x * blk.ci
     reads_w = w_fetches * hk * wk * blk.ci * blk.co
+    if residual:
+        # fused residual join: the pre-pool output-shaped operand is
+        # streamed once per (bi, yi, xi, coi) psum tile — its index map
+        # ignores the Ci sweep, so it is never re-fetched within one
+        reads_in += nb * tb * ho_pad * wo_pad * co_pad
     writes = nb * tb * (ho_pad // pool) * (wo_pad // pool) * co_pad
     return Traffic(reads_in=float(reads_in), reads_w=float(reads_w),
                    reads_out=0.0, writes_out=float(writes))
@@ -207,7 +234,8 @@ def autotune_conv_blocks(batch: int, ho: int, wo: int, ci: int, co: int,
                          hk: int, wk: int, *,
                          stride: tuple[int, int],
                          dilation: tuple[int, int],
-                         pool: int = 1, dtype_bytes: int = 4,
+                         pool: int = 1, residual: bool = False,
+                         dtype_bytes: int = 4,
                          vmem_budget: int,
                          seed: ConvBlockShape) -> ConvBlockShape:
     """Traffic-guided plan autotuner (the 'exhaustive search' of the
@@ -219,14 +247,26 @@ def autotune_conv_blocks(batch: int, ho: int, wo: int, ci: int, co: int,
     (sole Ci & Co block — single-buffered, fetched once for the whole
     grid) when it fits, and keep whichever :func:`conv_plan_score`
     rates cheapest.  ``seed`` (the closed form) is always a candidate,
-    so the result never scores worse than the closed form."""
+    so the result never scores worse than the closed form —
+    ``residual=True`` (a fused join streams an extra double-buffered
+    u x co_b operand tile) first shrinks the seed's co_b until the
+    join's buffer fits too, so every candidate honors the budget."""
     sy, sx = stride
     dy, dx = dilation
     db = dtype_bytes
     kk = hk * wk
 
     def traffic(blk: ConvBlockShape) -> Traffic:
-        return _blocks_traffic(batch, blk, hk, wk, ho, wo, ci, co, pool)
+        return _blocks_traffic(batch, blk, hk, wk, ho, wo, ci, co, pool,
+                               residual=residual)
+
+    def fits(blk: ConvBlockShape) -> bool:
+        pinned = blk.ci >= ci and blk.co >= co
+        return blk.vmem_bytes(hk, wk, db, w_pinned=pinned,
+                              residual=residual) <= vmem_budget
+    while residual and not fits(seed) and seed.co > 1:
+        seed = dataclasses.replace(seed, co=balanced_tile(co,
+                                                          seed.co // 2))
 
     cands = [(traffic(seed), seed)]
     for b, y, x, cib in conv_block_candidates(batch, ho, wo, ci):
@@ -234,9 +274,11 @@ def autotune_conv_blocks(batch: int, ho: int, wo: int, ci: int, co: int,
         yp = (y - 1) * sy + (hk - 1) * dy + 1
         xp = (x - 1) * sx + (wk - 1) * dx + 1
         # largest co_b under the budget: psums 4*b*y*x*co_b plus
-        # double-buffered input (b*yp*xp*cib) and weight (kk*cib*co_b)
+        # double-buffered input (b*yp*xp*cib), weight (kk*cib*co_b)
+        # and, for a fused join, residual (b*y*x*co_b) panels
         free = vmem_budget - 2 * db * b * yp * xp * cib
-        denom = 4 * b * y * x + 2 * db * kk * cib
+        denom = (4 * b * y * x + 2 * db * kk * cib
+                 + (2 * db * b * y * x if residual else 0))
         cobs = []
         if free // denom >= 1:
             cobs.append(min(co, int(free // denom)))
@@ -246,8 +288,7 @@ def autotune_conv_blocks(batch: int, ho: int, wo: int, ci: int, co: int,
             cob = balanced_tile(co, cob)
             blk = ConvBlockShape(y=y, x=x, co=cob, ci=cib,
                                  halo_y=yp, halo_x=xp, b=b)
-            pinned = cib >= ci and cob >= co
-            if blk.vmem_bytes(hk, wk, db, w_pinned=pinned) <= vmem_budget:
+            if fits(blk):
                 cands.append((traffic(blk), blk))
     return min(cands,
                key=lambda tb: (conv_plan_score(tb[0]),
@@ -258,6 +299,7 @@ def autotune_conv_blocks(batch: int, ho: int, wo: int, ci: int, co: int,
 def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
               batch: int = 1, stride=(1, 1), padding=(0, 0),
               dilation=(1, 1), pool: int = 1,
+              residual: bool = False,
               blocks: ConvBlockShape | None = None,
               dtype_bytes: int = 4,
               vmem_budget: int | None = None,
@@ -265,7 +307,12 @@ def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
     """Resolve blocks + padding for a (B, H, W, Ci) -> Co conv.
 
     LRU-cached on the full layer geometry: the same geometry inside a
-    jit retrace (or across layers of a model) pays no re-planning."""
+    jit retrace (or across layers of a model) pays no re-planning.
+    ``residual=True`` marks a fused residual join on the output: its
+    streamed read is accounted in :meth:`ConvPlan.traffic`, its
+    double-buffered operand tile in the autotuner's VMEM fit, and its
+    resident tile in :meth:`ConvPlan.footprint_elems` (the S the
+    Eq. (15) comparisons are evaluated at)."""
     sy, sx = _pair(stride)
     py, px = _pair(padding)
     dy, dx = _pair(dilation)
@@ -286,7 +333,8 @@ def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
         if autotune:
             blocks = autotune_conv_blocks(
                 batch, ho, wo, ci, co, hk, wk, stride=(sy, sx),
-                dilation=(dy, dx), pool=pool, dtype_bytes=dtype_bytes,
+                dilation=(dy, dx), pool=pool, residual=residual,
+                dtype_bytes=dtype_bytes,
                 vmem_budget=budget, seed=blocks)
     ty = _snap_pool(min(blocks.y, ho), ho, pool)
     tx = _snap_pool(min(blocks.x, wo), wo, pool)
@@ -305,7 +353,8 @@ def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
                     ci_pad=round_up(ci, cib), co_pad=round_up(co, cob),
                     stride=(sy, sx), dilation=(dy, dx), pool=pool,
                     hk=hk, wk=wk,
-                    h=h, w=w, ci=ci, co=co, py=py, px=px)
+                    h=h, w=w, ci=ci, co=co, py=py, px=px,
+                    residual=residual)
 
 
 # --------------------------------------------------------------------------
@@ -539,12 +588,12 @@ class ConvTrainingPlan:
     def bound_words(self, layer) -> float:
         """q_dram_training with each pass's Eq. (15) term evaluated at
         that pass's *realized* plan footprint (the same convention the
-        forward tests score distance-to-bound with)."""
-        from repro.core.lower_bound import (q_dram_dgrad,
-                                            q_dram_practical,
-                                            q_dram_wgrad)
+        forward tests score distance-to-bound with).  The forward term
+        rides :meth:`ConvPlan.bound_words`, so a fused residual join's
+        mandatory read is on the bound side too."""
+        from repro.core.lower_bound import q_dram_dgrad, q_dram_wgrad
 
-        return (q_dram_practical(layer, self.fwd.footprint_elems())
+        return (self.fwd.bound_words(layer)
                 + q_dram_dgrad(layer, self.dgrad.footprint_elems())
                 + q_dram_wgrad(layer, self.wgrad.footprint_elems()))
 
@@ -580,8 +629,9 @@ def _pad_axis(a, axis, target):
     return a
 
 
-def _conv_one_group(x, w, bias, plan: ConvPlan, py: int, px: int,
-                    relu: bool, out_dtype, interpret: bool) -> jax.Array:
+def _conv_one_group(x, w, bias, residual, plan: ConvPlan, py: int,
+                    px: int, relu: bool, out_dtype,
+                    interpret: bool) -> jax.Array:
     from repro.kernels.conv_lb.kernel import conv_lb_call
 
     b = x.shape[0]
@@ -595,7 +645,15 @@ def _conv_one_group(x, w, bias, plan: ConvPlan, py: int, px: int,
     if bias is not None:
         bias2d = _pad_axis(bias.reshape(1, -1).astype(jnp.float32),
                            1, plan.co_pad)
-    out = conv_lb_call(x, w, bias=bias2d, relu=relu, pool=plan.pool,
+    if residual is not None:
+        # pad the join operand to the pre-pool psum-tile geometry
+        residual = jnp.pad(residual,
+                           ((0, 0), (0, plan.ho_pad - plan.ho),
+                            (0, plan.wo_pad - plan.wo), (0, 0)))
+        residual = _pad_axis(_pad_axis(residual, 3, plan.co_pad),
+                             0, round_up(b, blk.b))
+    out = conv_lb_call(x, w, bias=bias2d, residual=residual, relu=relu,
+                       pool=plan.pool,
                        stride=plan.stride, dilation=plan.dilation,
                        b_block=blk.b, y_block=blk.y, x_block=blk.x,
                        ci_block=blk.ci, co_block=blk.co,
@@ -612,10 +670,14 @@ def _lax_conv(x, w, sy, sx, py, px, dy, dx, groups):
         preferred_element_type=jnp.float32).astype(x.dtype)
 
 
-def _lax_epilogue(y, bias, relu, pool):
-    """The unfused reference epilogue (bias -> relu -> maxpool)."""
+def _lax_epilogue(y, bias, relu, pool, residual=None):
+    """The unfused reference epilogue (bias -> residual join -> relu
+    -> maxpool) — the exact math the kernel fuses on the psum tile."""
     if bias is not None:
         y = (y.astype(jnp.float32) + bias.astype(jnp.float32)
+             ).astype(y.dtype)
+    if residual is not None:
+        y = (y.astype(jnp.float32) + residual.astype(jnp.float32)
              ).astype(y.dtype)
     if relu:
         y = jnp.maximum(y, 0).astype(y.dtype)
@@ -632,6 +694,7 @@ def _lax_epilogue(y, bias, relu, pool):
                                    "b_block", "y_block", "x_block",
                                    "ci_block", "co_block"))
 def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
+              residual: jax.Array | None = None,
               *, stride=1, padding=0, dilation=1, groups: int = 1,
               relu: bool = False, pool: int = 1,
               b_block: int | None = None,
@@ -645,12 +708,15 @@ def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
     -> (B, Ho/pool, Wo/pool, Co).
     ``stride``/``padding``/``dilation`` take an int or an (h, w) pair;
     ``dilation`` is kernel (rhs) dilation.  ``bias`` (shape (Co,)),
+    ``residual`` (a (B, Ho, Wo, Co) pre-pool tensor — the shortcut
+    join of a residual block, added after bias and before the ReLU),
     ``relu`` and ``pool`` (an aligned pool x pool max-pool, stride =
     pool) form the fused epilogue: applied in-kernel on the VMEM psum
-    tile, so the layer issues a single output write and no separate
-    bias/relu/pool HBM round trip.  ``fallback=True`` routes through
-    ``lax.conv_general_dilated`` + the unfused epilogue (same math,
-    XLA's schedule).
+    tile, so the layer issues a single output write and the shortcut
+    join costs one streamed read instead of a separate
+    write -> read -> add -> write HBM round trip.  ``fallback=True``
+    routes through ``lax.conv_general_dilated`` + the unfused epilogue
+    (same math, XLA's schedule).
 
     Differentiable, with a *planned* backward: for unit-stride
     ungrouped layers (the whole VGG stack) dx is computed by the
@@ -671,16 +737,18 @@ def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
         raise ValueError(f"groups={groups} incompatible with "
                          f"Ci={ci}, w Ci={ci_g}, Co={co}")
 
-    def _lax_full(x, w, bias=None):
+    def _lax_full(x, w, bias=None, residual=None):
         return _lax_epilogue(_lax_conv(x, w, sy, sx, py, px, dy, dx,
-                                       groups), bias, relu, pool)
+                                       groups), bias, relu, pool,
+                             residual=residual)
 
     if fallback:
-        return _lax_full(x, w, bias)
+        return _lax_full(x, w, bias, residual)
 
     plan = plan_conv(h, wd, ci_g, co // groups, hk, wk, batch=b,
                      stride=(sy, sx), padding=(py, px),
                      dilation=(dy, dx), pool=pool,
+                     residual=residual is not None,
                      dtype_bytes=x.dtype.itemsize, autotune=autotune)
     if any(v is not None for v in (b_block, y_block, x_block,
                                    ci_block, co_block)):
@@ -698,44 +766,50 @@ def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
             b=bk.b if b_block is None else b_block)
         plan = plan_conv(h, wd, ci_g, co // groups, hk, wk, batch=b,
                          stride=(sy, sx), padding=(py, px),
-                         dilation=(dy, dx), pool=pool, blocks=override)
+                         dilation=(dy, dx), pool=pool,
+                         residual=residual is not None, blocks=override)
     co_g = co // groups
 
-    def _run(x, w, bias):
+    def _run(x, w, bias, residual):
         outs = []
         for g in range(groups):
             xg = x[..., g * ci_g:(g + 1) * ci_g]
             wg = w[..., g * co_g:(g + 1) * co_g]
             bg = None if bias is None else bias[g * co_g:(g + 1) * co_g]
-            outs.append(_conv_one_group(xg, wg, bg, plan, py, px,
+            rg = (None if residual is None
+                  else residual[..., g * co_g:(g + 1) * co_g])
+            outs.append(_conv_one_group(xg, wg, bg, rg, plan, py, px,
                                         relu, x.dtype, interpret))
         return outs[0] if groups == 1 else jnp.concatenate(outs, axis=-1)
 
     @jax.custom_vjp
-    def kernel_conv(x, w, bias):
-        return _run(x, w, bias)
+    def kernel_conv(x, w, bias, residual):
+        return _run(x, w, bias, residual)
 
-    def _fwd(x, w, bias):
-        return kernel_conv(x, w, bias), (x, w, bias)
+    def _fwd(x, w, bias, residual):
+        return kernel_conv(x, w, bias, residual), (x, w, bias, residual)
 
     def _bwd(res, g):
-        x, w, bias = res
+        x, w, bias, residual = res
         if not (dgrad_rides_kernel(plan) and groups == 1):
             # strided/grouped: lax VJP wholesale (still planned and
             # accounted via plan_conv_dgrad/plan_conv_wgrad handles).
-            # bias=None is a leafless pytree primal: jax.vjp hands
-            # back a matching None cotangent, so one scaffold covers
-            # both arities
+            # bias/residual=None are leafless pytree primals: jax.vjp
+            # hands back matching None cotangents, so one scaffold
+            # covers every arity
             _, vjp = jax.vjp(_lax_full, *res)
             return vjp(g)
         # 1) peel the epilogue: recompute the pre-epilogue conv output
         #    (cheaper than spilling it from the fused kernel, whose
         #    whole point is the single post-epilogue write) and pull g
-        #    back through bias/relu/pool; db falls out here
+        #    back through bias/residual/relu/pool; db and the residual
+        #    cotangent (the join's pass-through) fall out here
         y = _lax_conv(x, w, sy, sx, py, px, dy, dx, 1)
         _, epi_vjp = jax.vjp(
-            lambda yy, bb: _lax_epilogue(yy, bb, relu, pool), y, bias)
-        gy, db = epi_vjp(g)
+            lambda yy, bb, rr: _lax_epilogue(yy, bb, relu, pool,
+                                             residual=rr),
+            y, bias, residual)
+        gy, db, dres = epi_vjp(g)
         # 2) dgrad through the planned kernel: dy * flipped weights at
         #    full padding rides the same batch-folded u x z dataflow
         gx = conv2d_lb(gy, _flip_w(w), None, stride=1,
@@ -747,10 +821,10 @@ def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
         _, w_vjp = jax.vjp(
             lambda ww: _lax_conv(x, ww, sy, sx, py, px, dy, dx, 1), w)
         (gw,) = w_vjp(gy)
-        return gx, gw, db
+        return gx, gw, db, dres
 
     kernel_conv.defvjp(_fwd, _bwd)
-    return kernel_conv(x, w, bias)
+    return kernel_conv(x, w, bias, residual)
 
 
 # --------------------------------------------------------------------------

@@ -13,6 +13,10 @@ bought vs per-image dispatch.
   # paper-scale serving economics (no compute, milliseconds):
   PYTHONPATH=src python -m repro.launch.serve_images \
       --account-only --width-mult 1.0 --image 224 --requests 32
+
+  # cross-model: a ResNet-20 stack through the same bucketed ledger
+  PYTHONPATH=src python -m repro.launch.serve_images \
+      --model resnet --account-only --width-mult 1.0 --image 32
 """
 
 from __future__ import annotations
@@ -22,12 +26,15 @@ import time
 
 import jax
 
-from repro.models.cnn import init_vgg
+from repro.models.cnn import init_resnet, init_vgg, resnet_graph
 from repro.serve import ImageServer
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--model", choices=("vgg", "resnet"), default="vgg",
+                    help="serve the VGG stack or a ResNet-20 "
+                         "BasicBlock stack (width-mult scales both)")
     ap.add_argument("--width-mult", type=float, default=0.08)
     ap.add_argument("--image", type=int, default=16,
                     help="square image edge")
@@ -48,9 +55,14 @@ def main() -> None:
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(args.seed)
-    params = init_vgg(key, n_classes=args.classes,
-                      width_mult=args.width_mult)
-    server = ImageServer(params, args.image, args.image,
+    if args.model == "resnet":
+        graph = resnet_graph(width_mult=args.width_mult)
+        params = init_resnet(key, graph, n_classes=args.classes)
+    else:
+        graph = None
+        params = init_vgg(key, n_classes=args.classes,
+                          width_mult=args.width_mult)
+    server = ImageServer(params, args.image, args.image, graph=graph,
                          buckets=args.buckets,
                          wait_budget=args.wait_ms / 1e3,
                          account_budget=args.budget_kib * 1024,

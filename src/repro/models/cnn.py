@@ -1,14 +1,21 @@
-"""VGG-style CNN in JAX — the paper's own evaluation workload.
+"""Conv-network model builders over the :mod:`repro.models.graph` IR.
+
+VGG (the paper's own evaluation workload) is now just a
+:class:`~repro.models.graph.ConvGraph` builder — the ``vgg_*``
+functions are thin compat wrappers over the generic graph walk — and
+ResNet BasicBlock stacks (:func:`resnet_graph`) ride the same IR:
+stride-2 downsampling convs, 1x1 projection shortcuts and residual
+joins all flow through the one planner/forward/accounting surface.
 
 The conv layers run through :mod:`repro.kernels.conv_lb.ops` (the
 spatially-tiled Pallas kernel realizing the paper's dataflow) when
 requested, or ``jax.lax.conv_general_dilated`` otherwise; both are
 numerically checked against each other in tests.
 
-Init is He (Kaiming) for the conv stack: each ReLU halves activation
-variance, so without the sqrt(2) gain a 13-layer stack attenuates the
-signal ~sqrt(2)^13 ~= 90x and training plateaus at the entropy floor
-(the exact failure tests used to show: loss stuck at ~ln(n_classes)).
+Init is He (Kaiming): each ReLU halves activation variance, so without
+the sqrt(2) gain a 13-layer stack attenuates the signal
+~sqrt(2)^13 ~= 90x and training plateaus at the entropy floor (the
+exact failure tests used to show: loss stuck at ~ln(n_classes)).
 """
 
 from __future__ import annotations
@@ -20,6 +27,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.vgg import _CFG
+from repro.models.graph import (ConvGraph, ConvNode, graph_forward,
+                                graph_logits, graph_plan_handles,
+                                graph_stages, graph_training_step_report,
+                                init_graph)
 from repro.models.layers import dense_init, split_keys
 
 
@@ -52,11 +63,26 @@ def init_vgg(key, n_classes: int = 10, width_mult: float = 1.0,
 _POOL_AFTER = {"conv1_2", "conv2_2", "conv3_3", "conv4_3", "conv5_3"}
 
 
+def vgg_graph(params, name: str = "vgg") -> ConvGraph:
+    """The VGG stack the params realize, as a :class:`ConvGraph`.
+
+    Channel counts come from the param shapes (params may be built
+    with any ``width_mult``), the pool cadence from the VGG-16 config
+    — the graph walk then resolves plane sizes and pool fusion exactly
+    as the forward will execute them."""
+    nodes = []
+    for p, (cfg_name, *_rest) in zip(params["convs"], _CFG):
+        ci, co = int(p["w"].shape[2]), int(p["w"].shape[3])
+        nodes.append(ConvNode(name=cfg_name, ci=ci, co=co,
+                              pool=2 if cfg_name in _POOL_AFTER else 1))
+    return ConvGraph(name=name, nodes=tuple(nodes))
+
+
 @dataclasses.dataclass(frozen=True)
 class ConvStage:
     """One conv layer of the stack as the forward pass will execute it
-    for a given input-plane geometry (the single source of truth shared
-    by :func:`vgg_forward` and the serve-path traffic accounting)."""
+    for a given input-plane geometry (legacy VGG view of the generic
+    :class:`~repro.models.graph.GraphStage`)."""
 
     name: str
     ci: int
@@ -67,31 +93,22 @@ class ConvStage:
     fused_pool: bool   # ... and the kernel path fuses it in-epilogue
 
 
-def vgg_conv_geometry(params, h: int, w: int,
-                      in_ch: int = 3) -> list[ConvStage]:
+def vgg_conv_geometry(params, h: int, w: int, in_ch: int = 3, *,
+                      strict: bool = False) -> list[ConvStage]:
     """Walk the conv stack for an (h, w, in_ch) image.
 
-    Channel counts come from the param shapes (params may be built with
-    any ``width_mult``; reduced-width smoke configs may truncate the
-    stack at the first channel mismatch), plane sizes from the pool
-    cadence — exactly the layers/epilogues ``vgg_forward`` will run, so
-    plans and traffic charged off this walk match the executed jaxpr.
+    Thin wrapper over :func:`repro.models.graph.graph_stages` — the
+    one walk shared by forward, plan handles and bounds, so plans and
+    traffic charged off it match the executed jaxpr.  ``strict=False``
+    (the historical default here) truncates the stack at the first
+    channel mismatch — the reduced-width smoke-path compat mode; the
+    generic graph walk errors instead unless truncation is opted into.
     """
-    stages = []
-    for p, (name, *_rest) in zip(params["convs"], _CFG):
-        ci, co = int(p["w"].shape[2]), int(p["w"].shape[3])
-        if in_ch != ci:
-            break
-        pool = name in _POOL_AFTER and h >= 2 and w >= 2
-        # the fused epilogue needs pool-aligned planes; odd dims take
-        # the (rare) unfused pool after the fused conv+bias+relu
-        fused = pool and h % 2 == 0 and w % 2 == 0
-        stages.append(ConvStage(name=name, ci=ci, co=co, h=h, w=w,
-                                pool=pool, fused_pool=fused))
-        if pool:
-            h, w = h // 2, w // 2
-        in_ch = co
-    return stages
+    return [ConvStage(name=st.node.name, ci=st.node.ci, co=st.node.co,
+                      h=st.h, w=st.w, pool=st.pool > 1,
+                      fused_pool=st.fused_pool)
+            for st in graph_stages(vgg_graph(params), h, w, in_ch,
+                                   strict=strict)]
 
 
 def vgg_conv_layers_for(params, h: int, w: int, *, batch: int,
@@ -110,71 +127,22 @@ def vgg_plan_handles(params, h: int, w: int, *, batch: int,
                      vmem_budget: int | None = None,
                      training: bool = False):
     """Exported plan handles: [(ConvLayer, ConvPlan)] per conv stage at
-    this arrival batch, from the same memoized ``plan_conv`` cache the
-    kernel path's jit trace resolves against — one planning pass per
-    (bucket, layer-geometry), then every dispatch reuses the handle.
-
-    ``vmem_budget=None`` yields the kernel's own execution plans; an
-    explicit budget (e.g. the paper's 1 MiB GBuf scale) yields the
-    accounting plans the ledger scores distance-to-bound with.
-
-    ``training=True`` exports ``(ConvLayer, ConvTrainingPlan)``
-    instead: the forward handle plus the planned dgrad/wgrad convs of
-    the layer's backward (``plan_conv_training``), so a training step's
-    fwd+dgrad+wgrad bytes are accountable per layer against
-    ``q_dram_training``.
-    """
-    from repro.core.layer import ConvLayer
-    from repro.kernels.conv_lb.ops import plan_conv, plan_conv_training
-
-    handles = []
-    for g in vgg_conv_geometry(params, h, w, in_ch):
-        layer = ConvLayer(name=g.name, batch=batch, ci=g.ci, co=g.co,
-                          hi=g.h, wi=g.w, hk=3, wk=3, stride=1, pad=1)
-        plan = plan_conv(g.h, g.w, g.ci, g.co, 3, 3, batch=batch,
-                         stride=(1, 1), padding=(1, 1),
-                         pool=2 if g.fused_pool else 1,
-                         dtype_bytes=dtype_bytes,
-                         vmem_budget=vmem_budget)
-        if training:
-            handles.append((layer, plan_conv_training(
-                plan, batch=batch, dtype_bytes=dtype_bytes,
-                vmem_budget=vmem_budget)))
-        else:
-            handles.append((layer, plan))
-    return handles
+    this arrival batch — :func:`graph_plan_handles` over the VGG graph
+    (see there for the ``vmem_budget``/``training`` semantics)."""
+    return graph_plan_handles(vgg_graph(params), h, w, batch=batch,
+                              in_ch=in_ch, dtype_bytes=dtype_bytes,
+                              vmem_budget=vmem_budget, training=training,
+                              strict=False)
 
 
 def vgg_training_step_report(params, h: int, w: int, *, batch: int,
                              in_ch: int = 3, dtype_bytes: int = 4,
                              vmem_budget: int | None = None) -> dict:
-    """Per-training-step traffic accounting for the conv stack.
-
-    Sums every layer's planned fwd+dgrad+wgrad words
-    (:meth:`ConvTrainingPlan.traffic`) and scores them against
-    ``q_dram_training`` with each pass's Eq. (15) term at its realized
-    plan footprint — the training-step counterpart of the serve
-    ledger's ``vs_bound_x``.
-    """
-    handles = vgg_plan_handles(params, h, w, batch=batch, in_ch=in_ch,
-                               dtype_bytes=dtype_bytes,
-                               vmem_budget=vmem_budget, training=True)
-    words = fwd_words = bound = 0.0
-    kernel_layers = 0
-    for layer, tp in handles:
-        t = tp.traffic(batch)
-        words += t.total
-        fwd_words += t.fwd.total
-        bound += tp.bound_words(layer)
-        kernel_layers += int(tp.dgrad_kernel)
-    return {
-        "layers": len(handles),
-        "dgrad_kernel_layers": kernel_layers,
-        "bytes_per_step": words * dtype_bytes,
-        "bound_bytes_per_step": bound * dtype_bytes,
-        "train_vs_bound_x": words / max(bound, 1e-30),
-        "bwd_share": (words - fwd_words) / max(words, 1e-30),
-    }
+    """Per-training-step traffic accounting for the VGG conv stack —
+    :func:`graph_training_step_report` over the VGG graph."""
+    return graph_training_step_report(
+        vgg_graph(params), h, w, batch=batch, in_ch=in_ch,
+        dtype_bytes=dtype_bytes, vmem_budget=vmem_budget, strict=False)
 
 
 def vgg_forward(params, images, use_kernel: bool = False):
@@ -187,28 +155,8 @@ def vgg_forward(params, images, use_kernel: bool = False):
     bias/relu/(2x2 maxpool) epilogue *fused*: each layer issues a
     single HBM output write instead of the unfused
     ``conv-write -> read -> bias/relu/pool -> write`` round trip."""
-    if use_kernel:
-        from repro.kernels.conv_lb.ops import conv2d_lb as conv_fn
-    else:
-        conv_fn = None
-    h = images
-    stages = vgg_conv_geometry(params, images.shape[1], images.shape[2],
-                               images.shape[3])
-    for p, g in zip(params["convs"], stages):
-        if conv_fn is not None:
-            h = conv_fn(h, p["w"], p["b"], padding=1, relu=True,
-                        pool=2 if g.fused_pool else 1)
-        else:
-            h = jax.lax.conv_general_dilated(
-                h, p["w"], window_strides=(1, 1), padding="SAME",
-                dimension_numbers=("NHWC", "HWIO", "NHWC"))
-            h = jax.nn.relu(h + p["b"])
-        if g.pool and not (g.fused_pool and conv_fn is not None):
-            h = jax.lax.reduce_window(
-                h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
-                (1, 2, 2, 1), "VALID")
-    h = h.mean(axis=(1, 2))
-    return h @ params["head"]
+    return graph_logits(vgg_graph(params), params, images,
+                        use_kernel=use_kernel, strict=False)
 
 
 def vgg_loss(params, batch, use_kernel: bool = False):
@@ -217,3 +165,78 @@ def vgg_loss(params, batch, use_kernel: bool = False):
     logp = jax.nn.log_softmax(logits.astype(jnp.float32))
     nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)
     return nll.mean()
+
+
+# --------------------------------------------------------------------------
+# ResNet BasicBlock stacks — the first strided/1x1 layers through the
+# model-level planner end to end
+# --------------------------------------------------------------------------
+
+def resnet_graph(blocks=(3, 3, 3), widths=(16, 32, 64), in_ch: int = 3,
+                 width_mult: float = 1.0,
+                 name: str | None = None) -> ConvGraph:
+    """CIFAR-style ResNet of BasicBlocks as a :class:`ConvGraph`.
+
+    One 3x3 stem, then ``blocks[i]`` BasicBlocks at ``widths[i]``
+    channels per stage; every stage after the first opens with a
+    stride-2 downsampling block whose shortcut is a 1x1 stride-2
+    projection conv (the canonical option-B shortcut).  Each block is
+
+        x -> conv3x3(stride s) + ReLU -> conv3x3 -> (+ shortcut) -> ReLU
+
+    with the join expressed as the second conv's ``residual`` edge —
+    the kernel path fuses the add into the psum-resident epilogue.
+    Defaults build ResNet-20 (3 stages x 3 blocks x 2 convs + stem);
+    ``width_mult`` scales channel widths for smoke-size stacks."""
+    widths = tuple(max(1, int(round(w * width_mult))) for w in widths)
+    if name is None:
+        name = f"resnet{2 + 2 * sum(blocks)}"
+    nodes = [ConvNode(name="stem", ci=in_ch, co=widths[0])]
+    prev = "stem"
+    ci = widths[0]
+    for si, (n_blocks, co) in enumerate(zip(blocks, widths), start=1):
+        for bi in range(n_blocks):
+            stride = 2 if si > 1 and bi == 0 else 1
+            base = f"s{si}b{bi}"
+            block_in = prev
+            if stride != 1 or ci != co:
+                nodes.append(ConvNode(name=f"{base}_proj", ci=ci, co=co,
+                                      hk=1, wk=1, stride=stride, pad=0,
+                                      relu=False, src=block_in))
+                shortcut = f"{base}_proj"
+            else:
+                shortcut = block_in
+            nodes.append(ConvNode(name=f"{base}_a", ci=ci, co=co,
+                                  stride=stride, src=block_in))
+            nodes.append(ConvNode(name=f"{base}_b", ci=co, co=co,
+                                  residual=shortcut))
+            prev = f"{base}_b"
+            ci = co
+    return ConvGraph(name=name, nodes=tuple(nodes))
+
+
+def init_resnet(key, graph: ConvGraph | None = None,
+                n_classes: int = 10, dtype=jnp.float32):
+    """He-init params for a ResNet graph (default: ResNet-20); the
+    ``{"convs", "head"}`` pytree shape shared with the VGG stack."""
+    return init_graph(key, graph or resnet_graph(), n_classes=n_classes,
+                      dtype=dtype)
+
+
+def resnet_forward(graph: ConvGraph, params, images,
+                   use_kernel: bool = False):
+    """images: (B, H, W, in_ch) -> logits — :func:`graph_logits` over a
+    ResNet graph (residual joins fused on the kernel path)."""
+    return graph_logits(graph, params, images, use_kernel=use_kernel)
+
+
+__all__ = [
+    "ConvStage", "init_vgg", "vgg_layer_dims", "vgg_graph",
+    "vgg_conv_geometry", "vgg_conv_layers_for", "vgg_plan_handles",
+    "vgg_training_step_report", "vgg_forward", "vgg_loss",
+    "resnet_graph", "init_resnet", "resnet_forward",
+    # re-exported graph surface (the model-agnostic consumers)
+    "ConvGraph", "ConvNode", "graph_forward", "graph_logits",
+    "graph_plan_handles", "graph_stages", "graph_training_step_report",
+    "init_graph",
+]

@@ -1,0 +1,332 @@
+"""Model-agnostic conv-graph IR: one graph, three consumers.
+
+The paper's Eq. (15) bound and the whole `plan_conv` machinery are
+per-conv-layer, so any conv network's step bound is a *sum over its
+layers* — but only if something model-agnostic can walk the network.
+This module is that walk: a :class:`ConvGraph` of :class:`ConvNode`\\ s,
+each carrying its full conv geometry (kernel extent, stride, padding,
+groups), an epilogue spec (bias/relu/pool), and an optional residual
+input edge, plus one generic geometry resolution
+(:func:`graph_stages`) that every consumer shares:
+
+  * :func:`graph_forward` — the executable forward (Pallas kernel or
+    lax path; residual adds applied at the join, fused into the
+    kernel's psum-resident epilogue where shapes allow);
+  * :func:`graph_plan_handles` — the ``(ConvLayer, ConvPlan)`` (or
+    training-triple) accounting handles the serve ledger and the
+    training-step report charge traffic off;
+  * :func:`graph_training_step_report` — per-step fwd+dgrad+wgrad
+    bytes vs the per-graph ``q_dram_training`` sum, strided and
+    grouped layers included (``plan_conv_training`` plans their
+    dgrad/wgrad even where execution falls back to lax).
+
+Because plans, forward and bounds all derive from the *same* stage
+walk, the bytes the ledger charges are the bytes the executed jaxpr
+moves — the same single-source-of-truth contract ``vgg_conv_geometry``
+gave the VGG stack, now for any conv network (ResNet BasicBlocks with
+stride-2 downsampling and 1x1 projection shortcuts are the proving
+workload; see :func:`repro.models.cnn.resnet_graph`).
+
+Topology: nodes are listed in topological order; each node consumes
+``src`` (a prior node's name, or :data:`GRAPH_INPUT`; ``None`` chains
+to the immediately preceding node) and may name a ``residual`` tensor
+added to its conv output *before* the ReLU/pool epilogue — exactly
+the BasicBlock join.  The walk validates every edge's plane/channel
+shapes; a channel mismatch is an error unless ``strict=False``
+(opt-in truncation, the reduced-width smoke-stack compat mode).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+GRAPH_INPUT = "input"
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvNode:
+    """One conv layer of a :class:`ConvGraph`.
+
+    ``src`` names the producing tensor (``None`` = previous node,
+    :data:`GRAPH_INPUT` = the graph input); ``residual`` optionally
+    names a tensor added to the conv output before the ReLU — the
+    residual join.  ``pool`` is an aligned ``pool x pool`` max-pool
+    after the epilogue (fused into the kernel when the output plane
+    divides it; skipped entirely when the plane is smaller than the
+    window, matching the VGG walk's small-plane behavior)."""
+
+    name: str
+    ci: int
+    co: int
+    hk: int = 3
+    wk: int = 3
+    stride: int = 1
+    pad: int = 1
+    groups: int = 1
+    bias: bool = True
+    relu: bool = True
+    pool: int = 1
+    src: str | None = None
+    residual: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvGraph:
+    """A conv network as a topologically-ordered tuple of nodes.
+
+    Hashable (frozen, tuple-of-frozen), so a graph can key plan-handle
+    caches directly.  The graph output is the last node's tensor."""
+
+    name: str
+    nodes: tuple[ConvNode, ...]
+
+    def __post_init__(self):
+        seen = {GRAPH_INPUT}
+        for node in self.nodes:
+            if node.name in seen:
+                raise ValueError(f"duplicate node name {node.name!r}")
+            for ref in (node.src, node.residual):
+                if ref is not None and ref not in seen:
+                    raise ValueError(
+                        f"node {node.name!r} references {ref!r} before "
+                        f"it is produced (nodes must be topological)")
+            if node.ci % node.groups or node.co % node.groups:
+                raise ValueError(f"node {node.name!r}: groups="
+                                 f"{node.groups} must divide ci={node.ci}"
+                                 f" and co={node.co}")
+            seen.add(node.name)
+
+    @property
+    def out_channels(self) -> int:
+        return self.nodes[-1].co
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphStage:
+    """One node resolved against a concrete input-plane geometry: the
+    layer exactly as :func:`graph_forward` will execute it (and hence
+    exactly what the plan handles account)."""
+
+    node: ConvNode
+    h: int              # input plane entering the conv
+    w: int
+    ho: int             # conv output plane (pre-pool)
+    wo: int
+    pool: int           # effective pool (1 = none; plane too small)
+    fused_pool: bool    # kernel path fuses the pool in-epilogue
+    residual: bool      # a residual join lands on this node's output
+
+
+def graph_stages(graph: ConvGraph, h: int, w: int, in_ch: int = 3, *,
+                 strict: bool = True) -> list[GraphStage]:
+    """Resolve the graph against an ``(h, w, in_ch)`` input image.
+
+    The single source of truth shared by :func:`graph_forward`, the
+    plan-handle export and the bound sums.  ``strict=True`` (default)
+    raises on any channel mismatch along the walk; ``strict=False``
+    truncates the stack at the first mismatch instead — the explicit
+    opt-in that replaces ``vgg_conv_geometry``'s silent truncation
+    (reduced-width smoke stacks ride it via the ``vgg_*`` wrappers).
+    """
+    shapes: dict[str, tuple[int, int, int]] = {GRAPH_INPUT: (h, w, in_ch)}
+    prev = GRAPH_INPUT
+    stages: list[GraphStage] = []
+    for node in graph.nodes:
+        h0, w0, c0 = shapes[node.src or prev]
+        if c0 != node.ci:
+            if strict:
+                raise ValueError(
+                    f"node {node.name!r} expects ci={node.ci} but its "
+                    f"input {node.src or prev!r} carries {c0} channels "
+                    f"(pass strict=False to truncate the walk here)")
+            break
+        ho = (h0 + 2 * node.pad - node.hk) // node.stride + 1
+        wo = (w0 + 2 * node.pad - node.wk) // node.stride + 1
+        if ho < 1 or wo < 1:
+            raise ValueError(f"node {node.name!r}: {node.hk}x{node.wk} "
+                             f"s{node.stride} conv has no output on a "
+                             f"{h0}x{w0} plane")
+        if node.residual is not None:
+            rshape = shapes[node.residual]
+            if rshape != (ho, wo, node.co):
+                raise ValueError(
+                    f"node {node.name!r}: residual {node.residual!r} is "
+                    f"{rshape}, join needs {(ho, wo, node.co)}")
+        pool = node.pool if node.pool > 1 and min(ho, wo) >= node.pool else 1
+        fused = pool > 1 and ho % pool == 0 and wo % pool == 0
+        stages.append(GraphStage(node=node, h=h0, w=w0, ho=ho, wo=wo,
+                                 pool=pool, fused_pool=fused,
+                                 residual=node.residual is not None))
+        shapes[node.name] = (ho // pool, wo // pool, node.co)
+        prev = node.name
+    return stages
+
+
+def init_graph(key, graph: ConvGraph, n_classes: int = 10,
+               dtype=jnp.float32) -> dict:
+    """He-init conv params for every node + a linear head off the graph
+    output channels.  Returns the same ``{"convs": [...], "head": ...}``
+    pytree shape the VGG stack uses, so one training/serving surface
+    covers every graph.  ReLU nodes get the sqrt(2) gain (each ReLU
+    halves activation variance); linear nodes (e.g. 1x1 projection
+    shortcuts) stay at plain He."""
+    from repro.models.layers import dense_init, split_keys
+
+    keys = split_keys(key, len(graph.nodes) + 1)
+    convs = []
+    for k, node in zip(keys, graph.nodes):
+        fan_in = node.hk * node.wk * (node.ci // node.groups)
+        gain = math.sqrt(2.0) if node.relu else 1.0
+        p = {"w": dense_init(k, (node.hk, node.wk,
+                                 node.ci // node.groups, node.co),
+                             dtype, fan_in=fan_in) * gain}
+        if node.bias:
+            p["b"] = jnp.zeros((node.co,), dtype)
+        convs.append(p)
+    co = graph.out_channels
+    return {"convs": convs,
+            "head": dense_init(keys[-1], (co, n_classes), dtype,
+                               fan_in=co)}
+
+
+def graph_forward(graph: ConvGraph, conv_params, x, *,
+                  use_kernel: bool = False, strict: bool = True):
+    """Execute the graph on ``x`` (B, H, W, Ci) -> (B, H', W', Co).
+
+    ``conv_params`` aligns with ``graph.nodes`` (``{"w": ..., "b":}``
+    per node).  With ``use_kernel`` every conv runs the batch-folded
+    Pallas kernel with its epilogue *fused* — bias, the residual join
+    (added on the VMEM-resident psum tile, so the shortcut costs one
+    streamed read instead of an extra HBM round trip), ReLU and an
+    aligned pool; non-pool-aligned planes take the rare unfused pool.
+    The lax path rides ``conv2d_lb(fallback=True)`` — the kernel
+    module's single reference implementation (f32-accumulating conv +
+    unfused epilogue), so the two paths can never drift apart."""
+    from repro.kernels.conv_lb.ops import conv2d_lb
+
+    stages = graph_stages(graph, x.shape[1], x.shape[2], x.shape[3],
+                          strict=strict)
+    tensors = {GRAPH_INPUT: x}
+    prev = GRAPH_INPUT
+    out = x
+    for p, st in zip(conv_params, stages):
+        node = st.node
+        src = tensors[node.src or prev]
+        res = None if node.residual is None else tensors[node.residual]
+        bias = p.get("b") if node.bias else None
+        y = conv2d_lb(src, p["w"], bias, res,
+                      stride=node.stride, padding=node.pad,
+                      groups=node.groups, relu=node.relu,
+                      pool=st.pool if st.fused_pool else 1,
+                      fallback=not use_kernel)
+        if st.pool > 1 and not st.fused_pool:
+            y = jax.lax.reduce_window(
+                y, -jnp.inf, jax.lax.max, (1, st.pool, st.pool, 1),
+                (1, st.pool, st.pool, 1), "VALID")
+        tensors[node.name] = y
+        prev = node.name
+        out = y
+    return out
+
+
+def graph_logits(graph: ConvGraph, params, images, *,
+                 use_kernel: bool = False, strict: bool = True):
+    """Full classification forward: graph features, global mean pool,
+    linear head — ``params`` from :func:`init_graph` (or any pytree of
+    the same ``{"convs", "head"}`` shape)."""
+    h = graph_forward(graph, params["convs"], images,
+                      use_kernel=use_kernel, strict=strict)
+    return h.mean(axis=(1, 2)) @ params["head"]
+
+
+def graph_plan_handles(graph: ConvGraph, h: int, w: int, *, batch: int,
+                       in_ch: int = 3, dtype_bytes: int = 4,
+                       vmem_budget: int | None = None,
+                       training: bool = False, strict: bool = True):
+    """Exported accounting handles for the whole graph at an arrival
+    batch: ``[(ConvLayer, ConvPlan)]`` per conv stage, from the same
+    memoized ``plan_conv`` cache the kernel path's jit trace resolves
+    against.  Grouped nodes export one per-*group* handle per group
+    (traffic and bound both scale by the group count, exactly as the
+    kernel executes them).  Strided and 1x1 layers flow through the
+    same planner — nothing above this walk is VGG-shaped.
+
+    ``training=True`` exports ``(ConvLayer, ConvTrainingPlan)``
+    instead: the forward handle plus the planned dgrad/wgrad convs of
+    each layer's backward (``plan_conv_training``), so strided
+    downsample convs get accounted dgrad/wgrad even though their
+    execution rides the lax fallback.
+
+    ``vmem_budget=None`` yields the kernel's own execution plans; an
+    explicit budget (e.g. the paper's 1 MiB GBuf) yields the
+    accounting plans the ledger scores distance-to-bound with.
+    """
+    from repro.core.layer import ConvLayer
+    from repro.kernels.conv_lb.ops import plan_conv, plan_conv_training
+
+    handles = []
+    for st in graph_stages(graph, h, w, in_ch, strict=strict):
+        node = st.node
+        ci_g, co_g = node.ci // node.groups, node.co // node.groups
+        layer = ConvLayer(name=node.name, batch=batch, ci=ci_g, co=co_g,
+                          hi=st.h, wi=st.w, hk=node.hk, wk=node.wk,
+                          stride=node.stride, pad=node.pad)
+        plan = plan_conv(st.h, st.w, ci_g, co_g, node.hk, node.wk,
+                         batch=batch, stride=(node.stride,) * 2,
+                         padding=(node.pad,) * 2,
+                         pool=st.pool if st.fused_pool else 1,
+                         residual=st.residual,
+                         dtype_bytes=dtype_bytes,
+                         vmem_budget=vmem_budget)
+        if training:
+            entry = (layer, plan_conv_training(
+                plan, batch=batch, groups=node.groups,
+                dtype_bytes=dtype_bytes, vmem_budget=vmem_budget))
+        else:
+            entry = (layer, plan)
+        handles.extend([entry] * node.groups)
+    return handles
+
+
+def graph_training_step_report(graph: ConvGraph, h: int, w: int, *,
+                               batch: int, in_ch: int = 3,
+                               dtype_bytes: int = 4,
+                               vmem_budget: int | None = None,
+                               strict: bool = True) -> dict:
+    """Per-training-step traffic accounting for any conv graph.
+
+    Sums every layer's planned fwd+dgrad+wgrad words
+    (:meth:`ConvTrainingPlan.traffic`) and scores them against the
+    per-graph ``q_dram_training`` sum, each pass's Eq. (15) term at
+    its realized plan footprint (residual joins add their mandatory
+    read to both sides) — the training counterpart of the serve
+    ledger's ``vs_bound_x``, for heterogeneous stacks."""
+    handles = graph_plan_handles(graph, h, w, batch=batch, in_ch=in_ch,
+                                 dtype_bytes=dtype_bytes,
+                                 vmem_budget=vmem_budget, training=True,
+                                 strict=strict)
+    words = fwd_words = bound = 0.0
+    kernel_layers = 0
+    for layer, tp in handles:
+        t = tp.traffic(batch)
+        words += t.total
+        fwd_words += t.fwd.total
+        bound += tp.bound_words(layer)
+        # grouped layers repeat per group but never ride the kernel
+        # dgrad (dgrad_kernel is gated on groups == 1), so the sum
+        # counts each kernel-dgrad layer exactly once
+        kernel_layers += int(tp.dgrad_kernel)
+    n_stages = len(graph_stages(graph, h, w, in_ch, strict=strict))
+    return {
+        "model": graph.name,
+        "layers": n_stages,
+        "dgrad_kernel_layers": kernel_layers,
+        "bytes_per_step": words * dtype_bytes,
+        "bound_bytes_per_step": bound * dtype_bytes,
+        "train_vs_bound_x": words / max(bound, 1e-30),
+        "bwd_share": (words - fwd_words) / max(words, 1e-30),
+    }

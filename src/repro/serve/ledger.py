@@ -35,7 +35,7 @@ import math
 from collections import deque
 from typing import Sequence
 
-from repro.core.lower_bound import q_dram_practical, q_dram_serving
+from repro.core.lower_bound import q_dram_serving
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,13 +62,21 @@ class _GeometryTally:
 
     Footprints are tracked per bucket (plans differ across dispatch
     batches), while images amortize jointly across buckets — the
-    weights are the same params whichever bucket served them."""
+    weights are the same params whichever bucket served them.
+    ``model`` is the serving graph's label (one model may span several
+    geometries — e.g. two image sizes — and all of them roll up into
+    the summary's per-model rows)."""
 
     layers_b1: list            # ConvLayer at batch=1, per stage
+    residuals: list            # per stage: a fused join reads its plane
+    model: str | None = None
     footprints: dict = dataclasses.field(default_factory=dict)
     #                          # bucket -> realized S per stage
     images_by_bucket: dict = dataclasses.field(default_factory=dict)
     baseline_w_words: float | None = None   # per-image, b_block=1 plan
+    sum_bytes: float = 0.0     # whole-dispatch accounted bytes
+    sum_bound: float = 0.0     # dispatch Eq. (15) bytes (full buckets)
+    requests: int = 0
 
     @property
     def images(self) -> int:
@@ -104,14 +112,18 @@ class TrafficLedger:
     @staticmethod
     def _geo_key(handles) -> tuple:
         return tuple((l.name, l.hi, l.wi, l.ci, l.co, l.hk, l.wk,
-                      l.stride, l.pad) for l, _ in handles)
+                      l.stride, l.pad, bool(p.residual))
+                     for l, p in handles)
 
-    def _tally(self, handles, bucket: int) -> _GeometryTally:
+    def _tally(self, handles, bucket: int,
+               model: str | None) -> _GeometryTally:
         key = self._geo_key(handles)
         if key not in self._geos:
             self._geos[key] = _GeometryTally(
                 layers_b1=[dataclasses.replace(l, batch=1)
-                           for l, _ in handles])
+                           for l, _ in handles],
+                residuals=[bool(p.residual) for _, p in handles],
+                model=model)
         tally = self._geos[key]
         tally.footprints.setdefault(
             bucket, [p.footprint_elems() for _, p in handles])
@@ -119,12 +131,14 @@ class TrafficLedger:
 
     def charge_batch(self, entries: Sequence[tuple[int, int]], handles,
                      *, bucket: int,
-                     latencies: dict[int, float] | None = None
+                     latencies: dict[int, float] | None = None,
+                     model: str | None = None
                      ) -> list[RequestCharge]:
         """Account one dispatch: ``entries`` is [(rid, n_images)] for
         the real requests in the group, ``handles`` the
         [(ConvLayer, ConvPlan)] pairs at batch == ``bucket`` the
-        pipeline executed."""
+        pipeline executed; ``model`` labels the serving graph so the
+        summary can report per-model vs-bound rows."""
         n_real = sum(n for _, n in entries)
         if n_real < 1 or n_real > bucket:
             raise ValueError(f"group of {n_real} images in a "
@@ -134,11 +148,16 @@ class TrafficLedger:
             t = plan.traffic(bucket)
             total_all += t.total
             total_w += t.reads_w
-            bound_w += q_dram_practical(layer, plan.footprint_elems())
+            # Eq. (15) at the realized footprint + the residual join's
+            # mandatory read where the plan fuses one
+            bound_w += plan.bound_words(layer)
         db = self.dtype_bytes
-        tally = self._tally(handles, bucket)
+        tally = self._tally(handles, bucket, model)
         tally.images_by_bucket[bucket] = (
             tally.images_by_bucket.get(bucket, 0) + n_real)
+        tally.sum_bytes += total_all * db
+        tally.sum_bound += bound_w * db * n_real / bucket
+        tally.requests += len(entries)
         self.dispatches += 1
         self.padded_images += bucket - n_real
         out = []
@@ -196,17 +215,34 @@ class TrafficLedger:
         bound = self._sum_bound
         db = self.dtype_bytes
         baseline_w = horizon = 0.0
+        by_model: dict[str, dict] = {}
         for tally in self._geos.values():
             baseline_w += self._baseline_w_words(tally) * tally.images
             # weights amortize over the geometry's whole horizon, but
             # each bucket's images are bounded at that bucket's plan
-            # footprints (deterministic in arrival order)
+            # footprints (deterministic in arrival order); a fused
+            # residual join adds its per-image plane read — it never
+            # amortizes, the join operand is data, not weights
             for bucket, n_imgs in sorted(tally.images_by_bucket.items()):
                 horizon += sum(
                     q_dram_serving(layer, s, requests=tally.images)
-                    for layer, s in zip(tally.layers_b1,
-                                        tally.footprints[bucket])
+                    + (layer.n_outputs if resid else 0)
+                    for layer, s, resid in zip(tally.layers_b1,
+                                               tally.footprints[bucket],
+                                               tally.residuals)
                 ) * n_imgs
+            label = tally.model or "unlabeled"
+            row = by_model.setdefault(
+                label, {"requests": 0, "images": 0, "bytes": 0.0,
+                        "bound_bytes": 0.0})
+            row["requests"] += tally.requests
+            row["images"] += tally.images
+            row["bytes"] += tally.sum_bytes
+            row["bound_bytes"] += tally.sum_bound
+        for row in by_model.values():
+            row["bytes_per_image"] = row["bytes"] / max(row["images"], 1)
+            row["vs_bound_x"] = row["bytes"] / max(row["bound_bytes"],
+                                                   1e-30)
         # latency percentiles are over *measured* requests only: a
         # None/NaN latency marks in-flight or unmeasured work, and
         # counting it as 0.0 would deflate every percentile
@@ -226,19 +262,25 @@ class TrafficLedger:
             "measured_latencies": len(lat),
             "p50_latency_s": lat[len(lat) // 2] if lat else float("nan"),
             "max_latency_s": lat[-1] if lat else float("nan"),
+            "by_model": by_model,
         }
 
     def format_summary(self) -> str:
         s = self.summary()
         if not s["requests"]:
             return "ledger: no traffic charged"
-        return (f"ledger: {s['requests']} req / {s['images']} img in "
-                f"{s['dispatches']} dispatches (+{s['padded_images']} pad)\n"
-                f"  {s['bytes_per_image'] / 1e6:.2f} MB/img "
-                f"({s['weight_bytes_per_image'] / 1e6:.2f} MB weights)\n"
-                f"  vs Eq.(15) bound     {s['vs_bound_x']:.3f}x\n"
-                f"  weight amortization  {s['w_amortization_x']:.2f}x "
-                f"vs per-image dispatch\n"
-                f"  vs serving horizon   {s['vs_serving_x']:.3f}x\n"
-                f"  latency p50/max      {s['p50_latency_s'] * 1e3:.1f}/"
-                f"{s['max_latency_s'] * 1e3:.1f} ms")
+        out = (f"ledger: {s['requests']} req / {s['images']} img in "
+               f"{s['dispatches']} dispatches (+{s['padded_images']} pad)\n"
+               f"  {s['bytes_per_image'] / 1e6:.2f} MB/img "
+               f"({s['weight_bytes_per_image'] / 1e6:.2f} MB weights)\n"
+               f"  vs Eq.(15) bound     {s['vs_bound_x']:.3f}x\n"
+               f"  weight amortization  {s['w_amortization_x']:.2f}x "
+               f"vs per-image dispatch\n"
+               f"  vs serving horizon   {s['vs_serving_x']:.3f}x\n"
+               f"  latency p50/max      {s['p50_latency_s'] * 1e3:.1f}/"
+               f"{s['max_latency_s'] * 1e3:.1f} ms")
+        for label, row in sorted(s["by_model"].items()):
+            out += (f"\n  [{label}] {row['images']} img, "
+                    f"{row['bytes_per_image'] / 1e6:.2f} MB/img, "
+                    f"{row['vs_bound_x']:.3f}x bound")
+        return out

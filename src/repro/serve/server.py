@@ -1,14 +1,18 @@
 """Batched CNN inference server over the paper-dataflow conv kernel.
 
-Rides ``vgg_forward(use_kernel=True)`` end to end: bucketed admission
-(:mod:`repro.serve.bucketing`) pads arrival batches to a plan-friendly
-bucket ladder, a per-bucket plan + jit cache makes every steady-state
-dispatch hit a compiled fused-epilogue VGG pipeline whose conv
-``b_block`` tiling tracks the bucket (the batch-reuse term of
-Eq. (14)/(15) is only attainable when the kernel folds the *actual*
-arrival batch), and a per-request traffic ledger
-(:mod:`repro.serve.ledger`) charges each request its share of the
-accounted ``conv_lb_traffic`` bytes.
+Serves *any* conv network expressed as a
+:class:`repro.models.graph.ConvGraph` (VGG remains the default: a
+server built from bare VGG params reconstructs its graph): bucketed
+admission (:mod:`repro.serve.bucketing`) pads arrival batches to a
+plan-friendly bucket ladder, a per-(graph, bucket, geometry) plan +
+jit cache makes every steady-state dispatch hit a compiled
+fused-epilogue pipeline whose conv ``b_block`` tiling tracks the
+bucket (the batch-reuse term of Eq. (14)/(15) is only attainable when
+the kernel folds the *actual* arrival batch), and a per-request
+traffic ledger (:mod:`repro.serve.ledger`) charges each request its
+share of the accounted ``conv_lb_traffic`` bytes — residual joins,
+strided downsampling and 1x1 projection layers included, so ResNet
+stacks ride the same ledger path as VGG.
 
 Two costs are cached independently and paid once per bucket:
 
@@ -34,7 +38,9 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.models.cnn import vgg_forward, vgg_plan_handles
+from repro.models.cnn import vgg_graph
+from repro.models.graph import (ConvGraph, graph_logits,
+                                graph_plan_handles)
 from repro.serve.bucketing import (DEFAULT_BUCKETS, AdmissionQueue,
                                    ImageRequest)
 from repro.serve.ledger import RequestCharge, TrafficLedger
@@ -51,10 +57,16 @@ class ServeResult:
 
 
 class ImageServer:
-    """Bucketed, ledger-accounted VGG image-classification server.
+    """Bucketed, ledger-accounted image-classification server for any
+    :class:`~repro.models.graph.ConvGraph` model.
 
-    ``params`` come from :func:`repro.models.cnn.init_vgg`; every
-    request carries 1..max(buckets) images of the fixed
+    ``params`` is the ``{"convs", "head"}`` pytree of the served graph
+    (:func:`repro.models.graph.init_graph` /
+    :func:`repro.models.cnn.init_vgg`); ``graph=None`` reconstructs
+    the VGG graph from the param shapes — the historical default.  A
+    custom ``forward`` callable ``(params, images, use_kernel) ->
+    logits`` overrides the generic :func:`graph_logits` pipeline.
+    Every request carries 1..max(buckets) images of the
     ``(h, w, in_ch)`` serving geometry.  ``account_budget`` is the
     on-chip scale the ledger scores distance-to-bound at (default: the
     paper's 1 MiB GBuf); execution plans use the kernel's own VMEM
@@ -62,6 +74,8 @@ class ImageServer:
     """
 
     def __init__(self, params, h: int, w: int, in_ch: int = 3, *,
+                 graph: ConvGraph | None = None,
+                 forward=None,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  wait_budget: float = 0.02,
                  account_budget: int = 1 << 20,
@@ -71,6 +85,16 @@ class ImageServer:
                  keep_results: int = 1024,
                  clock=time.monotonic):
         self.params = params
+        if graph is None and forward is not None:
+            # a custom forward with no graph would have the ledger
+            # charging a VGG graph fabricated from non-VGG params —
+            # silently wrong accounting for every dispatch
+            raise ValueError("a custom forward= needs an explicit "
+                             "graph= (the ledger charges plan handles "
+                             "walked from the graph, and only bare VGG "
+                             "params can reconstruct one)")
+        self.graph = vgg_graph(params) if graph is None else graph
+        self._forward = forward
         self.h, self.w, self.in_ch = int(h), int(w), int(in_ch)
         self.use_kernel = bool(use_kernel)
         self.compute = bool(compute)
@@ -80,7 +104,7 @@ class ImageServer:
         self.queue = AdmissionQueue(buckets, wait_budget)
         self.ledger = TrafficLedger(vmem_budget=account_budget,
                                     dtype_bytes=self.dtype.itemsize)
-        self._handles: dict[int, list] = {}
+        self._handles: dict[tuple, list] = {}
         self._pipelines: dict[int, Any] = {}
         # bounded lookup of recent results (insertion-ordered dict,
         # oldest evicted past keep_results): dispatch return values are
@@ -126,15 +150,24 @@ class ImageServer:
 
     def plan_handles(self, bucket: int):
         """The (ConvLayer, ConvPlan) accounting handles for a bucket —
-        planned once, then served from the per-bucket cache."""
-        if bucket not in self._handles:
-            self._handles[bucket] = vgg_plan_handles(
-                self.params, self.h, self.w, batch=bucket,
+        planned once, then served from the cache.
+
+        The cache key is the full plan identity — (graph, bucket,
+        image geometry, word size) — not the bucket alone, so a server
+        whose serving geometry is re-pointed (or a future
+        multi-geometry server) can never silently reuse plans for the
+        wrong image size; every distinct geometry pays exactly one
+        planning pass and keeps its handles warm."""
+        key = (self.graph, int(bucket), self.h, self.w, self.in_ch,
+               self.dtype.itemsize)
+        if key not in self._handles:
+            self._handles[key] = graph_plan_handles(
+                self.graph, self.h, self.w, batch=bucket,
                 in_ch=self.in_ch, dtype_bytes=self.dtype.itemsize,
                 vmem_budget=self.account_budget)
         else:
             self.stats["plan_hits"] += 1
-        return self._handles[bucket]
+        return self._handles[key]
 
     def pipeline(self, bucket: int):
         """The compiled (bucket, H, W, C) -> logits pipeline."""
@@ -144,7 +177,10 @@ class ImageServer:
 
         def fwd(params, imgs):
             self.stats["traces"] += 1        # bumped at trace time only
-            return vgg_forward(params, imgs, use_kernel=self.use_kernel)
+            if self._forward is not None:
+                return self._forward(params, imgs, self.use_kernel)
+            return graph_logits(self.graph, params, imgs,
+                                use_kernel=self.use_kernel)
 
         self._pipelines[bucket] = jax.jit(fwd)
         return self._pipelines[bucket]
@@ -181,7 +217,8 @@ class ImageServer:
         entries = [(r.rid, r.n_images) for r in group]
         charges = self.ledger.charge_batch(
             entries, handles, bucket=bucket,
-            latencies={r.rid: r.latency for r in group})
+            latencies={r.rid: r.latency for r in group},
+            model=self.graph.name)
         self.stats["dispatches"] += 1
         results = []
         off = 0

@@ -21,7 +21,9 @@ from repro.core.lower_bound import q_dram_practical, q_dram_serving
 from repro.core.vgg import vgg16_conv_layers
 from repro.kernels.conv_lb.ops import (conv_lb_traffic,
                                        conv_lb_traffic_bytes, plan_conv)
-from repro.models.cnn import init_vgg, vgg_conv_geometry, vgg_plan_handles
+from repro.models.cnn import (init_resnet, init_vgg, resnet_graph,
+                              vgg_conv_geometry, vgg_plan_handles)
+from repro.models.graph import graph_logits
 from repro.serve import AdmissionQueue, ImageRequest, ImageServer, bucket_for
 
 REPO = Path(__file__).resolve().parent.parent
@@ -156,6 +158,25 @@ def test_same_bucket_hits_plan_and_jit_cache():
     assert not jnp.allclose(first[0].logits, second[0].logits)
 
 
+def test_plan_handle_cache_keyed_by_image_geometry():
+    """Regression: the plan-handle cache is keyed by (graph, bucket,
+    image geometry, word size), not the bucket alone — a server whose
+    serving geometry is re-pointed must never silently reuse plans for
+    the old image size."""
+    params = init_vgg(jax.random.PRNGKey(0), n_classes=4,
+                      width_mult=0.05)
+    srv = ImageServer(params, 8, 8, compute=False, wait_budget=0.0)
+    h8 = srv.plan_handles(2)
+    assert h8[0][0].hi == 8
+    srv.h = srv.w = 16                   # re-pointed serving geometry
+    h16 = srv.plan_handles(2)
+    assert h16 is not h8
+    assert h16[0][0].hi == 16            # fresh plans, not stale 8x8
+    assert h16[0][1].traffic(2).total != h8[0][1].traffic(2).total
+    srv.h = srv.w = 8                    # ...and the old geometry's
+    assert srv.plan_handles(2) is h8     # handles stayed warm
+
+
 def test_kernel_and_fallback_pipelines_agree():
     """The bucketed kernel pipeline computes the same logits as the
     lax fallback server on identical inputs."""
@@ -214,6 +235,77 @@ def test_serving_mixed16_attains_eq15_per_request(vgg16_server):
     # the serving-horizon bound (weights amortized over the horizon)
     # is tighter than per-dispatch Eq. (15), never looser
     assert s["vs_serving_x"] >= 0.95 * s["vs_bound_x"]
+
+
+# --------------------------------------------------------------------------
+# cross-model serving: ResNet through the same bucketed ledger path
+# --------------------------------------------------------------------------
+
+def test_server_serves_resnet_end_to_end():
+    """A ResNet BasicBlock stack (stride-2 downsampling, 1x1
+    projection shortcuts, fused residual joins) serves through the
+    same ImageServer: kernel pipeline logits match the direct lax
+    forward, and the ledger reports a per-model vs-bound row."""
+    graph = resnet_graph(blocks=(1, 1), widths=(4, 8), name="rn-serve")
+    params = init_resnet(jax.random.PRNGKey(0), graph, n_classes=4)
+    srv = ImageServer(params, 8, 8, graph=graph, buckets=(2,),
+                      wait_budget=0.0)
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    srv.submit(imgs)
+    (res,) = srv.poll()
+    assert res.logits.shape == (2, 4)
+    ref = graph_logits(graph, params, imgs, use_kernel=False)
+    assert jnp.allclose(res.logits, ref, atol=2e-4)
+    s = srv.ledger.summary()
+    assert "rn-serve" in s["by_model"]
+    row = s["by_model"]["rn-serve"]
+    assert row["images"] == 2 and row["vs_bound_x"] > 0
+
+
+def test_resnet_account_only_serving_within_bound():
+    """Acceptance: full-width ResNet-20 at CIFAR geometry through the
+    account-only bucketed server lands <= 1.25x the per-graph
+    Eq. (15) sum at the 1 MiB budget, per request and per model."""
+    graph = resnet_graph()
+    params = init_resnet(jax.random.PRNGKey(0), graph, n_classes=10)
+    t = [0.0]
+    srv = ImageServer(params, 32, 32, graph=graph, compute=False,
+                      clock=lambda: t[0], wait_budget=0.05)
+    for n in (1, 2, 1, 4, 2, 1, 1, 4):     # two full 8-buckets
+        srv.submit(n_images=n, now=0.0)
+    srv.poll(now=0.0)
+    srv.drain(now=0.0)
+    s = srv.ledger.summary()
+    assert s["dispatches"] == 2 and s["padded_images"] == 0
+    for c in srv.ledger.charges:
+        assert c.vs_bound_x <= 1.25, (c.rid, c.vs_bound_x)
+    assert s["by_model"]["resnet20"]["vs_bound_x"] <= 1.25
+    assert s["vs_bound_x"] <= 1.25
+
+
+def test_mixed_model_ledger_reports_per_model_rows():
+    """One ledger fed by two servers (VGG + ResNet) keeps per-model
+    vs-bound rows apart while the global aggregates cover both."""
+    vgg_p = init_vgg(jax.random.PRNGKey(0), n_classes=4,
+                     width_mult=0.05)
+    rn_g = resnet_graph(blocks=(1, 1), widths=(4, 8), name="rn-mixed")
+    rn_p = init_resnet(jax.random.PRNGKey(1), rn_g, n_classes=4)
+    t = [0.0]
+    vgg_srv = ImageServer(vgg_p, 8, 8, compute=False,
+                          clock=lambda: t[0], wait_budget=0.0)
+    rn_srv = ImageServer(rn_p, 8, 8, graph=rn_g, compute=False,
+                         clock=lambda: t[0], wait_budget=0.0)
+    rn_srv.ledger = vgg_srv.ledger          # shared fleet ledger
+    vgg_srv.submit(n_images=2, now=0.0)
+    vgg_srv.poll(now=0.0)
+    rn_srv.submit(n_images=4, now=0.0)
+    rn_srv.poll(now=0.0)
+    s = vgg_srv.ledger.summary()
+    assert set(s["by_model"]) == {"vgg", "rn-mixed"}
+    assert s["by_model"]["vgg"]["images"] == 2
+    assert s["by_model"]["rn-mixed"]["images"] == 4
+    assert s["images"] == 6
+    assert "[rn-mixed]" in vgg_srv.ledger.format_summary()
 
 
 def test_vgg_plan_handles_match_geometry():
@@ -304,6 +396,18 @@ def test_example_serve_images_smoke(monkeypatch, capsys):
     assert "ledger:" in out and "vs Eq.(15) bound" in out
 
 
+def test_example_serve_images_resnet_smoke(monkeypatch, capsys):
+    """--model resnet rides the same CLI path (compute, tiny stack)."""
+    mod = _load(REPO / "examples" / "serve_images.py")
+    monkeypatch.setattr(sys, "argv",
+                        ["serve_images.py", "--model", "resnet",
+                         "--requests", "2", "--image", "8",
+                         "--width-mult", "0.25"])
+    mod.main()
+    out = capsys.readouterr().out
+    assert "ledger:" in out and "[resnet20]" in out
+
+
 def test_example_serve_batched_smoke(monkeypatch, capsys):
     mod = _load(REPO / "examples" / "serve_batched.py")
     monkeypatch.setattr(sys, "argv",
@@ -326,6 +430,18 @@ def test_launch_serve_images_cli_smoke(monkeypatch, capsys):
     out = capsys.readouterr().out
     assert "weight amortization" in out
     assert "served 6 requests" in out
+
+
+def test_launch_serve_images_resnet_cli_smoke(monkeypatch, capsys):
+    """The launch/ driver serves ResNet account-only at full width."""
+    from repro.launch import serve_images
+    monkeypatch.setattr(sys, "argv",
+                        ["serve_images", "--model", "resnet",
+                         "--account-only", "--width-mult", "1.0",
+                         "--image", "32", "--requests", "6"])
+    serve_images.main()
+    out = capsys.readouterr().out
+    assert "[resnet20]" in out and "served 6 requests" in out
 
 
 def test_diff_bench_gates_regressions(tmp_path):
