@@ -15,7 +15,11 @@ Tracked metrics (by row-name suffix):
     VGG's (listed first: most-specific suffix wins);
   * ``.../w_reduction_x``, ``.../w_amortization_x``,
     ``.../reduction_x``, ``.../autotune_vs_closed_x`` — improvement
-    factors, higher is better.
+    factors, higher is better;
+  * ``.../plan_audit_legal_frac`` (higher is better) and
+    ``.../plan_audit_traffic_mismatches`` / ``.../lint_errors``
+    (lower is better, 0 baseline: any nonzero value trips the gate)
+    — the static-analysis rows from ``plan_audit_bench``.
 
 Usage:  python benchmarks/diff_bench.py [BENCH_2.json BENCH_3.json ...]
 (no args: every BENCH_*.json next to the repo root, ordered by n).
@@ -41,6 +45,12 @@ TRACKED = {
     "w_amortization_x": False,
     "reduction_x": False,
     "autotune_vs_closed_x": False,
+    # static-analysis gates: the audited legal fraction must not
+    # regress (higher better); mismatch/lint counts must stay 0 —
+    # with a 0 baseline ANY nonzero value trips the ratio gate
+    "plan_audit_legal_frac": False,
+    "plan_audit_traffic_mismatches": True,
+    "lint_errors": True,
 }
 
 

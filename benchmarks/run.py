@@ -19,11 +19,12 @@ def main() -> None:
 
     from benchmarks.kernel_bench import ALL_KERNELS
     from benchmarks.paper_tables import ALL_TABLES
+    from benchmarks.plan_audit_bench import ALL_AUDIT
     from benchmarks.roofline_bench import ALL_ROOFLINE
     from benchmarks.serve_bench import ALL_SERVE
     from benchmarks.train_traffic_bench import ALL_TRAIN
 
-    benches = ALL_TABLES + ALL_KERNELS + ALL_SERVE + ALL_TRAIN
+    benches = ALL_TABLES + ALL_KERNELS + ALL_SERVE + ALL_TRAIN + ALL_AUDIT
     if not args.skip_roofline:
         benches = benches + ALL_ROOFLINE
 

@@ -1,0 +1,278 @@
+"""AST-based standing-policy lint (``python -m repro.analysis.lint``).
+
+The policies this gate enforces are the repo's hard-won JAX-compat
+rules (see ROADMAP "standing policies") — each became policy after a
+real breakage, and each is mechanically checkable from the source
+alone:
+
+``L001`` ``jax.shard_map`` / ``check_vma`` must be imported only
+through :mod:`repro.parallel.compat`: the compat shim owns the
+0.4.x/0.5.x API drift (``jax.experimental.shard_map`` vs
+``jax.shard_map``, ``check_rep`` vs ``check_vma``); a direct import
+works on exactly one pinned version.
+
+``L002`` ``hypothesis`` must be imported only through
+``tests/_hypothesis_compat``: the container has no hypothesis wheel,
+and the compat module degrades to a deterministic sampler instead of
+a collection error.
+
+``L003`` No ``interpret=True`` *literal default* outside the
+whitelisted kernel entry points (``src/repro/kernels/``): the kernels
+default to interpret mode by design (CPU validation), but anything
+above them must thread the flag explicitly, or a TPU run silently
+executes the slow interpreter.
+
+``L004`` No obviously 0-d value returned from a ``shard_map`` body:
+scalar residuals crossing a differentiated ``shard_map`` break jax
+0.4.x's transpose (``_SpecError`` under ``grad``) — bodies must keep
+everything >= 1-D (see ``models/embedding.py``).  The check is a
+conservative heuristic: it flags ``return``s whose expression (or
+tuple element) is a direct ``jnp.sum/mean/max/min/prod`` call without
+``keepdims=True``, or a ``float(...)`` — shapes it can prove 0-d.
+
+Exit status 0 when the tree is clean, 1 otherwise — tier-1 runs this
+as a test, and ``benchmarks/plan_audit_bench.py`` publishes the error
+count as a gated row.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import sys
+from pathlib import Path
+
+#: rule id -> one-line meaning (mirrors plan_check.RULES for the README)
+LINT_RULES = {
+    "L001": "jax shard_map/check_vma imported outside parallel/compat",
+    "L002": "hypothesis imported outside tests/_hypothesis_compat",
+    "L003": "interpret=True literal default outside src/repro/kernels/",
+    "L004": "provably 0-d value returned from a shard_map body",
+}
+
+#: path fragments (posix) that exempt a file from a rule
+_ALLOW = {
+    "L001": ("parallel/compat.py",),
+    "L002": ("_hypothesis_compat.py",),
+    "L003": ("/kernels/",),
+    "L004": (),
+}
+
+_SCALAR_REDUCERS = {"sum", "mean", "max", "min", "prod"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One policy violation: ``file:line rule message``."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}"
+
+
+def _allowed(path: str, rule: str) -> bool:
+    p = Path(path).as_posix()
+    return any(frag in p for frag in _ALLOW[rule])
+
+
+def _attr_chain(node: ast.AST) -> str:
+    """Dotted name of an attribute/name chain ('' when not one)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _returns_scalar(expr: ast.AST) -> bool:
+    """True when ``expr`` is provably a 0-d array/scalar."""
+    if isinstance(expr, ast.Tuple):
+        return any(_returns_scalar(e) for e in expr.elts)
+    if isinstance(expr, ast.Constant) and isinstance(expr.value,
+                                                    (int, float)):
+        return True
+    if not isinstance(expr, ast.Call):
+        return False
+    chain = _attr_chain(expr.func)
+    if chain == "float":
+        return True
+    head, _, tail = chain.rpartition(".")
+    if head in ("jnp", "np", "jax.numpy", "numpy") \
+            and tail in _SCALAR_REDUCERS:
+        for kw in expr.keywords:
+            if kw.arg == "keepdims" \
+                    and isinstance(kw.value, ast.Constant) \
+                    and kw.value.value:
+                return False
+        # a reduction over an explicit axis keeps the other dims
+        return not any(kw.arg == "axis" for kw in expr.keywords) \
+            and len(expr.args) < 2
+    return False
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str):
+        self.path = path
+        self.findings: list[Finding] = []
+        # every def in the module, by name — shard_map bodies are
+        # resolved against this (closures included)
+        self.defs: dict[str, ast.FunctionDef] = {}
+
+    def _emit(self, rule: str, line: int, message: str) -> None:
+        if not _allowed(self.path, rule):
+            self.findings.append(Finding(rule=rule, path=self.path,
+                                         line=line, message=message))
+
+    # -- L001 / L002: import provenance -----------------------------------
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            root = alias.name.split(".")[0]
+            if root == "hypothesis":
+                self._emit("L002", node.lineno,
+                           "import hypothesis directly — use "
+                           "tests/_hypothesis_compat")
+            if alias.name.startswith("jax") \
+                    and "shard_map" in alias.name:
+                self._emit("L001", node.lineno,
+                           f"import {alias.name} — use "
+                           "repro.parallel.compat")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        mod = node.module or ""
+        root = mod.split(".")[0]
+        if root == "hypothesis":
+            self._emit("L002", node.lineno,
+                       f"from {mod} import ... — use "
+                       "tests/_hypothesis_compat")
+        if root == "jax":
+            bad = sorted({a.name for a in node.names}
+                         & {"shard_map", "check_vma"})
+            if "shard_map" in mod:
+                bad = sorted({a.name for a in node.names}) or bad
+            if bad:
+                self._emit("L001", node.lineno,
+                           f"from {mod} import {', '.join(bad)} — "
+                           "use repro.parallel.compat")
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        chain = _attr_chain(node)
+        if chain in ("jax.shard_map", "jax.experimental.shard_map"):
+            self._emit("L001", node.lineno,
+                       f"{chain} referenced directly — use "
+                       "repro.parallel.compat")
+        self.generic_visit(node)
+
+    # -- L003: interpret literal defaults ----------------------------------
+
+    def _check_defaults(self, node) -> None:
+        a = node.args
+        pairs = list(zip(a.args[len(a.args) - len(a.defaults):],
+                         a.defaults))
+        pairs += [(k, d) for k, d in zip(a.kwonlyargs, a.kw_defaults)
+                  if d is not None]
+        for arg, default in pairs:
+            if arg.arg == "interpret" \
+                    and isinstance(default, ast.Constant) \
+                    and default.value is True:
+                self._emit("L003", node.lineno,
+                           f"def {node.name}(... interpret=True ...) — "
+                           "interpret defaults live in "
+                           "src/repro/kernels/ only")
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self.defs.setdefault(node.name, node)
+        self._check_defaults(node)
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # -- L004: scalars out of shard_map bodies ------------------------------
+
+    def _body_returns(self, fn: ast.AST):
+        if isinstance(fn, ast.Lambda):
+            yield fn.body.lineno, fn.body
+            return
+        if isinstance(fn, ast.Call):       # partial(body, ...) et al.
+            fn = fn.args[0] if fn.args else None
+        if isinstance(fn, ast.Name):
+            fn = self.defs.get(fn.id)
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Return) and sub.value is not None:
+                    yield sub.lineno, sub.value
+
+    def visit_Call(self, node: ast.Call) -> None:
+        chain = _attr_chain(node.func)
+        if (chain == "shard_map" or chain.endswith(".shard_map")) \
+                and node.args:
+            for line, expr in self._body_returns(node.args[0]):
+                if _returns_scalar(expr):
+                    self._emit("L004", line,
+                               "shard_map body returns a provably 0-d "
+                               "value — keep residuals >= 1-D "
+                               "(reshape to (1,))")
+        self.generic_visit(node)
+
+
+def lint_file(path: str | Path) -> list[Finding]:
+    """Lint one source file; syntax errors are findings, not crashes."""
+    path = Path(path)
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as e:
+        return [Finding(rule="parse", path=str(path),
+                        line=e.lineno or 0, message=str(e.msg))]
+    linter = _Linter(str(path))
+    # two passes so a shard_map call can resolve a body defined later
+    for sub in ast.walk(tree):
+        if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            linter.defs.setdefault(sub.name, sub)
+    linter.visit(tree)
+    return linter.findings
+
+
+def repo_root() -> Path:
+    """`<root>/src/repro/analysis/lint.py` -> `<root>`."""
+    return Path(__file__).resolve().parents[3]
+
+
+def lint_paths(paths) -> list[Finding]:
+    """Lint files and/or directory trees (``.py`` files, recursively)."""
+    findings: list[Finding] = []
+    for p in paths:
+        p = Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            findings.extend(lint_file(f))
+    return findings
+
+
+def lint_repo(root: str | Path | None = None) -> list[Finding]:
+    """Lint every tracked source tree of the repo."""
+    root = Path(root) if root is not None else repo_root()
+    trees = [root / d for d in ("src", "models", "tests", "benchmarks")]
+    return lint_paths([t for t in trees if t.is_dir()])
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    findings = lint_paths(argv) if argv else lint_repo()
+    for f in findings:
+        print(f)
+    n = len(findings)
+    print(f"lint: {n} error(s)" if n else "lint: clean")
+    return 1 if n else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,631 @@
+"""Static conv/matmul plan verifier: Mosaic legality + traffic audit.
+
+Every traffic ratio this repo publishes rests on two assumptions that
+were, until this module, unverified at rest:
+
+  1. the accountant's :meth:`ConvPlan.traffic` matches the HBM words
+     the kernel's BlockSpecs actually move (Pallas' refetch rule);
+  2. the autotuner's winning plans are *executable* — their blocks
+     respect the Mosaic/MXU tiling constraints a compiled
+     (``interpret=False``) ``pallas_call`` enforces, fit the VMEM
+     budget with double-buffering, and never index out of bounds.
+
+Demmel & Dinh (*Communication-Optimal Convolutional Neural Nets*,
+2018) warn precisely about tilings that attain the bound on paper but
+violate hardware tiling constraints; the ROADMAP's compiled-mode item
+records that the autotuner's favourite ASIC-budget plans (tiny
+``ci_block``) are exactly that.  This module makes both assumptions
+*checkable without running a kernel*:
+
+  * **Legality pass** — :func:`check_conv_plan` /
+    :func:`check_wgrad_plan` / :func:`check_matmul_block` verify a
+    plan against structural rules (VMEM fit including double-buffered
+    operands and the residual/bias epilogue panels, grid
+    divisibility, halo-extended input windows in bounds, psum tile
+    shape, pool alignment — always ``error``) and Mosaic alignment
+    rules (``SUBLANE``/``LANE`` tiles per dtype, unblocked halo
+    offsets, MXU reduction fill — ``error`` under the ``mosaic``
+    target, ``warn`` under ``interpret``), returning structured
+    :class:`Diagnostic` records with rule ids and repair hints.
+    Conv and matmul share one rule implementation
+    (:func:`_lane_rule` / :func:`_sublane_rule`), so every kernel
+    family inherits the same gate.
+
+  * **Traffic cross-audit** — :func:`symbolic_conv_traffic` /
+    :func:`symbolic_wgrad_traffic` / :func:`symbolic_bound_words`
+    re-derive the per-operand HBM word counts and the Eq. (15) bound
+    from the block geometry through a second, simpler derivation
+    (fetch-count × block-volume, ceil divisions of the *true* dims)
+    and :func:`audit_handles` asserts exact agreement with the
+    accountant for every plan — accountant drift becomes a test
+    failure, not a silent benchmark lie.
+
+  * **Graph audit** — :func:`audit_graph` runs both passes over every
+    node of a :class:`~repro.models.graph.ConvGraph` (forward, dgrad
+    and wgrad plans), producing the ``plans checked / plans legal``
+    counts the benchmark gate tracks.
+
+Targets: ``TARGET_INTERPRET`` is the accounting profile (structural
+rules are errors; Mosaic alignment demoted to warnings — ASIC-budget
+accounting plans are *meant* to be hardware-agnostic), and
+``TARGET_MOSAIC`` is the compiled-execution profile where alignment
+violations are errors — the gate for flipping ``interpret=False``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.dataflow import Traffic
+from repro.core.layer import ceil_div
+from repro.core.tpu_adapter import (LANE, MXU_DIM, VMEM_BYTES,
+                                    sublane_for)
+
+TARGET_INTERPRET = "interpret"
+TARGET_MOSAIC = "mosaic"
+
+ERROR = "error"
+WARN = "warn"
+
+#: rule id -> one-line meaning (the README's rule table renders this)
+RULES = {
+    "conv.grid": "padded output/channel dims must divide the blocks "
+                 "(Pallas grid = padded // block exactly)",
+    "conv.halo": "the halo-extended input window of every tile must "
+                 "stay inside the padded input plane",
+    "conv.pool": "a fused pool must divide the spatial blocks and the "
+                 "true output plane (windows never straddle tiles)",
+    "conv.vmem": "psums + double-buffered operand panels (+ residual "
+                 "join panel, + pinned-weight single buffer) must fit "
+                 "the VMEM budget",
+    "wgrad.vmem": "resident f32 dW block + double-buffered x/dy "
+                  "strips must fit the VMEM budget",
+    "wgrad.grid": "dW channel blocks must not exceed the layer's "
+                  "channel counts",
+    "matmul.shape": "block dims must be positive and not exceed the "
+                    "padded operand dims",
+    "matmul.vmem": "psum block + double-buffered A/B panels must fit "
+                   "the VMEM budget",
+    "mosaic.lane": "a block's last dim must be a LANE (128) multiple "
+                   "or cover the full (padded) array dim",
+    "mosaic.sublane": "a block's second-minor dim must be a sublane "
+                      "multiple for the dtype (f32 8 / bf16 16 / "
+                      "int8 32) or cover the full dim",
+    "mosaic.offset": "unblocked halo offsets (tile * stride strides) "
+                     "must land on sublane-aligned rows",
+    "mosaic.mxu": "a reduction slice far below the 128-wide MXU "
+                  "leaves the systolic array underfilled (perf, not "
+                  "legality)",
+    "autotune.vmem": "a search candidate was rejected because its "
+                     "working set exceeds the VMEM budget",
+    "autotune.mosaic": "a search candidate was snapped to (or "
+                       "rejected for lacking) a Mosaic-legal shape "
+                       "under the 'mosaic' target",
+    "audit.traffic": "the symbolic traffic/bound re-derivation "
+                     "disagrees with the accountant (planner or "
+                     "accountant drift)",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One finding of the static verifier.
+
+    ``rule`` indexes :data:`RULES`; ``severity`` is ``error`` (the
+    plan must not execute / be served) or ``warn`` (legal under the
+    current target, would block a stricter one); ``hint`` says how to
+    repair the shape, not just that it is wrong."""
+
+    rule: str
+    severity: str
+    message: str
+    hint: str = ""
+    where: str = ""
+
+    def __str__(self) -> str:
+        tail = f"  [{self.hint}]" if self.hint else ""
+        head = f"{self.where}: " if self.where else ""
+        return f"{self.severity}:{self.rule}: {head}{self.message}{tail}"
+
+
+def errors(diags) -> list[Diagnostic]:
+    return [d for d in diags if d.severity == ERROR]
+
+
+def format_diagnostics(diags) -> str:
+    return "\n".join(str(d) for d in diags) or "clean"
+
+
+class PlanLegalityError(ValueError):
+    """An auto-chosen plan failed the legality pass (a planner bug:
+    the search must never emit a structurally illegal plan)."""
+
+    def __init__(self, diags):
+        self.diagnostics = list(diags)
+        super().__init__("illegal plan:\n" + format_diagnostics(
+            errors(self.diagnostics)))
+
+
+# --------------------------------------------------------------------------
+# shared Mosaic alignment rules (conv and matmul ride the same impls)
+# --------------------------------------------------------------------------
+
+def _mosaic_sev(target: str) -> str:
+    return ERROR if target == TARGET_MOSAIC else WARN
+
+
+def _lane_rule(block: int, full: int, operand: str, target: str,
+               where: str = "") -> Diagnostic | None:
+    """Last-dim tile rule: LANE multiple, or the block covers the
+    whole (padded) dim so Mosaic pads the array internally."""
+    if block % LANE == 0 or block >= full:
+        return None
+    legal = min(full, -(-block // LANE) * LANE)
+    return Diagnostic(
+        rule="mosaic.lane", severity=_mosaic_sev(target), where=where,
+        message=f"{operand} last dim {block} is neither a multiple of "
+                f"{LANE} nor the full dim {full}",
+        hint=f"grow to {legal} (or the full {full})")
+
+
+def _sublane_rule(block: int, full: int, dtype_bytes: int,
+                  operand: str, target: str,
+                  where: str = "") -> Diagnostic | None:
+    """Second-minor tile rule, keyed by the word size."""
+    sub = sublane_for(dtype_bytes)
+    if block % sub == 0 or block >= full:
+        return None
+    legal = min(full, -(-block // sub) * sub)
+    return Diagnostic(
+        rule="mosaic.sublane", severity=_mosaic_sev(target), where=where,
+        message=f"{operand} second-minor dim {block} is not a "
+                f"{sub}-row tile ({dtype_bytes}-byte words) nor the "
+                f"full dim {full}",
+        hint=f"grow to {legal} (or the full {full})")
+
+
+def _err(rule: str, message: str, hint: str = "",
+         where: str = "") -> Diagnostic:
+    return Diagnostic(rule=rule, severity=ERROR, message=message,
+                      hint=hint, where=where)
+
+
+# --------------------------------------------------------------------------
+# legality pass: ConvPlan
+# --------------------------------------------------------------------------
+
+def check_conv_plan(plan, *, batch: int = 1, dtype_bytes: int = 4,
+                    vmem_budget: int | None = None,
+                    target: str = TARGET_INTERPRET,
+                    where: str = "") -> list[Diagnostic]:
+    """Verify one :class:`~repro.kernels.conv_lb.ops.ConvPlan` against
+    the structural contract ``conv_lb_call`` asserts at trace time
+    (re-derived independently here, so planner drift is caught
+    *before* any kernel is built) plus the Mosaic tiling rules a
+    compiled ``pallas_call`` would enforce."""
+    budget = VMEM_BYTES // 2 if vmem_budget is None else vmem_budget
+    blk = plan.blocks
+    sy, sx = plan.stride
+    ekh = (plan.hk - 1) * plan.dilation[0] + 1
+    ekw = (plan.wk - 1) * plan.dilation[1] + 1
+    diags: list[Diagnostic] = []
+
+    # -- structural: grid divisibility ------------------------------------
+    for name, dim, b in (("ho_pad", plan.ho_pad, blk.y),
+                         ("wo_pad", plan.wo_pad, blk.x),
+                         ("ci_pad", plan.ci_pad, blk.ci),
+                         ("co_pad", plan.co_pad, blk.co)):
+        if b < 1 or dim % b:
+            diags.append(_err(
+                "conv.grid", f"{name}={dim} does not divide its block "
+                f"{b}", hint=f"pad {name} to a multiple of {b}",
+                where=where))
+    for name, dim, true in (("ho", plan.ho_pad, plan.ho),
+                            ("wo", plan.wo_pad, plan.wo),
+                            ("ci", plan.ci_pad, plan.ci),
+                            ("co", plan.co_pad, plan.co)):
+        if true and dim < true:
+            diags.append(_err(
+                "conv.grid", f"padded {name} {dim} is smaller than "
+                f"the true dim {true}", where=where))
+
+    # -- structural: halo windows in bounds -------------------------------
+    want_hy = (blk.y - 1) * sy + ekh
+    want_hx = (blk.x - 1) * sx + ekw
+    if (blk.halo_y, blk.halo_x) != (want_hy, want_hx):
+        diags.append(_err(
+            "conv.halo", f"halo ({blk.halo_y}, {blk.halo_x}) does not "
+            f"match the tile's input footprint ({want_hy}, {want_hx})",
+            hint="halos belong to the tile: (t-1)*stride + dilated "
+                 "kernel extent", where=where))
+    if plan.ho_pad // max(1, blk.y):
+        last_y = (plan.ho_pad // blk.y - 1) * blk.y * sy + blk.halo_y
+        last_x = (plan.wo_pad // blk.x - 1) * blk.x * sx + blk.halo_x
+        if last_y > plan.hp_pad or last_x > plan.wp_pad:
+            diags.append(_err(
+                "conv.halo", f"last tile's halo reads "
+                f"({last_y}, {last_x}) past the padded input plane "
+                f"({plan.hp_pad}, {plan.wp_pad})",
+                hint="pad the input to the last tile's halo end",
+                where=where))
+
+    # -- structural: fused pool alignment ---------------------------------
+    if plan.pool > 1:
+        if blk.y % plan.pool or blk.x % plan.pool:
+            diags.append(_err(
+                "conv.pool", f"tile {blk.y}x{blk.x} is not divisible "
+                f"by the fused pool {plan.pool}",
+                hint="snap spatial blocks to pool multiples",
+                where=where))
+        if plan.ho % plan.pool or plan.wo % plan.pool:
+            diags.append(_err(
+                "conv.pool", f"output plane {plan.ho}x{plan.wo} is "
+                f"not divisible by the fused pool {plan.pool}",
+                where=where))
+
+    # -- structural: VMEM fit (double-buffered, epilogue-aware) -----------
+    pinned = blk.ci >= plan.ci_pad and blk.co >= plan.co_pad
+    need = blk.vmem_bytes(plan.hk, plan.wk, dtype_bytes,
+                          w_pinned=pinned, residual=plan.residual)
+    if need > budget:
+        diags.append(_err(
+            "conv.vmem", f"working set {need} B exceeds the "
+            f"{budget} B budget (psum {blk.psum_bytes} B + "
+            f"double-buffered panels{' + residual join panel' if plan.residual else ''})",
+            hint="shrink ci/batch blocks first (they only cost "
+                 "memory), then the spatial tile", where=where))
+
+    # -- Mosaic alignment (error only under the mosaic target) ------------
+    d = _lane_rule(blk.co, plan.co_pad, "psum/output/weight block",
+                   target, where)
+    if d:
+        diags.append(d)
+    d = _lane_rule(blk.ci, plan.ci_pad, "input block", target, where)
+    if d:
+        diags.append(d)
+    d = _sublane_rule(blk.x // max(1, plan.pool),
+                      plan.wo_pad // max(1, plan.pool), dtype_bytes,
+                      "output block", target, where)
+    if d:
+        diags.append(d)
+    d = _sublane_rule(blk.ci, plan.ci_pad, dtype_bytes,
+                      "weight block", target, where)
+    if d:
+        diags.append(d)
+    if plan.wo_pad // blk.x > 1:
+        # unblocked halo tiles index by element offset xi*x_block*sx:
+        # every offset must land on a sublane-aligned input row
+        sub = sublane_for(dtype_bytes)
+        if (blk.x * sx) % sub:
+            diags.append(Diagnostic(
+                rule="mosaic.offset", severity=_mosaic_sev(target),
+                where=where,
+                message=f"halo x-offsets advance by {blk.x * sx} "
+                        f"rows, not a {sub}-row multiple",
+                hint=f"make x_block*stride a multiple of {sub}"))
+    if blk.ci < min(MXU_DIM, plan.ci_pad):
+        diags.append(Diagnostic(
+            rule="mosaic.mxu", severity=WARN, where=where,
+            message=f"reduction slice ci_block={blk.ci} underfills "
+                    f"the {MXU_DIM}-wide MXU",
+            hint="grow ci_block toward 128 when VMEM allows"))
+    return diags
+
+
+# --------------------------------------------------------------------------
+# legality pass: WgradPlan (lax-executed, structural rules only)
+# --------------------------------------------------------------------------
+
+def check_wgrad_plan(wplan, *, dtype_bytes: int = 4,
+                     vmem_budget: int | None = None,
+                     where: str = "") -> list[Diagnostic]:
+    """Verify a dW-stationary :class:`WgradPlan`: the resident dW
+    block plus double-buffered x/dy strips must fit the budget, and
+    the channel blocks must describe a real partition of the layer.
+    (Execution rides lax, so Mosaic tile rules do not apply — this is
+    the accounting schedule's feasibility check.)"""
+    budget = VMEM_BYTES // 2 if vmem_budget is None else vmem_budget
+    diags: list[Diagnostic] = []
+    for name, b, dim in (("ci_b", wplan.ci_b, wplan.ci),
+                         ("co_b", wplan.co_b, wplan.co),
+                         ("strip", wplan.strip, wplan.ho)):
+        if b < 1 or b > dim:
+            diags.append(_err(
+                "wgrad.grid", f"{name}={b} outside [1, {dim}]",
+                where=where))
+    xrows = (wplan.strip - 1) * wplan.sy + wplan.ekh
+    need = (4 * wplan.hk * wplan.wk * wplan.ci_b * wplan.co_b
+            + 2 * dtype_bytes * xrows * wplan.wp * wplan.ci_b
+            + 2 * dtype_bytes * wplan.strip * wplan.wo * wplan.co_b)
+    if need > budget:
+        diags.append(_err(
+            "wgrad.vmem", f"resident dW block + strips need {need} B "
+            f"> {budget} B budget",
+            hint="shrink the strip first, then the channel blocks",
+            where=where))
+    return diags
+
+
+# --------------------------------------------------------------------------
+# legality pass: matmul BlockShape (shared rules — satellite gate)
+# --------------------------------------------------------------------------
+
+def check_matmul_block(blk, m: int, n: int, k: int, *,
+                       dtype_bytes: int = 2,
+                       vmem_budget: int | None = None,
+                       target: str = TARGET_INTERPRET,
+                       where: str = "") -> list[Diagnostic]:
+    """Verify a matmul :class:`~repro.core.tpu_adapter.BlockShape`
+    through the *same* rule implementations the conv pass uses, so the
+    matmul/attention kernels inherit the gate rather than growing a
+    conv-only checker."""
+    budget = VMEM_BYTES // 2 if vmem_budget is None else vmem_budget
+    diags: list[Diagnostic] = []
+    for name, b in (("bm", blk.bm), ("bn", blk.bn), ("bk", blk.bk)):
+        if b < 1:
+            diags.append(_err("matmul.shape", f"{name}={b} < 1",
+                              where=where))
+    if diags:
+        return diags
+    need = blk.vmem_bytes(dtype_bytes)
+    if need > budget:
+        diags.append(_err(
+            "matmul.vmem", f"psum + double-buffered panels need "
+            f"{need} B > {budget} B budget",
+            hint="shrink bm/bn toward the paper's u ~= R*z balance",
+            where=where))
+    mp, np_, kp = (ceil_div(m, blk.bm) * blk.bm,
+                   ceil_div(n, blk.bn) * blk.bn,
+                   ceil_div(k, blk.bk) * blk.bk)
+    for d in (_lane_rule(blk.bn, np_, "B-panel/psum block", target,
+                         where),
+              _lane_rule(blk.bk, kp, "A-panel block", target, where),
+              _sublane_rule(blk.bm, mp, dtype_bytes, "A-panel/psum "
+                            "block", target, where),
+              _sublane_rule(blk.bk, kp, dtype_bytes, "B-panel block",
+                            target, where)):
+        if d:
+            diags.append(d)
+    if blk.bk < min(MXU_DIM, kp):
+        diags.append(Diagnostic(
+            rule="mosaic.mxu", severity=WARN, where=where,
+            message=f"reduction slice bk={blk.bk} underfills the "
+                    f"{MXU_DIM}-wide MXU"))
+    return diags
+
+
+# --------------------------------------------------------------------------
+# traffic cross-audit: the second derivation
+# --------------------------------------------------------------------------
+
+def symbolic_conv_traffic(plan, batch: int) -> Traffic:
+    """Independent re-derivation of :meth:`ConvPlan.traffic`.
+
+    Counts fetches per operand straight from the BlockSpec index maps
+    (an operand is re-fetched when its index-map output changes
+    between consecutive grid steps, nci innermost) and multiplies by
+    the block volume — ceil divisions of the *true* dims, never
+    touching the accountant's padded-plane route.  Exact integer
+    agreement with ``_blocks_traffic`` is asserted by the audit."""
+    blk = plan.blocks
+    tb = max(1, min(blk.b, batch))
+    nb = ceil_div(batch, tb)
+    ny, nx = ceil_div(plan.ho, blk.y), ceil_div(plan.wo, blk.x)
+    nci = ceil_div(plan.ci_pad, blk.ci)
+    nco = ceil_div(plan.co_pad, blk.co)
+    spatial_blocks = nb * ny * nx
+    # input halo tile: index map reads (bi, yi, xi, cii) — constant
+    # across the Co sweep only when there is a sole Ci block
+    in_fetches = (spatial_blocks if nci == 1
+                  else spatial_blocks * nco * nci)
+    in_words = in_fetches * (tb * blk.halo_y * blk.halo_x * blk.ci)
+    # weight slice: index map reads (cii, coi) — constant over the
+    # whole grid iff both channel dims have a single block
+    w_fetches = 1 if nci * nco == 1 else spatial_blocks * nco * nci
+    w_words = w_fetches * (plan.hk * plan.wk * blk.ci * blk.co)
+    # fused residual join: one (bi, yi, xi, coi) fetch of the pre-pool
+    # psum-tile-shaped operand; the Ci sweep never re-reads it
+    if plan.residual:
+        in_words += spatial_blocks * nco * (tb * blk.y * blk.x * blk.co)
+    # outputs: psum-stationary OutR — exactly one (pooled) write per
+    # (bi, yi, xi, coi), zero psum re-reads
+    out_words = (spatial_blocks * nco
+                 * (tb * (blk.y // plan.pool) * (blk.x // plan.pool)
+                    * blk.co))
+    return Traffic(reads_in=float(in_words), reads_w=float(w_words),
+                   reads_out=0.0, writes_out=float(out_words))
+
+
+def symbolic_wgrad_traffic(wplan, batch: int) -> Traffic:
+    """Independent re-derivation of :meth:`WgradPlan.traffic`: per
+    (ci-block, co-block) sweep the rolling x strips read every touched
+    input row once, dy streams once per Ci-block sweep, and the
+    resident dW block flushes exactly once."""
+    nci = ceil_div(wplan.ci, wplan.ci_b)
+    nco = ceil_div(wplan.co, wplan.co_b)
+    x_rows = (wplan.ho - 1) * wplan.sy + wplan.ekh
+    x_plane = x_rows * wplan.wp
+    reads_x = nco * (batch * nci * wplan.ci_b) * x_plane
+    reads_dy = nci * (batch * nco * wplan.co_b) * wplan.ho * wplan.wo
+    writes = (wplan.hk * wplan.wk) * (nci * wplan.ci_b) * (nco
+                                                           * wplan.co_b)
+    return Traffic(reads_in=float(reads_x), reads_w=float(reads_dy),
+                   reads_out=0.0, writes_out=float(writes))
+
+
+def symbolic_bound_words(plan, layer) -> float:
+    """Independent re-derivation of :meth:`ConvPlan.bound_words`:
+    Eq. (15) at the plan's realized footprint, floored at the
+    once-per-word ideal, plus the residual join's mandatory read —
+    spelled out from first principles rather than through
+    ``lower_bound.q_dram_practical``."""
+    s = plan.footprint_elems()
+    macs = (layer.batch * layer.ho * layer.wo * layer.co
+            * layer.hk * layer.wk * layer.ci)
+    r = max(1.0, (layer.hk * layer.wk) / float(layer.stride ** 2))
+    outputs = layer.batch * layer.co * layer.ho * layer.wo
+    touched = (layer.batch * layer.ci
+               * layer.fetched_area(layer.wo, layer.ho))
+    ideal = float(touched + layer.hk * layer.wk * layer.ci * layer.co
+                  + outputs)
+    q = max(2.0 * macs / math.sqrt(r * s) + outputs, ideal)
+    if plan.residual:
+        q += float(outputs)
+    return q
+
+
+# --------------------------------------------------------------------------
+# the audit: every plan of a handle list / graph, both passes
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PlanAuditEntry:
+    """One plan's verdict: legality diagnostics + cross-audit flags."""
+
+    name: str            # "<layer>/<pass>" e.g. "conv3_1/dgrad"
+    diagnostics: tuple[Diagnostic, ...]
+    traffic_ok: bool     # symbolic re-derivation == accountant
+    bound_ok: bool       # symbolic Eq. (15) == ConvPlan.bound_words
+    words: float         # accountant words at the audit batch
+    bound: float         # bound words (0.0 where not applicable)
+
+    @property
+    def legal(self) -> bool:
+        return not errors(self.diagnostics)
+
+    @property
+    def ok(self) -> bool:
+        return self.legal and self.traffic_ok and self.bound_ok
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanAudit:
+    """The audit over a set of plan handles."""
+
+    entries: tuple[PlanAuditEntry, ...]
+    target: str
+
+    @property
+    def n_plans(self) -> int:
+        return len(self.entries)
+
+    @property
+    def n_legal(self) -> int:
+        return sum(e.legal for e in self.entries)
+
+    @property
+    def legal_frac(self) -> float:
+        return self.n_legal / max(1, self.n_plans)
+
+    @property
+    def traffic_mismatches(self) -> int:
+        return sum(not e.traffic_ok for e in self.entries)
+
+    @property
+    def bound_mismatches(self) -> int:
+        return sum(not e.bound_ok for e in self.entries)
+
+    @property
+    def ok(self) -> bool:
+        return all(e.ok for e in self.entries)
+
+    def errors(self) -> list[Diagnostic]:
+        return [d for e in self.entries for d in errors(e.diagnostics)]
+
+    def report(self) -> str:
+        """Human-readable audit summary (one line per plan, details
+        for anything that failed)."""
+        lines = [f"plan audit [{self.target}]: {self.n_legal}/"
+                 f"{self.n_plans} legal, "
+                 f"{self.traffic_mismatches} traffic mismatch(es), "
+                 f"{self.bound_mismatches} bound mismatch(es)"]
+        for e in self.entries:
+            flag = "ok " if e.ok else "BAD"
+            lines.append(f"  {flag} {e.name}: {e.words:.3g} words"
+                         + (f" vs bound {e.bound:.3g}" if e.bound
+                            else ""))
+            for d in e.diagnostics:
+                if d.severity == ERROR or not e.legal:
+                    lines.append(f"       {d}")
+        return "\n".join(lines)
+
+
+def _traffic_eq(a: Traffic, b: Traffic) -> bool:
+    return (a.reads_in == b.reads_in and a.reads_w == b.reads_w
+            and a.reads_out == b.reads_out
+            and a.writes_out == b.writes_out)
+
+
+def _audit_conv(name, layer, plan, *, batch, dtype_bytes, vmem_budget,
+                target) -> PlanAuditEntry:
+    diags = check_conv_plan(plan, batch=batch, dtype_bytes=dtype_bytes,
+                            vmem_budget=vmem_budget, target=target,
+                            where=name)
+    acct = plan.traffic(batch)
+    traffic_ok = _traffic_eq(symbolic_conv_traffic(plan, batch), acct)
+    bound = plan.bound_words(layer) if layer is not None else 0.0
+    bound_ok = (layer is None
+                or symbolic_bound_words(plan, layer) == bound)
+    return PlanAuditEntry(name=name, diagnostics=tuple(diags),
+                          traffic_ok=traffic_ok, bound_ok=bound_ok,
+                          words=acct.total, bound=bound)
+
+
+def _audit_wgrad(name, wplan, *, batch, dtype_bytes,
+                 vmem_budget) -> PlanAuditEntry:
+    diags = check_wgrad_plan(wplan, dtype_bytes=dtype_bytes,
+                             vmem_budget=vmem_budget, where=name)
+    acct = wplan.traffic(batch)
+    traffic_ok = _traffic_eq(symbolic_wgrad_traffic(wplan, batch), acct)
+    return PlanAuditEntry(name=name, diagnostics=tuple(diags),
+                          traffic_ok=traffic_ok, bound_ok=True,
+                          words=acct.total, bound=0.0)
+
+
+def audit_handles(handles, *, batch: int, dtype_bytes: int = 4,
+                  vmem_budget: int | None = None,
+                  target: str = TARGET_INTERPRET) -> PlanAudit:
+    """Audit ``[(ConvLayer, ConvPlan | ConvTrainingPlan)]`` handles
+    (the :func:`~repro.models.graph.graph_plan_handles` export): the
+    legality pass on every constituent plan and the symbolic traffic/
+    bound cross-audit against the accountant."""
+    entries: list[PlanAuditEntry] = []
+    for layer, handle in handles:
+        if hasattr(handle, "fwd"):        # ConvTrainingPlan triple
+            entries.append(_audit_conv(
+                f"{layer.name}/fwd", layer, handle.fwd, batch=batch,
+                dtype_bytes=dtype_bytes, vmem_budget=vmem_budget,
+                target=target))
+            # the dgrad conv is its own layer geometry; legality and
+            # the traffic re-derivation apply, the fwd bound does not
+            entries.append(_audit_conv(
+                f"{layer.name}/dgrad", None, handle.dgrad, batch=batch,
+                dtype_bytes=dtype_bytes, vmem_budget=vmem_budget,
+                target=target))
+            entries.append(_audit_wgrad(
+                f"{layer.name}/wgrad", handle.wgrad, batch=batch,
+                dtype_bytes=dtype_bytes, vmem_budget=vmem_budget))
+        else:
+            entries.append(_audit_conv(
+                f"{layer.name}/fwd", layer, handle, batch=batch,
+                dtype_bytes=dtype_bytes, vmem_budget=vmem_budget,
+                target=target))
+    return PlanAudit(entries=tuple(entries), target=target)
+
+
+def audit_graph(graph, h: int, w: int, *, batch: int, in_ch: int = 3,
+                dtype_bytes: int = 4, vmem_budget: int | None = None,
+                training: bool = True,
+                target: str = TARGET_INTERPRET) -> PlanAudit:
+    """Run the full static audit over every node of a conv graph:
+    forward plans, and with ``training=True`` the planned dgrad/wgrad
+    convs too — the ``plans checked / plans legal`` gate."""
+    from repro.models.graph import graph_plan_handles
+
+    handles = graph_plan_handles(graph, h, w, batch=batch, in_ch=in_ch,
+                                 dtype_bytes=dtype_bytes,
+                                 vmem_budget=vmem_budget,
+                                 training=training)
+    return audit_handles(handles, batch=batch, dtype_bytes=dtype_bytes,
+                         vmem_budget=vmem_budget, target=target)

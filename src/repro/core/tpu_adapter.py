@@ -28,7 +28,16 @@ VMEM_BYTES = 128 * 1024 * 1024    # v5e VMEM per core
 HBM_BYTES = 16 * 1024 * 1024 * 1024
 MXU_DIM = 128                     # systolic array edge
 LANE = 128                        # last-dim tile
-SUBLANE = {2: 16, 4: 8}           # bytes -> second-minor tile
+# dtype bytes -> second-minor (sublane) tile: Mosaic packs narrower
+# words deeper, so the minimum tile *grows* as the word shrinks —
+# f32 (8, 128), bf16 (16, 128), int8/fp8 (32, 128)
+SUBLANE = {1: 32, 2: 16, 4: 8}
+
+
+def sublane_for(dtype_bytes: int) -> int:
+    """Mosaic second-minor tile for a word size; unknown sizes take
+    the 1-byte (deepest-packing) tile — the safe over-alignment."""
+    return SUBLANE.get(dtype_bytes, SUBLANE[1])
 
 
 def round_to(v: int, mult: int) -> int:
@@ -184,9 +193,12 @@ def conv_lb_block_shape(ho: int, wo: int, ci: int, co: int,
     r = max(1.0, (hk * wk) / float(sy * sx))
     # lane-width alignment only makes sense once the budget affords
     # 128-wide blocks; at paper-scale (ASIC GBuf-sized) budgets it
-    # would pin z to 128 and destroy the u ~= R*z balance, so fall back
-    # to the f32 sublane there.
-    align = MXU_DIM if vmem_budget >= 8 * 1024 * 1024 else SUBLANE[4]
+    # would pin z to 128 and destroy the u ~= R*z balance, so fall
+    # back to the *dtype's* sublane there — bf16 needs 16 rows where
+    # f32 needs 8, int8 needs 32 (an 8-row bf16 block is not a legal
+    # Mosaic tile, it only looked aligned under the old f32 constant).
+    align = (MXU_DIM if vmem_budget >= 8 * 1024 * 1024
+             else sublane_for(dtype_bytes))
     blk = lb_block_shape(batch * ho * wo, co, ci, r=r,
                          dtype_bytes=dtype_bytes,
                          vmem_budget=vmem_budget, align=align,

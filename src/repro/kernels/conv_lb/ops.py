@@ -165,6 +165,47 @@ class ConvPlan:
             self, batch=batch, dtype_bytes=dtype_bytes,
             vmem_budget=vmem_budget, autotune=autotune).traffic(batch)
 
+    def explain(self, *, batch: int = 1, dtype_bytes: int = 4,
+                vmem_budget: int | None = None,
+                target: str = "interpret") -> str:
+        """Human-readable account of this plan: block geometry, grid,
+        VMEM working set, per-operand traffic split, and every
+        :class:`~repro.analysis.plan_check.Diagnostic` the static
+        verifier raises against it — the audit report's per-plan
+        detail, and the first thing to read when a candidate was
+        rejected or a ratio looks wrong."""
+        from repro.analysis.plan_check import (check_conv_plan,
+                                               format_diagnostics)
+        from repro.core.tpu_adapter import VMEM_BYTES as _VMEM
+
+        budget = _VMEM // 2 if vmem_budget is None else vmem_budget
+        blk = self.blocks
+        pinned = blk.ci >= self.ci_pad and blk.co >= self.co_pad
+        need = blk.vmem_bytes(self.hk, self.wk, dtype_bytes,
+                              w_pinned=pinned, residual=self.residual)
+        t = self.traffic(batch)
+        ny, nx, nco, nci = self.grid
+        diags = check_conv_plan(self, batch=batch,
+                                dtype_bytes=dtype_bytes,
+                                vmem_budget=vmem_budget, target=target)
+        return "\n".join([
+            f"conv plan {self.ci}->{self.co} k{self.hk}x{self.wk} "
+            f"s{self.stride} d{self.dilation} on {self.h}x{self.w} "
+            f"(out {self.ho}x{self.wo}, pool {self.pool}"
+            f"{', residual join' if self.residual else ''})",
+            f"  blocks: b={blk.b} y={blk.y} x={blk.x} ci={blk.ci} "
+            f"co={blk.co} halo={blk.halo_y}x{blk.halo_x}"
+            f"{' [weights pinned]' if pinned else ''}",
+            f"  grid:   ny={ny} nx={nx} nco={nco} nci={nci} "
+            f"(x ceil(B/{blk.b}) batch blocks)",
+            f"  vmem:   {need} B of {budget} B "
+            f"({100.0 * need / max(1, budget):.0f}%)",
+            f"  traffic @B={batch}: in={t.reads_in:.4g} "
+            f"w={t.reads_w:.4g} out={t.writes_out:.4g} "
+            f"(total {t.total:.4g} words)",
+            f"  verifier [{target}]: {format_diagnostics(diags)}",
+        ])
+
 
 def _blocks_traffic(batch: int, blk: ConvBlockShape, hk: int, wk: int,
                     ho: int, wo: int, ci: int, co: int,
@@ -237,7 +278,10 @@ def autotune_conv_blocks(batch: int, ho: int, wo: int, ci: int, co: int,
                          pool: int = 1, residual: bool = False,
                          dtype_bytes: int = 4,
                          vmem_budget: int,
-                         seed: ConvBlockShape) -> ConvBlockShape:
+                         seed: ConvBlockShape,
+                         target: str = "interpret",
+                         diagnostics: list | None = None
+                         ) -> ConvBlockShape:
     """Traffic-guided plan autotuner (the 'exhaustive search' of the
     paper's methodology, collapsed): enumerate balanced candidate
     ``(b, y, x, ci_b)`` shapes, solve the best ``co_b`` analytically
@@ -250,11 +294,36 @@ def autotune_conv_blocks(batch: int, ho: int, wo: int, ci: int, co: int,
     so the result never scores worse than the closed form —
     ``residual=True`` (a fused join streams an extra double-buffered
     u x co_b operand tile) first shrinks the seed's co_b until the
-    join's buffer fits too, so every candidate honors the budget."""
+    join's buffer fits too, so every candidate honors the budget.
+
+    ``target`` selects the legality profile of
+    :mod:`repro.analysis.plan_check`: under ``"interpret"`` (the
+    accounting default) candidates only need to fit the budget; under
+    ``"mosaic"`` every candidate is *snapped to the nearest
+    Mosaic-legal shape before scoring* (channel blocks to LANE
+    multiples or the full dim, spatial blocks to sublane-aligned
+    offsets for the dtype) and misalignable ones are rejected, so the
+    winner is executable with ``interpret=False`` by construction.
+    ``diagnostics`` (a list) collects a
+    :class:`~repro.analysis.plan_check.Diagnostic` per rejected or
+    snapped candidate — the ``plan.explain()``-grade debug trail of
+    *why* the search landed where it did."""
+    from repro.analysis.plan_check import (LANE, TARGET_MOSAIC,
+                                           Diagnostic, PlanLegalityError)
+    from repro.core.tpu_adapter import sublane_for
+
     sy, sx = stride
     dy, dx = dilation
     db = dtype_bytes
     kk = hk * wk
+    mosaic = target == TARGET_MOSAIC
+    sub = sublane_for(db)
+    p = max(1, pool)
+
+    def note(rule: str, message: str, hint: str = "") -> None:
+        if diagnostics is not None:
+            diagnostics.append(Diagnostic(rule=rule, severity="warn",
+                                          message=message, hint=hint))
 
     def traffic(blk: ConvBlockShape) -> Traffic:
         return _blocks_traffic(batch, blk, hk, wk, ho, wo, ci, co, pool,
@@ -264,13 +333,59 @@ def autotune_conv_blocks(batch: int, ho: int, wo: int, ci: int, co: int,
         pinned = blk.ci >= ci and blk.co >= co
         return blk.vmem_bytes(hk, wk, db, w_pinned=pinned,
                               residual=residual) <= vmem_budget
-    while residual and not fits(seed) and seed.co > 1:
-        seed = dataclasses.replace(seed, co=balanced_tile(co,
-                                                          seed.co // 2))
 
-    cands = [(traffic(seed), seed)]
+    def mosaic_ok(blk: ConvBlockShape) -> bool:
+        ci_pad, co_pad = round_up(ci, blk.ci), round_up(co, blk.co)
+        nx = round_up(wo, blk.x) // blk.x
+        return ((blk.ci % LANE == 0 or blk.ci >= ci_pad)
+                and (blk.co % LANE == 0 or blk.co >= co_pad)
+                and (nx == 1 or ((blk.x // p) % sub == 0
+                                 and (blk.x * sx) % sub == 0)))
+
+    def snap_ch(v: int, dim: int) -> int:
+        """Nearest legal channel block: a LANE multiple, or full."""
+        return dim if v >= dim or round_up(v, LANE) >= dim \
+            else round_up(v, LANE)
+
+    def snap_x(v: int) -> int:
+        """Nearest legal spatial x block: sublane-aligned pooled rows
+        and sublane-aligned unblocked offsets, or the full plane."""
+        v = round_up(v, sub * p)
+        return v if v < wo else _snap_pool(wo, wo, pool)
+
+    def snap_mosaic(blk: ConvBlockShape) -> ConvBlockShape:
+        cib, cob = snap_ch(blk.ci, ci), snap_ch(blk.co, co)
+        x = snap_x(blk.x)
+        if (cib, cob, x) != (blk.ci, blk.co, blk.x):
+            note("autotune.mosaic",
+                 f"snapped candidate ci={blk.ci} co={blk.co} "
+                 f"x={blk.x} to Mosaic-legal ci={cib} co={cob} x={x}")
+        return ConvBlockShape(y=blk.y, x=x, co=cob, ci=cib,
+                              halo_y=(blk.y - 1) * sy + (hk - 1) * dy + 1,
+                              halo_x=(x - 1) * sx + (wk - 1) * dx + 1,
+                              b=blk.b)
+
+    if mosaic:
+        seed = snap_mosaic(seed)
+    while (residual or mosaic) and not fits(seed) and seed.co > 1:
+        shrunk = (balanced_tile(co, seed.co // 2) if not mosaic
+                  else max(LANE, (seed.co // 2 // LANE) * LANE)
+                  if seed.co > LANE else 0)
+        if not shrunk:
+            break
+        seed = dataclasses.replace(seed, co=shrunk)
+
+    cands = []
+    if fits(seed) and (not mosaic or mosaic_ok(seed)):
+        cands.append((traffic(seed), seed))
+    elif mosaic:
+        note("autotune.mosaic", "closed-form seed has no Mosaic-legal "
+             "shape under the budget; enumerated candidates only")
+    seen = set()
     for b, y, x, cib in conv_block_candidates(batch, ho, wo, ci):
         y, x = _snap_pool(y, ho, pool), _snap_pool(x, wo, pool)
+        if mosaic:
+            cib, x = snap_ch(cib, ci), snap_x(x)
         yp = (y - 1) * sy + (hk - 1) * dy + 1
         xp = (x - 1) * sx + (wk - 1) * dx + 1
         # largest co_b under the budget: psums 4*b*y*x*co_b plus
@@ -285,11 +400,35 @@ def autotune_conv_blocks(batch: int, ho: int, wo: int, ci: int, co: int,
         if cib >= ci:
             cobs.append(co)         # weight-pinned: one fetch, 1x buffer
         for cob in cobs:
-            cob = balanced_tile(co, cob)
+            if mosaic:
+                # floor to a LANE multiple (never exceed the analytic
+                # budget-max), keeping a full-co pin legal as-is
+                cob = co if cob >= co else ((cob // LANE) * LANE or cob)
+            else:
+                cob = balanced_tile(co, cob)
             blk = ConvBlockShape(y=y, x=x, co=cob, ci=cib,
                                  halo_y=yp, halo_x=xp, b=b)
-            if fits(blk):
-                cands.append((traffic(blk), blk))
+            if blk in seen:
+                continue
+            seen.add(blk)
+            if not fits(blk):
+                note("autotune.vmem",
+                     f"rejected b={b} y={y} x={x} ci={cib} co={cob}: "
+                     f"working set exceeds {vmem_budget} B")
+                continue
+            if mosaic and not mosaic_ok(blk):
+                note("autotune.mosaic",
+                     f"rejected b={b} y={y} x={x} ci={cib} co={cob}: "
+                     f"no Mosaic-legal snap under the budget")
+                continue
+            cands.append((traffic(blk), blk))
+    if not cands:
+        raise PlanLegalityError([Diagnostic(
+            rule="autotune.mosaic", severity="error",
+            message=f"no {target}-legal block shape fits the "
+                    f"{vmem_budget} B budget for "
+                    f"{ci}->{co} k{hk}x{wk} on {ho}x{wo}",
+            hint="raise the VMEM budget or relax the target")])
     return min(cands,
                key=lambda tb: (conv_plan_score(tb[0]),
                                tb[0].reads_w))[1]
@@ -303,7 +442,8 @@ def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
               blocks: ConvBlockShape | None = None,
               dtype_bytes: int = 4,
               vmem_budget: int | None = None,
-              autotune: bool = True) -> ConvPlan:
+              autotune: bool = True,
+              target: str = "interpret") -> ConvPlan:
     """Resolve blocks + padding for a (B, H, W, Ci) -> Co conv.
 
     LRU-cached on the full layer geometry: the same geometry inside a
@@ -312,7 +452,15 @@ def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
     streamed read is accounted in :meth:`ConvPlan.traffic`, its
     double-buffered operand tile in the autotuner's VMEM fit, and its
     resident tile in :meth:`ConvPlan.footprint_elems` (the S the
-    Eq. (15) comparisons are evaluated at)."""
+    Eq. (15) comparisons are evaluated at).
+
+    ``target`` names the :mod:`repro.analysis.plan_check` legality
+    profile the plan must satisfy.  Auto-chosen plans (``blocks=None``)
+    are verified before being returned — a failing plan raises
+    :class:`~repro.analysis.plan_check.PlanLegalityError` instead of
+    silently entering the LRU cache.  Explicit ``blocks`` overrides
+    are the caller's contract and bypass the gate (tests deliberately
+    probe odd shapes)."""
     sy, sx = _pair(stride)
     py, px = _pair(padding)
     dy, dx = _pair(dilation)
@@ -324,6 +472,7 @@ def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
         raise ValueError(f"fused pool={pool} needs pool-divisible "
                          f"output plane, got {ho}x{wo}")
     budget = VMEM_BYTES // 2 if vmem_budget is None else vmem_budget
+    auto = blocks is None
     if blocks is None:
         blocks = conv_lb_block_shape(ho, wo, ci, co, hk, wk,
                                      batch=batch, stride=(sy, sx),
@@ -335,7 +484,7 @@ def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
                 batch, ho, wo, ci, co, hk, wk, stride=(sy, sx),
                 dilation=(dy, dx), pool=pool, residual=residual,
                 dtype_bytes=dtype_bytes,
-                vmem_budget=budget, seed=blocks)
+                vmem_budget=budget, seed=blocks, target=target)
     ty = _snap_pool(min(blocks.y, ho), ho, pool)
     tx = _snap_pool(min(blocks.x, wo), wo, pool)
     cib, cob = min(blocks.ci, ci), min(blocks.co, co)
@@ -346,7 +495,7 @@ def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
     ho_pad, wo_pad = round_up(ho, ty), round_up(wo, tx)
     # max(): a strided conv can have unused trailing input rows/cols —
     # keep them (blocks never index past the last tile's halo)
-    return ConvPlan(blocks=blocks, ho=ho, wo=wo,
+    plan = ConvPlan(blocks=blocks, ho=ho, wo=wo,
                     ho_pad=ho_pad, wo_pad=wo_pad,
                     hp_pad=max(hp, (ho_pad - 1) * sy + ekh),
                     wp_pad=max(wp, (wo_pad - 1) * sx + ekw),
@@ -355,6 +504,15 @@ def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
                     hk=hk, wk=wk,
                     h=h, w=w, ci=ci, co=co, py=py, px=px,
                     residual=residual)
+    if auto:
+        from repro.analysis.plan_check import (PlanLegalityError,
+                                               check_conv_plan, errors)
+        diags = check_conv_plan(plan, batch=batch,
+                                dtype_bytes=dtype_bytes,
+                                vmem_budget=budget, target=target)
+        if errors(diags):
+            raise PlanLegalityError(diags)
+    return plan
 
 
 # --------------------------------------------------------------------------

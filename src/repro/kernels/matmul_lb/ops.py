@@ -28,15 +28,30 @@ def _pad_to(a: jax.Array, mults: tuple[int, int]) -> jax.Array:
 def matmul_lb(x: jax.Array, w: jax.Array,
               blk: BlockShape | None = None,
               interpret: bool = True) -> jax.Array:
-    """Communication-optimal matmul: (M, K) @ (K, N) -> (M, N)."""
+    """Communication-optimal matmul: (M, K) @ (K, N) -> (M, N).
+
+    The clamped block shape rides the same legality pass as the conv
+    planner (:func:`repro.analysis.plan_check.check_matmul_block`):
+    structural violations — a degenerate block or a working set over
+    the VMEM budget — raise at trace time rather than failing inside
+    Mosaic; alignment findings stay advisory here because callers pick
+    ``interpret`` explicitly."""
+    from repro.analysis.plan_check import (PlanLegalityError,
+                                           check_matmul_block, errors)
     m, k = x.shape
     n = w.shape[1]
     if blk is None:
         blk = lb_block_shape(m, n, k, dtype_bytes=x.dtype.itemsize)
     bm, bn, bk = (min(blk.bm, max(8, m)), min(blk.bn, max(8, n)),
                   min(blk.bk, max(8, k)))
+    blk = BlockShape(bm, bn, bk)
+    bad = errors(check_matmul_block(blk, m, n, k,
+                                    dtype_bytes=x.dtype.itemsize,
+                                    where=f"matmul_lb {m}x{k}@{k}x{n}"))
+    if bad:
+        raise PlanLegalityError(bad)
     xp = _pad_to(x, (bm, bk))
     wp = _pad_to(w, (bk, bn))
-    out = matmul_lb_call(xp, wp, blk=BlockShape(bm, bn, bk),
+    out = matmul_lb_call(xp, wp, blk=blk,
                          out_dtype=x.dtype, interpret=interpret)
     return out[:m, :n]

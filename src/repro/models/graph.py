@@ -246,7 +246,8 @@ def graph_logits(graph: ConvGraph, params, images, *,
 def graph_plan_handles(graph: ConvGraph, h: int, w: int, *, batch: int,
                        in_ch: int = 3, dtype_bytes: int = 4,
                        vmem_budget: int | None = None,
-                       training: bool = False, strict: bool = True):
+                       training: bool = False, strict: bool = True,
+                       verify: bool = False):
     """Exported accounting handles for the whole graph at an arrival
     batch: ``[(ConvLayer, ConvPlan)]`` per conv stage, from the same
     memoized ``plan_conv`` cache the kernel path's jit trace resolves
@@ -264,6 +265,13 @@ def graph_plan_handles(graph: ConvGraph, h: int, w: int, *, batch: int,
     ``vmem_budget=None`` yields the kernel's own execution plans; an
     explicit budget (e.g. the paper's 1 MiB GBuf) yields the
     accounting plans the ledger scores distance-to-bound with.
+
+    ``verify=True`` runs the exported handles through the static
+    verifier (:func:`repro.analysis.plan_check.audit_handles`) and
+    raises :class:`~repro.analysis.plan_check.PlanLegalityError` on
+    any structural finding or accountant drift — the gate
+    :class:`~repro.serve.server.ImageServer` applies before a plan
+    set enters its cache.
     """
     from repro.core.layer import ConvLayer
     from repro.kernels.conv_lb.ops import plan_conv, plan_conv_training
@@ -289,6 +297,18 @@ def graph_plan_handles(graph: ConvGraph, h: int, w: int, *, batch: int,
         else:
             entry = (layer, plan)
         handles.extend([entry] * node.groups)
+    if verify:
+        from repro.analysis.plan_check import (Diagnostic,
+                                               PlanLegalityError,
+                                               audit_handles)
+        audit = audit_handles(handles, batch=batch,
+                              dtype_bytes=dtype_bytes,
+                              vmem_budget=vmem_budget)
+        if not audit.ok:
+            diags = audit.errors() or [Diagnostic(
+                rule="audit.traffic", severity="error",
+                message=audit.report())]
+            raise PlanLegalityError(diags)
     return handles
 
 

@@ -157,14 +157,19 @@ class ImageServer:
         whose serving geometry is re-pointed (or a future
         multi-geometry server) can never silently reuse plans for the
         wrong image size; every distinct geometry pays exactly one
-        planning pass and keeps its handles warm."""
+        planning pass and keeps its handles warm.
+
+        ``verify=True`` on the insert path: every plan set is run
+        through the static verifier before it enters the cache, so an
+        unexecutable (or mis-accounted) plan is a raised
+        ``PlanLegalityError`` at warm-up, never a served charge."""
         key = (self.graph, int(bucket), self.h, self.w, self.in_ch,
                self.dtype.itemsize)
         if key not in self._handles:
             self._handles[key] = graph_plan_handles(
                 self.graph, self.h, self.w, batch=bucket,
                 in_ch=self.in_ch, dtype_bytes=self.dtype.itemsize,
-                vmem_budget=self.account_budget)
+                vmem_budget=self.account_budget, verify=True)
         else:
             self.stats["plan_hits"] += 1
         return self._handles[key]

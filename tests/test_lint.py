@@ -1,0 +1,106 @@
+"""Standing-policy lint gate (``repro.analysis.lint``): the repo must
+be clean, and each rule must actually fire on a violating snippet."""
+
+import subprocess
+import sys
+import textwrap
+
+from repro.analysis import lint
+
+
+def test_repo_is_lint_clean():
+    findings = lint.lint_repo()
+    assert not findings, "\n".join(str(f) for f in findings)
+
+
+def test_cli_exits_zero_on_clean_repo():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint"],
+        capture_output=True, text=True, cwd=str(lint.repo_root()))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "lint: clean" in proc.stdout
+
+
+def _lint_snippet(tmp_path, code, name="snippet.py"):
+    f = tmp_path / name
+    f.write_text(textwrap.dedent(code))
+    return lint.lint_file(f)
+
+
+def test_L001_flags_direct_jax_shard_map(tmp_path):
+    rules = {f.rule for f in _lint_snippet(tmp_path, """
+        from jax.experimental.shard_map import shard_map
+        from jax import check_vma
+        import jax
+
+        def f():
+            return jax.shard_map
+        """)}
+    assert rules == {"L001"}
+
+
+def test_L001_allows_the_compat_shim(tmp_path):
+    shim = tmp_path / "parallel"
+    shim.mkdir()
+    (shim / "compat.py").write_text(
+        "from jax.experimental.shard_map import shard_map\n")
+    assert not lint.lint_paths([shim])
+
+
+def test_L002_flags_direct_hypothesis_import(tmp_path):
+    rules = {f.rule for f in _lint_snippet(tmp_path, """
+        import hypothesis
+        from hypothesis import given
+        """)}
+    assert rules == {"L002"}
+    # the compat shim itself is exempt
+    assert not _lint_snippet(tmp_path, "import hypothesis\n",
+                             name="_hypothesis_compat.py")
+
+
+def test_L003_flags_interpret_true_default_outside_kernels(tmp_path):
+    findings = _lint_snippet(tmp_path, """
+        def run(x, interpret=True):
+            return x
+
+        def keyword_only(x, *, interpret=True):
+            return x
+
+        def threaded(x, interpret):
+            return x
+
+        def explicit_false(x, interpret=False):
+            return x
+        """)
+    assert [f.rule for f in findings] == ["L003", "L003"]
+
+
+def test_L004_flags_scalar_returns_from_shard_map_bodies(tmp_path):
+    findings = _lint_snippet(tmp_path, """
+        def body(x):
+            return jnp.sum(x)
+
+        out = shard_map(body, mesh=None)(1)
+        out2 = shard_map(lambda x: jnp.mean(x), mesh=None)(1)
+        # axis reductions keep the other dims: not flagged
+        out3 = shard_map(lambda x: jnp.sum(x, axis=0), mesh=None)(1)
+        # keepdims reductions stay >= 1-D: not flagged
+        out4 = shard_map(lambda x: jnp.sum(x, keepdims=True),
+                         mesh=None)(1)
+        """)
+    assert [f.rule for f in findings] == ["L004", "L004"]
+
+
+def test_L004_resolves_partial_wrapped_bodies(tmp_path):
+    findings = _lint_snippet(tmp_path, """
+        def body(x, flag):
+            return jnp.mean(x)
+
+        out = shard_map(partial(body, flag=True), mesh=None)(1)
+        """)
+    assert [f.rule for f in findings] == ["L004"]
+
+
+def test_syntax_errors_are_findings_not_crashes(tmp_path):
+    findings = _lint_snippet(tmp_path, "def broken(:\n")
+    assert findings and findings[0].rule == "parse"
