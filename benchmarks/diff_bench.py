@@ -19,7 +19,10 @@ Tracked metrics (by row-name suffix):
   * ``.../plan_audit_legal_frac`` (higher is better) and
     ``.../plan_audit_traffic_mismatches`` / ``.../lint_errors``
     (lower is better, 0 baseline: any nonzero value trips the gate)
-    — the static-analysis rows from ``plan_audit_bench``.
+    — the static-analysis rows from ``plan_audit_bench``;
+  * ``.../serve_shed_frac`` / ``.../serve_p99_x_budget`` (lower is
+    better) and ``.../serve_goodput_rps`` (higher is better) — the
+    fault-tolerant serving loop's bursty-trace health rows.
 
 Usage:  python benchmarks/diff_bench.py [BENCH_2.json BENCH_3.json ...]
 (no args: every BENCH_*.json next to the repo root, ordered by n).
@@ -51,6 +54,11 @@ TRACKED = {
     "plan_audit_legal_frac": False,
     "plan_audit_traffic_mismatches": True,
     "lint_errors": True,
+    # fault-tolerant serving loop (bursty trace, virtual clock):
+    # shedding and tail latency must not creep up, goodput not down
+    "serve_shed_frac": True,
+    "serve_p99_x_budget": True,
+    "serve_goodput_rps": False,
 }
 
 

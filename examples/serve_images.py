@@ -11,8 +11,15 @@ same server, same ledger: the conv-graph IR makes the serving path
 model-agnostic (stride-2 downsampling, 1x1 projection shortcuts and
 fused residual joins ride the identical plan/accounting machinery).
 
+``--deadline``/``--fault-plan`` route the stream through the
+fault-tolerant ``ServingLoop`` instead: per-request latency budgets
+shed hopeless work, failing dispatches retry with backoff, and a
+seeded fault schedule can be replayed deterministically.
+
   PYTHONPATH=src python examples/serve_images.py
   PYTHONPATH=src python examples/serve_images.py --model resnet
+  PYTHONPATH=src python examples/serve_images.py \\
+      --deadline 0.5 --fault-plan "fail@0,delay@2:0.05"
 """
 
 import argparse
@@ -21,7 +28,7 @@ import time
 import jax
 
 from repro.models.cnn import init_resnet, init_vgg, resnet_graph
-from repro.serve import ImageServer
+from repro.serve import FaultPlan, ImageServer, ServingLoop
 
 
 def main():
@@ -31,6 +38,12 @@ def main():
     ap.add_argument("--image", type=int, default=16)
     ap.add_argument("--width-mult", type=float, default=0.08)
     ap.add_argument("--account-only", action="store_true")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request latency budget (seconds); "
+                         "routes through the fault-tolerant loop")
+    ap.add_argument("--fault-plan", default=None,
+                    help="fault schedule, e.g. 'fail@0,delay@2:0.05' "
+                         "or 'random:7'")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -43,19 +56,30 @@ def main():
     server = ImageServer(params, args.image, args.image, graph=graph,
                          buckets=(1, 2, 4), wait_budget=0.01,
                          compute=not args.account_only)
+    loop = None
+    if args.deadline is not None or args.fault_plan is not None:
+        plan = FaultPlan.parse(args.fault_plan) if args.fault_plan \
+            else None
+        loop = ServingLoop(server, deadline_s=args.deadline,
+                           fault_plan=plan)
 
     t0 = time.time()
     results = []
     for rid in range(args.requests):
         k = jax.random.fold_in(key, rid)
         n = 1 + rid % 2                       # mixed 1- and 2-image requests
-        if args.account_only:
+        imgs = None if args.account_only else jax.random.normal(
+            k, (n, args.image, args.image, 3))
+        if loop is not None:
+            loop.submit(imgs, n_images=n if imgs is None else None)
+            results += loop.pump()
+        elif imgs is None:
             server.submit(n_images=n)
+            results += server.poll()
         else:
-            server.submit(jax.random.normal(
-                k, (n, args.image, args.image, 3)))
-        results += server.poll()
-    results += server.drain()
+            server.submit(imgs)
+            results += server.poll()
+    results += loop.run_sync() if loop is not None else server.drain()
     dt = time.time() - t0
 
     for r in results[:4]:
@@ -65,6 +89,8 @@ def main():
               f"({r.charge.vs_bound_x:.2f}x bound), logits {shape}")
     print(server.ledger.format_summary())
     print(f"{len(results)} requests in {dt:.2f}s; stats {server.stats}")
+    if loop is not None:
+        print(f"loop: {loop.stats}")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,16 @@ default to interpret mode by design (CPU validation), but anything
 above them must thread the flag explicitly, or a TPU run silently
 executes the slow interpreter.
 
+``L005`` No bare wall-clock / sleep call inside ``serve/`` or
+``runtime/`` modules: serving and runtime loops must take an
+injectable ``clock=``/``sleep=`` (references in *parameter defaults*
+like ``clock=time.monotonic`` are the sanctioned idiom), or the loop
+can never run under the virtual time the chaos suite and the
+deterministic benchmarks depend on.  Flags call sites of
+``time.monotonic()`` / ``time.sleep()`` / ``time.time()`` /
+``time.perf_counter()``; scoped to path fragments ``/serve/`` and
+``/runtime/`` only.
+
 ``L004`` No obviously 0-d value returned from a ``shard_map`` body:
 scalar residuals crossing a differentiated ``shard_map`` break jax
 0.4.x's transpose (``_SpecError`` under ``grad``) — bodies must keep
@@ -48,6 +58,7 @@ LINT_RULES = {
     "L002": "hypothesis imported outside tests/_hypothesis_compat",
     "L003": "interpret=True literal default outside src/repro/kernels/",
     "L004": "provably 0-d value returned from a shard_map body",
+    "L005": "bare wall-clock/sleep call in serve/runtime (inject clock=)",
 }
 
 #: path fragments (posix) that exempt a file from a rule
@@ -56,9 +67,19 @@ _ALLOW = {
     "L002": ("_hypothesis_compat.py",),
     "L003": ("/kernels/",),
     "L004": (),
+    "L005": (),
+}
+
+#: path fragments a rule is *scoped to* (empty: applies everywhere)
+_ONLY = {
+    "L005": ("/serve/", "/runtime/"),
 }
 
 _SCALAR_REDUCERS = {"sum", "mean", "max", "min", "prod"}
+
+#: wall-clock call chains L005 rejects outside parameter defaults
+_CLOCK_CALLS = {"time.monotonic", "time.sleep", "time.time",
+                "time.perf_counter"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +97,9 @@ class Finding:
 
 def _allowed(path: str, rule: str) -> bool:
     p = Path(path).as_posix()
+    only = _ONLY.get(rule, ())
+    if only and not any(frag in p for frag in only):
+        return True                      # rule is scoped elsewhere
     return any(frag in p for frag in _ALLOW[rule])
 
 
@@ -213,6 +237,11 @@ class _Linter(ast.NodeVisitor):
 
     def visit_Call(self, node: ast.Call) -> None:
         chain = _attr_chain(node.func)
+        if chain in _CLOCK_CALLS:
+            self._emit("L005", node.lineno,
+                       f"{chain}() called directly — take an "
+                       "injectable clock=/sleep= (defaults like "
+                       "clock=time.monotonic are fine)")
         if (chain == "shard_map" or chain.endswith(".shard_map")) \
                 and node.args:
             for line, expr in self._body_returns(node.args[0]):

@@ -17,6 +17,11 @@ bought vs per-image dispatch.
   # cross-model: a ResNet-20 stack through the same bucketed ledger
   PYTHONPATH=src python -m repro.launch.serve_images \
       --model resnet --account-only --width-mult 1.0 --image 32
+
+  # fault-tolerant loop: deadline shedding + seeded fault injection
+  PYTHONPATH=src python -m repro.launch.serve_images \
+      --account-only --width-mult 1.0 --image 224 --requests 32 \
+      --deadline 0.25 --fault-plan "fail@1,delay@3:0.05,service:0.02"
 """
 
 from __future__ import annotations
@@ -27,7 +32,7 @@ import time
 import jax
 
 from repro.models.cnn import init_resnet, init_vgg, resnet_graph
-from repro.serve import ImageServer
+from repro.serve import FaultPlan, ImageServer, ServingLoop, VirtualClock
 
 
 def main() -> None:
@@ -51,6 +56,18 @@ def main() -> None:
     ap.add_argument("--no-kernel", action="store_true",
                     help="run the lax fallback instead of the "
                          "Pallas kernel path")
+    ap.add_argument("--deadline", type=float, default=None,
+                    metavar="SECONDS",
+                    help="serve through the fault-tolerant ServingLoop "
+                         "with this per-request latency budget "
+                         "(deadline shedding + retry/backoff + "
+                         "circuit-breaker degradation)")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="inject a deterministic fault schedule, e.g. "
+                         "'fail@1,delay@3:0.05,service:0.02' or "
+                         "'random:7' (implies the ServingLoop; "
+                         "account-only runs use a virtual clock so "
+                         "delays cost no wall time)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -62,12 +79,27 @@ def main() -> None:
         graph = None
         params = init_vgg(key, n_classes=args.classes,
                           width_mult=args.width_mult)
+    fault_tolerant = (args.deadline is not None
+                      or args.fault_plan is not None)
+    # account-only fault-tolerant runs ride a virtual clock so
+    # injected delays and backoff waits are free; compute runs keep
+    # real time (the pipeline cost is the point)
+    clock = VirtualClock() if fault_tolerant and args.account_only \
+        else None
     server = ImageServer(params, args.image, args.image, graph=graph,
                          buckets=args.buckets,
                          wait_budget=args.wait_ms / 1e3,
                          account_budget=args.budget_kib * 1024,
                          use_kernel=not args.no_kernel,
-                         compute=not args.account_only)
+                         compute=not args.account_only,
+                         **({"clock": clock} if clock else {}))
+    loop = None
+    if fault_tolerant:
+        plan = FaultPlan.parse(args.fault_plan) if args.fault_plan \
+            else None
+        loop = ServingLoop(server,
+                           deadline_s=args.deadline,
+                           fault_plan=plan, seed=args.seed)
 
     max_req = max(1, min(4, max(args.buckets)))
     t0 = time.time()
@@ -75,18 +107,25 @@ def main() -> None:
     for rid in range(args.requests):
         k = jax.random.fold_in(key, 1000 + rid)
         n = 1 + int(jax.random.randint(k, (), 0, max_req))
-        if args.account_only:
+        imgs = None if args.account_only else jax.random.normal(
+            k, (n, args.image, args.image, 3))
+        if loop is not None:
+            loop.submit(imgs, n_images=n if imgs is None else None)
+            results += loop.pump()
+        elif imgs is None:
             server.submit(n_images=n)
+            results += server.poll()
         else:
-            server.submit(jax.random.normal(k, (n, args.image,
-                                                args.image, 3)))
-        results += server.poll()
-    results += server.drain()
+            server.submit(imgs)
+            results += server.poll()
+    results += loop.run_sync() if loop is not None else server.drain()
     dt = time.time() - t0
 
     s = server.ledger.summary()
     print(server.ledger.format_summary())
     print(f"stats: {server.stats}")
+    if loop is not None:
+        print(f"loop: {loop.stats}")
     print(f"served {s['requests']} requests / {s['images']} images in "
           f"{dt:.2f}s ({s['images'] / max(dt, 1e-9):.1f} img/s)")
 

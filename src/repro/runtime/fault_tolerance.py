@@ -48,7 +48,8 @@ def run_resilient(init_state: Any,
                   *,
                   failure_hook: Callable[[int], None] | None = None,
                   on_restart: Callable[[int], Callable] | None = None,
-                  metrics_cb: Callable[[int, dict], None] | None = None
+                  metrics_cb: Callable[[int, dict], None] | None = None,
+                  clock: Callable[[], float] = time.perf_counter
                   ) -> RunReport:
     state = init_state
     start = 0
@@ -71,10 +72,10 @@ def run_resilient(init_state: Any,
             try:
                 if failure_hook is not None:
                     failure_hook(step)
-                t0 = time.perf_counter()
+                t0 = clock()
                 batch = make_batch(step)
                 state, metrics = step_fn(state, batch)
-                dt = time.perf_counter() - t0
+                dt = clock() - t0
                 monitor.record(step, dt)
                 if metrics_cb:
                     metrics_cb(step, metrics)

@@ -1,11 +1,19 @@
 """Batched image-serving subsystem (bucketed admission + per-request
-HBM-traffic accounting over the paper-dataflow conv kernel)."""
+HBM-traffic accounting over the paper-dataflow conv kernel, wrapped in
+a fault-tolerant serving loop: deadline shedding, retry/backoff,
+circuit-breaker degradation, seeded fault injection)."""
 
 from repro.serve.bucketing import (DEFAULT_BUCKETS, AdmissionQueue,
                                    ImageRequest, bucket_for)
+from repro.serve.faults import (FaultEvent, FaultPlan, InjectedFault,
+                                VirtualClock)
 from repro.serve.ledger import RequestCharge, TrafficLedger
+from repro.serve.loop import (CircuitBreaker, RequestState, ServingLoop,
+                              TrackedRequest)
 from repro.serve.server import ImageServer, ServeResult
 
 __all__ = ["DEFAULT_BUCKETS", "AdmissionQueue", "ImageRequest",
            "bucket_for", "RequestCharge", "TrafficLedger",
-           "ImageServer", "ServeResult"]
+           "ImageServer", "ServeResult", "ServingLoop", "RequestState",
+           "TrackedRequest", "CircuitBreaker", "FaultPlan",
+           "FaultEvent", "InjectedFault", "VirtualClock"]

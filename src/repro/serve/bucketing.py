@@ -33,7 +33,11 @@ DEFAULT_BUCKETS = (1, 2, 4, 8)
 
 def bucket_for(n_images: int, buckets: Sequence[int] = DEFAULT_BUCKETS
                ) -> int:
-    """Smallest bucket covering ``n_images`` (the padding target)."""
+    """Smallest bucket covering ``n_images`` (the padding target).
+
+    One-shot API over an arbitrary (possibly unsorted) ladder; hot
+    paths go through :meth:`AdmissionQueue.bucket_for`, which reuses
+    the ladder sorted once at construction."""
     for b in sorted(buckets):
         if n_images <= b:
             return b
@@ -82,6 +86,29 @@ class AdmissionQueue:
     def depth(self) -> int:
         return len(self.pending)
 
+    @property
+    def pending_images(self) -> int:
+        return sum(r.n_images for r in self.pending)
+
+    def oldest_wait(self, now: float) -> float:
+        """Seconds the head-of-line request has waited (0.0 when
+        empty; clamped — a skewed clock must not report negative)."""
+        if not self.pending:
+            return 0.0
+        return max(0.0, now - self.pending[0].arrival)
+
+    def bucket_for(self, n_images: int) -> int:
+        """Smallest covering bucket, over the ladder sorted once in
+        ``__init__`` (the module-level :func:`bucket_for` re-sorts its
+        argument on every call — and silently mis-buckets custom
+        ladders passed unsorted if the sort is forgotten)."""
+        for b in self.buckets:
+            if n_images <= b:
+                return b
+        raise ValueError(f"{n_images} images exceed the largest "
+                         f"bucket {self.max_bucket}; split the "
+                         "request on submit")
+
     def submit(self, req: ImageRequest) -> None:
         if req.n_images < 1:
             raise ValueError("empty request")
@@ -104,7 +131,7 @@ class AdmissionQueue:
     def _pop(self, count: int, total: int
              ) -> tuple[list[ImageRequest], int]:
         group = [self.pending.popleft() for _ in range(count)]
-        return group, bucket_for(total, self.buckets)
+        return group, self.bucket_for(total)
 
     def pop_ready(self, now: float
                   ) -> tuple[list[ImageRequest], int] | None:

@@ -106,6 +106,13 @@ class TrafficLedger:
         self._geos: dict[tuple, _GeometryTally] = {}
         self._sum_bytes = self._sum_w = self._sum_bound = 0.0
         self._n_requests = self._n_images = 0
+        # terminal-state accounting (serving-loop health): shed and
+        # failed requests never produce a RequestCharge, but the
+        # serving-horizon economics are only honest if they sit in the
+        # same ledger as the served ones — goodput is served/submitted
+        self.shed_requests = self.shed_images = 0
+        self.failed_requests = self.failed_images = 0
+        self.degraded_dispatches = 0
 
     # -- charging ----------------------------------------------------------
 
@@ -177,6 +184,40 @@ class TrafficLedger:
             out.append(charge)
         return out
 
+    # -- terminal states (serving-loop health) -----------------------------
+
+    def record_shed(self, rid: int, n_images: int, *,
+                    waited_s: float | None = None,
+                    reason: str = "deadline") -> None:
+        """One request shed by the deadline policy — it reached a
+        terminal state without ever dispatching, so it carries no
+        traffic charge, only its slot in the served+shed+failed
+        reconciliation."""
+        del rid, waited_s, reason      # identity kept by the loop
+        self.shed_requests += 1
+        self.shed_images += int(n_images)
+
+    def record_failed(self, rid: int, n_images: int, *,
+                      waited_s: float | None = None,
+                      error: str | None = None) -> None:
+        """One request whose dispatch exhausted every retry."""
+        del rid, waited_s, error
+        self.failed_requests += 1
+        self.failed_images += int(n_images)
+
+    def record_degraded(self, mode: str) -> None:
+        """One dispatch served off the preferred path (``"lax"`` or
+        account-only ``"account"``) by the circuit breaker."""
+        del mode
+        self.degraded_dispatches += 1
+
+    @property
+    def submitted_requests(self) -> int:
+        """Every request that reached a terminal state: served (has a
+        charge) + shed + failed."""
+        return (self._n_requests + self.shed_requests
+                + self.failed_requests)
+
     # -- baselines & summary -----------------------------------------------
 
     def _baseline_w_words(self, tally: _GeometryTally) -> float:
@@ -206,9 +247,27 @@ class TrafficLedger:
     def total_images(self) -> int:
         return self._n_images
 
+    def _health(self) -> dict:
+        """Terminal-state reconciliation: every submitted request is
+        served, shed, or failed — goodput/shed fractions are over that
+        total, in the same currency as the traffic rows."""
+        submitted = self.submitted_requests
+        return {
+            "served_requests": self._n_requests,
+            "shed_requests": self.shed_requests,
+            "failed_requests": self.failed_requests,
+            "submitted_requests": submitted,
+            "shed_images": self.shed_images,
+            "failed_images": self.failed_images,
+            "goodput": self._n_requests / max(submitted, 1),
+            "shed_frac": self.shed_requests / max(submitted, 1),
+            "degraded_dispatches": self.degraded_dispatches,
+        }
+
     def summary(self) -> dict:
         if not self._n_requests:
-            return {"requests": 0, "images": 0, "dispatches": 0}
+            return {"requests": 0, "images": 0, "dispatches": 0,
+                    **self._health()}
         images = self._n_images
         total = self._sum_bytes
         weights = self._sum_w
@@ -261,13 +320,29 @@ class TrafficLedger:
             "vs_serving_x": total / max(horizon * db, 1e-30),
             "measured_latencies": len(lat),
             "p50_latency_s": lat[len(lat) // 2] if lat else float("nan"),
+            "p99_latency_s": (lat[min(len(lat) - 1,
+                                      max(0, math.ceil(0.99 * len(lat))
+                                          - 1))]
+                              if lat else float("nan")),
             "max_latency_s": lat[-1] if lat else float("nan"),
             "by_model": by_model,
+            **self._health(),
         }
+
+    def _health_line(self, s: dict) -> str:
+        line = (f"  health: goodput {s['goodput'] * 100:.1f}% "
+                f"({s['served_requests']} ok / {s['shed_requests']} "
+                f"shed / {s['failed_requests']} failed)")
+        if s["degraded_dispatches"]:
+            line += f", {s['degraded_dispatches']} degraded dispatches"
+        return line
 
     def format_summary(self) -> str:
         s = self.summary()
         if not s["requests"]:
+            if s["submitted_requests"]:
+                return ("ledger: no traffic charged\n"
+                        + self._health_line(s))
             return "ledger: no traffic charged"
         out = (f"ledger: {s['requests']} req / {s['images']} img in "
                f"{s['dispatches']} dispatches (+{s['padded_images']} pad)\n"
@@ -277,8 +352,10 @@ class TrafficLedger:
                f"  weight amortization  {s['w_amortization_x']:.2f}x "
                f"vs per-image dispatch\n"
                f"  vs serving horizon   {s['vs_serving_x']:.3f}x\n"
-               f"  latency p50/max      {s['p50_latency_s'] * 1e3:.1f}/"
-               f"{s['max_latency_s'] * 1e3:.1f} ms")
+               f"  latency p50/p99/max  {s['p50_latency_s'] * 1e3:.1f}/"
+               f"{s['p99_latency_s'] * 1e3:.1f}/"
+               f"{s['max_latency_s'] * 1e3:.1f} ms\n"
+               + self._health_line(s))
         for label, row in sorted(s["by_model"].items()):
             out += (f"\n  [{label}] {row['images']} img, "
                     f"{row['bytes_per_image'] / 1e6:.2f} MB/img, "

@@ -1,0 +1,537 @@
+"""Fault-tolerant serving loop over :class:`ImageServer`.
+
+The bucketed server (PR 3) is a caller-clocked library: every dispatch
+is assumed to succeed, and a request that never dispatches simply sits
+in the queue forever.  :class:`ServingLoop` wraps it in an explicit
+request lifecycle so the serving-horizon economics of Eq. (15) survive
+contact with real traffic — a shed or failed request is a terminal
+state in the same :class:`~repro.serve.ledger.TrafficLedger` as a
+served one, never a silent hang:
+
+::
+
+    submit ──▶ PENDING ──▶ DISPATCHED ──▶ DONE
+                 │              │ ▲
+                 │ projected    │ └─ retry (expo backoff + jitter,
+                 │ wait > budget│       <= max_retries attempts)
+                 ▼              ▼
+                SHED          FAILED
+
+Stages (each independently drivable, which is what makes the loop
+asyncio- *and* thread-compatible):
+
+  * **arrival** — :meth:`submit` applies deadline-aware admission
+    control: when the projected queue wait (backlog x an EMA of
+    measured dispatch service time) already exceeds the request's
+    latency budget, the request is SHED immediately — a fast negative
+    beats a guaranteed timeout;
+  * **dispatch** — ready groups (the server's bucketed FIFO policy)
+    are attempted; a failing attempt is retried with exponential
+    backoff + seeded jitter up to ``max_retries``, after which every
+    member is FAILED; requests whose deadline already lapsed while
+    queued are SHED at pop time instead of dispatched dead-on-arrival;
+  * **completion** — results land in the server's bounded window, the
+    ledger is charged, and the lifecycle record turns terminal.
+
+A :class:`CircuitBreaker` keeps the loop serving *something* under
+persistent faults: ``breaker_threshold`` consecutive dispatch failures
+degrade the execution path one level — kernel -> lax -> account-only
+(``compute=False``: planning + ledger, no logits) — and a success
+after ``breaker_cooldown_s`` at a degraded level steps back up.  Every
+degraded dispatch is counted in the ledger, so ``summary()`` reports
+goodput / shed fraction / p50-p99 latency next to the vs-bound ratios.
+
+Drivers:
+
+  * :meth:`pump` — one synchronous pass (deterministic under a
+    :class:`~repro.serve.faults.VirtualClock`; the chaos suite's
+    workhorse);
+  * :meth:`run_sync` — pump-tick-repeat until every submitted request
+    is terminal;
+  * :meth:`run_async` — asyncio driver: attempts execute on worker
+    threads, up to ``max_inflight`` concurrently, so bucket N+1 is
+    admitted and dispatched while bucket N computes (the plan/jit
+    caches make the admission side cheap);
+  * :meth:`drain` — mid-storm shutdown: flushes queue and retry
+    backlog to terminal states, honoring backoff spacing, dropping
+    nothing.
+
+Fault injection (:mod:`repro.serve.faults`) hooks the dispatch stage:
+a seeded :class:`~repro.serve.faults.FaultPlan` fails, delays, or
+clock-skews chosen attempts, which is how the drop-free invariant
+(every submitted rid reaches exactly one terminal state) is proved
+under every failure schedule.
+
+Timekeeping is injectable end to end (``clock=``/``sleep=``, L005):
+the loop inherits the server's clock by default, and a clock exposing
+``sleep`` (i.e. a VirtualClock) automatically absorbs backoff waits
+and injected delays without real time passing.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import enum
+import math
+import random
+import threading
+import time
+
+from repro.serve.bucketing import ImageRequest
+from repro.serve.server import ImageServer, ServeResult
+
+
+class RequestState(enum.Enum):
+    PENDING = "pending"
+    DISPATCHED = "dispatched"
+    DONE = "done"
+    SHED = "shed"
+    FAILED = "failed"
+
+
+TERMINAL_STATES = frozenset(
+    {RequestState.DONE, RequestState.SHED, RequestState.FAILED})
+
+#: circuit-breaker degradation ladder, best path first
+DEGRADE_MODES = ("kernel", "lax", "account")
+
+
+@dataclasses.dataclass
+class TrackedRequest:
+    """One request's lifecycle record (rid-keyed in ``loop.requests``)."""
+
+    rid: int
+    n_images: int
+    arrival: float
+    deadline_s: float | None
+    state: RequestState = RequestState.PENDING
+    attempts: int = 0                  # dispatch attempts it rode
+    result: ServeResult | None = None  # set iff DONE
+    error: str | None = None           # set iff FAILED
+    shed_reason: str | None = None     # set iff SHED
+    terminal_at: float | None = None
+
+    @property
+    def terminal(self) -> bool:
+        return self.state in TERMINAL_STATES
+
+
+class CircuitBreaker:
+    """Consecutive-failure breaker over the degradation ladder.
+
+    ``threshold`` consecutive failures step ``level`` down one mode
+    (kernel -> lax -> account-only); any success resets the failure
+    count, and a success after ``cooldown_s`` at a degraded level
+    steps back up one — a half-open recovery that re-probes the
+    better path one dispatch at a time instead of thundering back.
+    """
+
+    def __init__(self, threshold: int = 3, cooldown_s: float = 1.0):
+        self.threshold = max(1, int(threshold))
+        self.cooldown_s = float(cooldown_s)
+        self.level = 0
+        self.trips = 0
+        self._consecutive = 0
+        self._entered_at = -math.inf
+
+    @property
+    def mode(self) -> str:
+        return DEGRADE_MODES[self.level]
+
+    def record_failure(self, now: float) -> bool:
+        """True when this failure tripped a degradation."""
+        self._consecutive += 1
+        if (self._consecutive >= self.threshold
+                and self.level < len(DEGRADE_MODES) - 1):
+            self.level += 1
+            self.trips += 1
+            self._consecutive = 0
+            self._entered_at = now
+            return True
+        return False
+
+    def record_success(self, now: float) -> None:
+        self._consecutive = 0
+        if self.level > 0 and now - self._entered_at >= self.cooldown_s:
+            self.level -= 1
+            self._entered_at = now
+
+
+@dataclasses.dataclass
+class _Job:
+    """One dispatch group in flight or awaiting retry."""
+
+    group: list[ImageRequest]
+    bucket: int
+    attempts: int = 0
+    next_at: float = 0.0
+
+
+class ServingLoop:
+    """Deadline-shedding, retrying, degrading front-end around an
+    :class:`ImageServer`.
+
+    ``deadline_s`` is the default per-request latency budget (None:
+    never shed); ``service_estimate_s`` seeds the dispatch-time EMA
+    the shed policy projects queue waits from (before any dispatch has
+    been measured, a zero estimate admits everything).  ``clock``
+    defaults to the wrapped server's clock; ``sleep`` defaults to the
+    clock's own ``sleep`` when it has one (VirtualClock), else real
+    sleeping.  All submissions should flow through :meth:`submit` —
+    requests enqueued directly on the server are adopted with default
+    deadline on first contact, so they still terminate.
+    """
+
+    def __init__(self, server: ImageServer, *,
+                 deadline_s: float | None = 0.25,
+                 max_retries: int = 2,
+                 backoff_base_s: float = 0.05,
+                 backoff_mult: float = 2.0,
+                 jitter_frac: float = 0.1,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 1.0,
+                 max_inflight: int = 2,
+                 service_estimate_s: float = 0.0,
+                 service_alpha: float = 0.3,
+                 fault_plan=None,
+                 seed: int = 0,
+                 clock=None,
+                 sleep=None):
+        self.server = server
+        self.deadline_s = deadline_s
+        self.max_retries = int(max_retries)
+        self.backoff_base_s = float(backoff_base_s)
+        self.backoff_mult = float(backoff_mult)
+        self.jitter_frac = float(jitter_frac)
+        self.max_inflight = max(1, int(max_inflight))
+        self.breaker = CircuitBreaker(breaker_threshold,
+                                      breaker_cooldown_s)
+        self.fault_plan = fault_plan
+        self._rng = random.Random(seed)
+        self._clock = server._clock if clock is None else clock
+        self._sleep = getattr(self._clock, "sleep", time.sleep) \
+            if sleep is None else sleep
+        self._service_ema = float(service_estimate_s)
+        self._service_alpha = float(service_alpha)
+        self._lock = threading.RLock()
+        self.requests: dict[int, TrackedRequest] = {}
+        self._retry_jobs: list[_Job] = []
+        self._attempt_seq = 0          # FaultPlan's dispatch index
+        self._inflight = 0
+        self.counters = {"submitted": 0, "done": 0, "shed": 0,
+                         "failed": 0, "shed_admission": 0,
+                         "shed_expired": 0, "dispatch_failures": 0,
+                         "retries": 0, "peak_inflight": 0}
+
+    # -- observability -----------------------------------------------------
+
+    @property
+    def stats(self) -> dict:
+        with self._lock:
+            return {**self.counters,
+                    "inflight": self._inflight,
+                    "retry_backlog": len(self._retry_jobs),
+                    "queue_depth": self.server.queue.depth,
+                    "breaker_level": self.breaker.level,
+                    "breaker_mode": self.breaker.mode,
+                    "service_ema_s": self._service_ema}
+
+    def state_of(self, rid: int) -> RequestState | None:
+        t = self.requests.get(rid)
+        return None if t is None else t.state
+
+    def all_terminal(self) -> bool:
+        with self._lock:
+            return (all(t.terminal for t in self.requests.values())
+                    and not self._retry_jobs
+                    and not self.server.queue.depth
+                    and not self._inflight)
+
+    def projected_wait(self, now: float) -> float:
+        """Queue-wait estimate for a request admitted *now*: dispatch
+        groups ahead of it (queued + retrying + in flight) times the
+        measured service-time EMA."""
+        q = self.server.queue
+        queued_groups = math.ceil(q.pending_images / q.max_bucket)
+        backlog = queued_groups + len(self._retry_jobs) + self._inflight
+        return backlog * self._service_ema
+
+    # -- arrival stage -----------------------------------------------------
+
+    def submit(self, images=None, *, n_images: int | None = None,
+               deadline_s: float | None = None,
+               now: float | None = None) -> int:
+        """Admit (or immediately shed) one request; returns its rid.
+
+        ``deadline_s`` overrides the loop default for this request."""
+        with self._lock:
+            now = self._clock() if now is None else now
+            deadline = self.deadline_s if deadline_s is None \
+                else deadline_s
+            n = 1 if n_images is None else int(n_images)
+            if images is not None:
+                shaped = getattr(images, "shape", None)
+                if shaped is not None and len(shaped) == 4:
+                    n = int(shaped[0])
+            self.counters["submitted"] += 1
+            projected = self.projected_wait(now)
+            if deadline is not None and projected > deadline:
+                rid = self.server.reserve_rid()
+                self.counters["shed_admission"] += 1
+                self._terminal_shed(
+                    TrackedRequest(rid=rid, n_images=n, arrival=now,
+                                   deadline_s=deadline),
+                    now, reason=f"projected wait {projected:.3f}s > "
+                                f"budget {deadline:.3f}s")
+                return rid
+            rid = self.server.submit(images, n_images=n_images, now=now)
+            self.requests[rid] = TrackedRequest(
+                rid=rid, n_images=self._queued_n_images(rid, n),
+                arrival=now, deadline_s=deadline)
+            return rid
+
+    def _queued_n_images(self, rid: int, fallback: int) -> int:
+        for r in self.server.queue.pending:
+            if r.rid == rid:
+                return r.n_images
+        return fallback
+
+    def _adopt(self, req: ImageRequest) -> TrackedRequest:
+        """Lifecycle record for a rid (lazily created for requests
+        submitted directly on the server, so they too terminate)."""
+        t = self.requests.get(req.rid)
+        if t is None:
+            t = TrackedRequest(rid=req.rid, n_images=req.n_images,
+                               arrival=req.arrival,
+                               deadline_s=self.deadline_s)
+            self.requests[req.rid] = t
+        return t
+
+    # -- terminal transitions ----------------------------------------------
+
+    def _terminal_shed(self, t: TrackedRequest, now: float, *,
+                       reason: str) -> None:
+        t.state = RequestState.SHED
+        t.shed_reason = reason
+        t.terminal_at = now
+        self.requests[t.rid] = t
+        self.counters["shed"] += 1
+        self.server.ledger.record_shed(
+            t.rid, t.n_images, waited_s=max(0.0, now - t.arrival),
+            reason=reason)
+
+    def _terminal_failed(self, t: TrackedRequest, now: float,
+                         error: str) -> None:
+        t.state = RequestState.FAILED
+        t.error = error
+        t.terminal_at = now
+        self.counters["failed"] += 1
+        self.server.ledger.record_failed(
+            t.rid, t.n_images, waited_s=max(0.0, now - t.arrival),
+            error=error)
+
+    def _shed_expired(self, group: list[ImageRequest], now: float
+                      ) -> tuple[list[ImageRequest], int]:
+        """Drop group members whose deadline already lapsed while
+        queued (dispatching them would return a guaranteed timeout);
+        survivors re-bucket to the smallest covering size."""
+        survivors = []
+        for r in group:
+            t = self._adopt(r)
+            waited = now - r.arrival
+            if t.deadline_s is not None and waited > t.deadline_s:
+                self.counters["shed_expired"] += 1
+                self._terminal_shed(
+                    t, now, reason=f"queued {waited:.3f}s > budget "
+                                   f"{t.deadline_s:.3f}s")
+            else:
+                survivors.append(r)
+        if not survivors:
+            return [], 0
+        total = sum(r.n_images for r in survivors)
+        return survivors, self.server.queue.bucket_for(total)
+
+    # -- dispatch stage ----------------------------------------------------
+
+    def _next_job(self, now: float) -> _Job | None:
+        """Under lock: the next attemptable job — a due retry first
+        (FIFO by its backoff due-time), else a ready queue group with
+        expired members shed."""
+        due = [j for j in self._retry_jobs if j.next_at <= now]
+        if due:
+            job = min(due, key=lambda j: j.next_at)
+            self._retry_jobs.remove(job)
+            return job
+        while (ready := self.server.queue.pop_ready(now)) is not None:
+            group, bucket = self._shed_expired(ready[0], now)
+            if group:
+                return _Job(group=group, bucket=bucket)
+        return None
+
+    def _observe_service(self, dt: float) -> None:
+        dt = max(0.0, dt)
+        if self._service_ema <= 0.0:
+            self._service_ema = dt
+        else:
+            a = self._service_alpha
+            self._service_ema = (1 - a) * self._service_ema + a * dt
+
+    def _attempt(self, job: _Job, now: float
+                 ) -> tuple[str, list[ServeResult]]:
+        """One dispatch attempt: returns ("done"|"retry"|"failed",
+        completed results).  Bookkeeping runs under the loop lock; the
+        fault delay and the pipeline execution run off-lock so
+        concurrent drivers overlap them."""
+        with self._lock:
+            attempt_idx = self._attempt_seq
+            self._attempt_seq += 1
+            mode = self.breaker.mode
+            tracked = [self._adopt(r) for r in job.group]
+            for t in tracked:
+                t.state = RequestState.DISPATCHED
+                t.attempts += 1
+            self._inflight += 1
+            self.counters["peak_inflight"] = max(
+                self.counters["peak_inflight"], self._inflight)
+            t0 = self._clock()
+        try:
+            if self.fault_plan is not None:
+                delay = self.fault_plan.before_dispatch(
+                    attempt_idx, job.bucket, clock=self._clock)
+                if delay > 0:
+                    self._sleep(delay)
+            logits = self.server._execute(
+                job.group, job.bucket,
+                use_kernel=mode == "kernel",
+                compute=mode != "account")
+        except Exception as e:  # noqa: BLE001 — any dispatch fault
+            with self._lock:
+                self._inflight -= 1
+                done_at = self._clock()
+                self._observe_service(done_at - t0)
+                self.breaker.record_failure(done_at)
+                self.counters["dispatch_failures"] += 1
+                job.attempts += 1
+                if job.attempts > self.max_retries:
+                    for t in tracked:
+                        self._terminal_failed(t, done_at, error=repr(e))
+                    return "failed", []
+                backoff = (self.backoff_base_s
+                           * self.backoff_mult ** (job.attempts - 1))
+                backoff *= 1.0 + self.jitter_frac * self._rng.uniform(
+                    -1.0, 1.0)
+                job.next_at = done_at + max(backoff, 0.0)
+                self._retry_jobs.append(job)
+                self.counters["retries"] += 1
+                return "retry", []
+        with self._lock:
+            self._inflight -= 1
+            done_at = self._clock()
+            results = self.server._complete(job.group, job.bucket,
+                                            logits, now=now)
+            self._observe_service(done_at - t0)
+            self.breaker.record_success(done_at)
+            if mode != "kernel":
+                self.server.ledger.record_degraded(mode)
+            for t, res in zip(tracked, results):
+                t.state = RequestState.DONE
+                t.result = res
+                t.terminal_at = done_at
+                self.counters["done"] += 1
+            return "done", results
+
+    # -- drivers -----------------------------------------------------------
+
+    def pump(self, now: float | None = None) -> list[ServeResult]:
+        """One synchronous pass: attempt every due retry and every
+        ready group.  Deterministic under a VirtualClock — the chaos
+        suite drives exclusively through here."""
+        out: list[ServeResult] = []
+        now = self._clock() if now is None else now
+        while True:
+            with self._lock:
+                job = self._next_job(now)
+            if job is None:
+                return out
+            _, results = self._attempt(job, now)
+            out.extend(results)
+
+    def run_sync(self, *, tick_s: float = 0.005,
+                 max_ticks: int = 100_000) -> list[ServeResult]:
+        """Pump, advance the clock one tick, repeat — until every
+        submitted request is terminal.  Under a VirtualClock the ticks
+        are free; under a real clock this is a blocking mini-server."""
+        out = self.pump()
+        ticks = 0
+        while not self.all_terminal():
+            self._sleep(tick_s)
+            out.extend(self.pump())
+            ticks += 1
+            if ticks > max_ticks:
+                raise RuntimeError(
+                    f"run_sync: non-terminal work after {ticks} ticks "
+                    f"(stats {self.stats})")
+        return out
+
+    def drain(self, now: float | None = None) -> list[ServeResult]:
+        """Mid-storm shutdown: flush the admission queue and the retry
+        backlog all the way to terminal states.  Every remaining rid
+        ends DONE, SHED (deadline lapsed while queued), or FAILED
+        (retries exhausted) — nothing is dropped.  Backoff spacing is
+        honored through ``sleep``, so a VirtualClock drains instantly."""
+        out: list[ServeResult] = []
+        with self._lock:
+            now = self._clock() if now is None else now
+            for group, _bucket in self.server.queue.drain():
+                g, b = self._shed_expired(group, now)
+                if g:
+                    self._retry_jobs.append(
+                        _Job(group=g, bucket=b, next_at=now))
+            while self._retry_jobs:
+                job = min(self._retry_jobs, key=lambda j: j.next_at)
+                self._retry_jobs.remove(job)
+                wait = job.next_at - self._clock()
+                if wait > 0:
+                    self._sleep(wait)
+                _, results = self._attempt(job, self._clock())
+                out.extend(results)
+        return out
+
+    async def run_async(self, *, tick_s: float = 0.001,
+                        until_idle: bool = True
+                        ) -> list[ServeResult]:
+        """Asyncio driver with in-flight overlap: each attempt runs in
+        a worker thread, at most ``max_inflight`` concurrently, while
+        the event loop keeps admitting and forming the next buckets.
+        Returns once idle (``until_idle``) — all submitted work
+        terminal and no task in flight."""
+        sem = asyncio.Semaphore(self.max_inflight)
+        tasks: set[asyncio.Task] = set()
+        out: list[ServeResult] = []
+
+        async def attempt_task(job: _Job, started_at: float) -> None:
+            try:
+                _, results = await asyncio.get_running_loop() \
+                    .run_in_executor(None, self._attempt, job,
+                                     started_at)
+                out.extend(results)
+            finally:
+                sem.release()
+
+        while True:
+            with self._lock:
+                now = self._clock()
+                job = self._next_job(now)
+            if job is None:
+                if until_idle and not tasks and self.all_terminal():
+                    break
+                await asyncio.sleep(tick_s)
+                continue
+            await sem.acquire()
+            task = asyncio.create_task(attempt_task(job, now))
+            tasks.add(task)
+            task.add_done_callback(tasks.discard)
+        if tasks:
+            await asyncio.gather(*tasks)
+        return out

@@ -112,9 +112,21 @@ class ImageServer:
         # long-serving process must not pin every logits array alive
         self.keep_results = int(keep_results)
         self.results: dict[int, ServeResult] = {}
-        self.stats = {"dispatches": 0, "traces": 0, "pipeline_hits": 0,
-                      "plan_hits": 0}
+        self._counters = {"dispatches": 0, "traces": 0,
+                          "pipeline_hits": 0, "plan_hits": 0,
+                          "results_evicted": 0}
         self._next_rid = 0
+
+    @property
+    def stats(self) -> dict:
+        """Counters plus live health gauges: ``queue_depth`` /
+        ``oldest_wait_s`` expose how far behind admission is *right
+        now* (the serving loop's shed policy projects from these),
+        ``results_evicted`` counts results aged out of the bounded
+        lookup window."""
+        return {**self._counters,
+                "queue_depth": self.queue.depth,
+                "oldest_wait_s": self.queue.oldest_wait(self._clock())}
 
     # -- request intake ----------------------------------------------------
 
@@ -140,10 +152,18 @@ class ImageServer:
             n = int(images.shape[0])
             if n_images is not None and n_images != n:
                 raise ValueError("n_images disagrees with payload")
-        rid = self._next_rid
-        self._next_rid += 1
+        rid = self.reserve_rid()
         self.queue.submit(ImageRequest(rid=rid, n_images=n, arrival=now,
                                        images=images))
+        return rid
+
+    def reserve_rid(self) -> int:
+        """Allocate the next request id without enqueueing anything —
+        the serving loop uses this for requests it sheds at admission
+        (they get a terminal state and a ledger row, never a queue
+        slot), keeping one rid space across admitted and shed work."""
+        rid = self._next_rid
+        self._next_rid += 1
         return rid
 
     # -- bucket caches -----------------------------------------------------
@@ -171,24 +191,32 @@ class ImageServer:
                 in_ch=self.in_ch, dtype_bytes=self.dtype.itemsize,
                 vmem_budget=self.account_budget, verify=True)
         else:
-            self.stats["plan_hits"] += 1
+            self._counters["plan_hits"] += 1
         return self._handles[key]
 
-    def pipeline(self, bucket: int):
-        """The compiled (bucket, H, W, C) -> logits pipeline."""
-        if bucket in self._pipelines:
-            self.stats["pipeline_hits"] += 1
-            return self._pipelines[bucket]
+    def pipeline(self, bucket: int, use_kernel: bool | None = None):
+        """The compiled (bucket, H, W, C) -> logits pipeline.
+
+        ``use_kernel`` overrides (never upgrades) the server default —
+        the circuit breaker's kernel -> lax degradation dispatches
+        through a separately cached lax pipeline instead of retracing
+        the kernel one."""
+        uk = self.use_kernel if use_kernel is None \
+            else (self.use_kernel and bool(use_kernel))
+        key = (bucket, uk)
+        if key in self._pipelines:
+            self._counters["pipeline_hits"] += 1
+            return self._pipelines[key]
 
         def fwd(params, imgs):
-            self.stats["traces"] += 1        # bumped at trace time only
+            self._counters["traces"] += 1    # bumped at trace time only
             if self._forward is not None:
-                return self._forward(params, imgs, self.use_kernel)
+                return self._forward(params, imgs, uk)
             return graph_logits(self.graph, params, imgs,
-                                use_kernel=self.use_kernel)
+                                use_kernel=uk)
 
-        self._pipelines[bucket] = jax.jit(fwd)
-        return self._pipelines[bucket]
+        self._pipelines[key] = jax.jit(fwd)
+        return self._pipelines[key]
 
     def warm(self, buckets: Sequence[int] | None = None) -> None:
         """Pre-plan (and pre-trace, when computing) the bucket ladder
@@ -203,19 +231,34 @@ class ImageServer:
 
     # -- dispatch ----------------------------------------------------------
 
-    def _dispatch(self, group: list[ImageRequest], bucket: int,
+    def _execute(self, group: list[ImageRequest], bucket: int, *,
+                 use_kernel: bool | None = None,
+                 compute: bool | None = None):
+        """Run the compute half of a dispatch (no shared-state
+        bookkeeping beyond cache counters): the serving loop calls
+        this off-lock so bucket N+1 admission overlaps bucket N's
+        pipeline.  ``use_kernel``/``compute`` override *downwards*
+        only — a lax-only or account-only server never upgrades."""
+        do_compute = self.compute if compute is None \
+            else (self.compute and bool(compute))
+        if not do_compute:
+            return None
+        payload = jnp.concatenate([r.images for r in group], axis=0)
+        pad = bucket - payload.shape[0]
+        if pad:
+            payload = jnp.pad(payload,
+                              ((0, pad), (0, 0), (0, 0), (0, 0)))
+        return jax.block_until_ready(
+            self.pipeline(bucket, use_kernel)(self.params, payload))
+
+    def _complete(self, group: list[ImageRequest], bucket: int, logits,
                   now: float) -> list[ServeResult]:
-        logits = None
-        if self.compute:
-            payload = jnp.concatenate([r.images for r in group], axis=0)
-            pad = bucket - payload.shape[0]
-            if pad:
-                payload = jnp.pad(payload,
-                                  ((0, pad), (0, 0), (0, 0), (0, 0)))
-            logits = jax.block_until_ready(
-                self.pipeline(bucket)(self.params, payload))
-        # virtual clocks (tests) may stand still; never go backwards
-        done = max(self._clock(), now)
+        """Bookkeeping half of a dispatch: stamp completion, charge
+        the ledger, publish results into the bounded window."""
+        # virtual clocks (tests) may stand still or even be skewed
+        # backwards mid-flight; a completion never predates the
+        # dispatch call or any member's arrival (latencies stay >= 0)
+        done = max(self._clock(), now, *(r.arrival for r in group))
         for r in group:
             r.done = done
         handles = self.plan_handles(bucket)
@@ -224,7 +267,7 @@ class ImageServer:
             entries, handles, bucket=bucket,
             latencies={r.rid: r.latency for r in group},
             model=self.graph.name)
-        self.stats["dispatches"] += 1
+        self._counters["dispatches"] += 1
         results = []
         off = 0
         for r, charge in zip(group, charges):
@@ -234,9 +277,23 @@ class ImageServer:
                               latency_s=r.latency)
             self.results[r.rid] = res
             results.append(res)
-        while len(self.results) > self.keep_results:
-            self.results.pop(next(iter(self.results)))
+        # evict oldest-first, but never a result this dispatch just
+        # returned: with keep_results smaller than the group, naive
+        # tail-trimming would drop results the caller is being handed
+        current = {r.rid for r in group}
+        for rid in list(self.results):
+            if len(self.results) <= self.keep_results:
+                break
+            if rid in current:
+                continue
+            del self.results[rid]
+            self._counters["results_evicted"] += 1
         return results
+
+    def _dispatch(self, group: list[ImageRequest], bucket: int,
+                  now: float) -> list[ServeResult]:
+        logits = self._execute(group, bucket)
+        return self._complete(group, bucket, logits, now)
 
     def poll(self, now: float | None = None) -> list[ServeResult]:
         """Dispatch every ready group (full buckets immediately,

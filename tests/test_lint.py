@@ -101,6 +101,45 @@ def test_L004_resolves_partial_wrapped_bodies(tmp_path):
     assert [f.rule for f in findings] == ["L004"]
 
 
+_CLOCKY = """
+    import time
+
+    def pump():
+        t0 = time.monotonic()
+        time.sleep(0.01)
+        return time.perf_counter() - t0
+    """
+
+
+def test_L005_flags_bare_clock_calls_in_serve_and_runtime(tmp_path):
+    import textwrap as tw
+    for scope in ("serve", "runtime"):
+        d = tmp_path / scope
+        d.mkdir()
+        (d / "loopy.py").write_text(tw.dedent(_CLOCKY))
+        rules = [f.rule for f in lint.lint_file(d / "loopy.py")]
+        assert rules == ["L005", "L005", "L005"], scope
+
+
+def test_L005_allows_clock_parameter_defaults(tmp_path):
+    d = tmp_path / "serve"
+    d.mkdir()
+    (d / "injected.py").write_text(textwrap.dedent("""
+        import time
+
+        def run(clock=time.monotonic, *, sleep=time.sleep):
+            sleep(0.0)
+            return clock()
+        """))
+    assert not lint.lint_file(d / "injected.py")
+
+
+def test_L005_is_scoped_to_serve_and_runtime_paths(tmp_path):
+    # the same violating code outside serve/ / runtime/ is fine —
+    # benchmarks and tests time things with wall clocks on purpose
+    assert not _lint_snippet(tmp_path, _CLOCKY)
+
+
 def test_syntax_errors_are_findings_not_crashes(tmp_path):
     findings = _lint_snippet(tmp_path, "def broken(:\n")
     assert findings and findings[0].rule == "parse"

@@ -115,9 +115,12 @@ def test_result_and_charge_retention_is_bounded():
     srv = ImageServer(params, 8, 8, compute=False, clock=lambda: t[0],
                       wait_budget=0.0, keep_results=2)
     srv.ledger.charges = type(srv.ledger.charges)(maxlen=2)
-    rids = [srv.submit(n_images=1, now=0.0) for _ in range(5)]
-    srv.poll(now=0.0)
+    rids = []
+    for _ in range(5):                   # one dispatch per request —
+        rids.append(srv.submit(n_images=1, now=0.0))
+        srv.poll(now=0.0)                # in-group results never evict
     assert set(srv.results) == set(rids[-2:])   # oldest evicted
+    assert srv.stats["results_evicted"] == 3
     assert len(srv.ledger.charges) == 2
     s = srv.ledger.summary()
     assert s["requests"] == 5 and s["images"] == 5  # aggregates intact
@@ -127,6 +130,63 @@ def test_oversized_request_rejected():
     q = AdmissionQueue(buckets=(1, 2, 4), wait_budget=0.0)
     with pytest.raises(ValueError):
         q.submit(ImageRequest(rid=0, n_images=5, arrival=0.0))
+
+
+def test_queue_bucket_for_handles_unsorted_ladders():
+    """Regression: the queue's bucket_for walks the ladder sorted once
+    at construction — an unsorted custom ladder must not mis-bucket
+    (the module-level one-shot re-sorts per call)."""
+    q = AdmissionQueue(buckets=(8, 2, 4, 1), wait_budget=0.0)
+    assert q.buckets == (1, 2, 4, 8)
+    assert [q.bucket_for(n) for n in (1, 2, 3, 5, 8)] == [1, 2, 4, 8, 8]
+    with pytest.raises(ValueError):
+        q.bucket_for(9)
+    assert bucket_for(3, (8, 2, 4, 1)) == 4  # one-shot API agrees
+
+
+def test_stats_exposes_live_queue_gauges():
+    """`stats` carries live health gauges, not just counters: queue
+    depth and head-of-line wait move with the queue (and the wait is
+    clamped >= 0 under a rewound clock)."""
+    params = init_vgg(jax.random.PRNGKey(0), n_classes=4,
+                      width_mult=0.05)
+    t = [1.0]
+    srv = ImageServer(params, 8, 8, compute=False, clock=lambda: t[0],
+                      wait_budget=10.0)
+    assert srv.stats["queue_depth"] == 0
+    assert srv.stats["oldest_wait_s"] == 0.0
+    srv.submit(n_images=1, now=1.0)
+    srv.submit(n_images=2, now=1.0)
+    t[0] = 1.5
+    assert srv.stats["queue_depth"] == 2
+    assert srv.stats["oldest_wait_s"] == pytest.approx(0.5)
+    t[0] = 0.25                              # clock skewed backwards
+    assert srv.stats["oldest_wait_s"] == 0.0
+    t[0] = 20.0
+    srv.poll(now=t[0])
+    assert srv.stats["queue_depth"] == 0
+    assert srv.stats["oldest_wait_s"] == 0.0
+
+
+def test_tiny_results_window_never_evicts_current_dispatch():
+    """Regression: with keep_results smaller than a dispatch group,
+    eviction must skip the results that dispatch just produced — naive
+    oldest-first trimming would hand the caller rids whose results are
+    already gone."""
+    params = init_vgg(jax.random.PRNGKey(0), n_classes=4,
+                      width_mult=0.05)
+    t = [0.0]
+    srv = ImageServer(params, 8, 8, compute=False, clock=lambda: t[0],
+                      wait_budget=0.0, keep_results=1, buckets=(4,))
+    rids = [srv.submit(n_images=1, now=0.0) for _ in range(4)]
+    results = srv.poll(now=0.0)              # one group of 4 requests
+    assert [r.rid for r in results] == rids
+    assert set(srv.results) == set(rids)     # all 4 survive eviction
+    assert srv.stats["results_evicted"] == 0
+    late = srv.submit(n_images=4, now=0.0)
+    srv.poll(now=0.0)                        # next dispatch may evict
+    assert set(srv.results) == {late}
+    assert srv.stats["results_evicted"] == 4
 
 
 # --------------------------------------------------------------------------
