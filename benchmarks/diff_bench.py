@@ -22,7 +22,10 @@ Tracked metrics (by row-name suffix):
     — the static-analysis rows from ``plan_audit_bench``;
   * ``.../serve_shed_frac`` / ``.../serve_p99_x_budget`` (lower is
     better) and ``.../serve_goodput_rps`` (higher is better) — the
-    fault-tolerant serving loop's bursty-trace health rows.
+    fault-tolerant serving loop's bursty-trace health rows;
+  * ``.../obs_overhead_frac`` (lower is better) — the tracing layer's
+    analytic cost over the account-only serve smoke
+    (``obs_bench.py``): observability must stay ~free.
 
 Usage:  python benchmarks/diff_bench.py [BENCH_2.json BENCH_3.json ...]
 (no args: every BENCH_*.json next to the repo root, ordered by n).
@@ -59,6 +62,9 @@ TRACKED = {
     "serve_shed_frac": True,
     "serve_p99_x_budget": True,
     "serve_goodput_rps": False,
+    # observability tax: analytic cost of full tracing over the
+    # account-only serve smoke; must stay a rounding error
+    "obs_overhead_frac": True,
 }
 
 

@@ -5,23 +5,19 @@
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 
 from repro.core.tpu_adapter import (BlockShape, arithmetic_intensity,
                                     hbm_traffic_model, lb_block_shape)
+from repro.obs import timed_call
 
 
 def _time_call(fn, *args, reps=3):
-    fn(*args).block_until_ready()            # warmup/compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        # sync every rep: timing only the last rep's completion would
-        # measure async dispatch for all earlier reps
-        fn(*args).block_until_ready()
-    return (time.perf_counter() - t0) / reps * 1e6
+    # sync every rep: timing only the last rep's completion would
+    # measure async dispatch for all earlier reps
+    return timed_call(lambda: fn(*args).block_until_ready(),
+                      reps=reps, name="bench.kernel")
 
 
 def bench_matmul_traffic():
@@ -33,13 +29,13 @@ def bench_matmul_traffic():
         lb = lb_block_shape(m, n, k)
         t_n = hbm_traffic_model(m, n, k, naive)
         t_l = hbm_traffic_model(m, n, k, lb)
-        rows.append((f"kernels/matmul_{m}x{n}x{k}/naive_GB", 0.0,
+        rows.append((f"kernels/matmul_{m}x{n}x{k}/naive_GB", None,
                      round(t_n / 1e9, 2)))
-        rows.append((f"kernels/matmul_{m}x{n}x{k}/lb_GB", 0.0,
+        rows.append((f"kernels/matmul_{m}x{n}x{k}/lb_GB", None,
                      round(t_l / 1e9, 2)))
-        rows.append((f"kernels/matmul_{m}x{n}x{k}/reduction_x", 0.0,
+        rows.append((f"kernels/matmul_{m}x{n}x{k}/reduction_x", None,
                      round(t_n / t_l, 2)))
-        rows.append((f"kernels/matmul_{m}x{n}x{k}/arith_intensity", 0.0,
+        rows.append((f"kernels/matmul_{m}x{n}x{k}/arith_intensity", None,
                      round(arithmetic_intensity(m, n, k, lb), 1)))
     return rows
 
@@ -64,11 +60,11 @@ def bench_conv_traffic():
             total_meas += t.total
             total_lb += q_dram_practical(layer, s)
         rows.append((f"kernels/conv_vgg16_S{budget_kib}K/measured_Mwords",
-                     0.0, round(total_meas / 1e6, 1)))
+                     None, round(total_meas / 1e6, 1)))
         rows.append((f"kernels/conv_vgg16_S{budget_kib}K/eq15_Mwords",
-                     0.0, round(total_lb / 1e6, 1)))
+                     None, round(total_lb / 1e6, 1)))
         rows.append((f"kernels/conv_vgg16_S{budget_kib}K/vs_bound_x",
-                     0.0, round(total_meas / total_lb, 3)))
+                     None, round(total_meas / total_lb, 3)))
     return rows
 
 
@@ -110,13 +106,13 @@ def bench_conv_batch_fold():
             layer.hk, layer.wk, stride=layer.stride, padding=layer.pad,
             vmem_budget=budget, autotune=False)
         closed += tc.total
-    rows.append(("kernels/conv_vgg16_B8/folded_w_Mwords", 0.0,
+    rows.append(("kernels/conv_vgg16_B8/folded_w_Mwords", None,
                  round(folded_w / 1e6, 1)))
-    rows.append(("kernels/conv_vgg16_B8/per_image_w_Mwords", 0.0,
+    rows.append(("kernels/conv_vgg16_B8/per_image_w_Mwords", None,
                  round(per_image_w / 1e6, 1)))
-    rows.append(("kernels/conv_vgg16_B8/w_reduction_x", 0.0,
+    rows.append(("kernels/conv_vgg16_B8/w_reduction_x", None,
                  round(per_image_w / folded_w, 2)))
-    rows.append(("kernels/conv_vgg16_B8/autotune_vs_closed_x", 0.0,
+    rows.append(("kernels/conv_vgg16_B8/autotune_vs_closed_x", None,
                  round(closed / tuned, 3)))
     return rows
 

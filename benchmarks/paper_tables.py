@@ -40,7 +40,7 @@ def fig13_dataflow_comparison():
     for kb in (33.25, 66.5, 133, 173.5, 266):
         s = int(kb * 1024 // 2)
         lb = sum(q_dram_practical(l, s) for l in layers) * MB
-        rows.append((f"fig13/lower_bound/{kb}KB", 0.0, round(lb, 1)))
+        rows.append((f"fig13/lower_bound/{kb}KB", None, round(lb, 1)))
         for df in dataflow_zoo():
             q, us = _timed(lambda df=df: network_traffic(layers, s, df))
             rows.append((f"fig13/{df.name}/{kb}KB", us,
@@ -61,7 +61,7 @@ def fig14_per_layer():
     for layer in layers:
         lb = q_dram_practical(layer, s) * MB
         (t, q), us = _timed(lambda l=layer: ours.search(l, s))
-        rows.append((f"fig14/{layer.name}/lower_bound", 0.0,
+        rows.append((f"fig14/{layer.name}/lower_bound", None,
                      round(lb, 1)))
         rows.append((f"fig14/{layer.name}/ours", us,
                      round(q.total * MB, 1)))
@@ -76,14 +76,14 @@ def fig15_table3_eyeriss():
     lb = sum(q_dram_practical(l, EYERISS_S) for l in layers)
     macs = sum(l.macs for l in layers)
     rows = [
-        ("table3/lower_bound_MB", 0.0, round(lb * MB, 1)),
+        ("table3/lower_bound_MB", None, round(lb * MB, 1)),
         ("table3/ours_MB", us, round(ours.total * MB, 1)),
-        ("table3/eyeriss_compressed_MB", 0.0, EYERISS_DRAM_COMPR_MB),
-        ("table3/eyeriss_uncompressed_MB", 0.0, EYERISS_DRAM_UNCOMPR_MB),
-        ("table3/ours_dram_per_mac", 0.0,
+        ("table3/eyeriss_compressed_MB", None, EYERISS_DRAM_COMPR_MB),
+        ("table3/eyeriss_uncompressed_MB", None, EYERISS_DRAM_UNCOMPR_MB),
+        ("table3/ours_dram_per_mac", None,
          round(ours.total / macs, 4)),
-        ("table3/flexflow_dram_per_mac", 0.0, FLEXFLOW_DRAM_PER_MAC),
-        ("table3/reduction_vs_uncompressed_pct", 0.0,
+        ("table3/flexflow_dram_per_mac", None, FLEXFLOW_DRAM_PER_MAC),
+        ("table3/reduction_vs_uncompressed_pct", None,
          round((1 - ours.total * MB / EYERISS_DRAM_UNCOMPR_MB) * 100, 1)),
     ]
     return rows
@@ -111,15 +111,15 @@ def table4_gbuf_ratios():
     us = (time.perf_counter() - t0) * 1e6
     return [
         ("table4/dram_read_in_MB", us, round(tot["dr_in"] * MB, 1)),
-        ("table4/dram_read_w_MB", 0.0, round(tot["dr_w"] * MB, 1)),
-        ("table4/dram_write_out_MB", 0.0, round(tot["dr_out"] * MB, 1)),
-        ("table4/gbuf_read_in_ratio", 0.0,
+        ("table4/dram_read_w_MB", None, round(tot["dr_w"] * MB, 1)),
+        ("table4/dram_write_out_MB", None, round(tot["dr_out"] * MB, 1)),
+        ("table4/gbuf_read_in_ratio", None,
          round(tot["gr_in"] / tot["dr_in"], 2)),
-        ("table4/gbuf_write_in_ratio", 0.0,
+        ("table4/gbuf_write_in_ratio", None,
          round(tot["gw_in"] / tot["dr_in"], 2)),
-        ("table4/gbuf_read_w_ratio", 0.0,
+        ("table4/gbuf_read_w_ratio", None,
          round(tot["gr_w"] / tot["dr_w"], 2)),
-        ("table4/gbuf_write_w_ratio", 0.0,
+        ("table4/gbuf_write_w_ratio", None,
          round(tot["gw_w"] / tot["dr_w"], 2)),
     ]
 
@@ -132,7 +132,7 @@ def fig16_gbuf_vs_eyeriss():
         r, us = _timed(lambda impl=impl: simulate_network(layers, impl))
         rows.append((f"fig16/{impl.name}_gbuf_MB", us,
                      round(r.gbuf_mb, 1)))
-        rows.append((f"fig16/{impl.name}_reduction_x", 0.0,
+        rows.append((f"fig16/{impl.name}_reduction_x", None,
                      round(EYERISS_GBUF_MB / r.gbuf_mb, 1)))
     return rows
 
@@ -141,12 +141,12 @@ def fig17_reg_access():
     """Fig. 17: Reg access vs the #MACs lower bound."""
     layers = vgg16_conv_layers(3)
     lb = sum(reg_lower_bound_writes(l) for l in layers)
-    rows = [("fig17/lower_bound_Gaccess", 0.0, round(lb / 1e9, 2))]
+    rows = [("fig17/lower_bound_Gaccess", None, round(lb / 1e9, 2))]
     for impl in IMPLEMENTATIONS:
         r, us = _timed(lambda impl=impl: simulate_network(layers, impl))
         rows.append((f"fig17/{impl.name}_Gaccess", us,
                      round(r.reg_accesses / 1e9, 2)))
-        rows.append((f"fig17/{impl.name}_over_bound_pct", 0.0,
+        rows.append((f"fig17/{impl.name}_over_bound_pct", None,
                      round((r.reg_accesses / lb - 1) * 100, 1)))
     return rows
 
@@ -164,9 +164,9 @@ def fig18_energy():
             reg_pj=lreg_pj[impl.lreg_bytes]) for l in layers)
         rows.append((f"fig18/{impl.name}_pj_per_mac", us,
                      round(r.pj_per_mac, 2)))
-        rows.append((f"fig18/{impl.name}_lb_pj_per_mac", 0.0,
+        rows.append((f"fig18/{impl.name}_lb_pj_per_mac", None,
                      round(lb / macs, 2)))
-        rows.append((f"fig18/{impl.name}_gap_pct", 0.0,
+        rows.append((f"fig18/{impl.name}_gap_pct", None,
                      round((r.pj_per_mac / (lb / macs) - 1) * 100, 1)))
     return rows
 
@@ -179,7 +179,7 @@ def fig19_perf():
         r, us = _timed(lambda impl=impl: simulate_network(layers, impl))
         rows.append((f"fig19/{impl.name}_time_ms", us,
                      round(r.total_time_s * 1e3, 1)))
-        rows.append((f"fig19/{impl.name}_gops", 0.0, round(r.gops, 1)))
+        rows.append((f"fig19/{impl.name}_gops", None, round(r.gops, 1)))
     return rows
 
 
@@ -200,7 +200,7 @@ def fig20_utilization():
         us = (time.perf_counter() - t0) * 1e6
         rows.append((f"fig20/{impl.name}_pe_util", us,
                      round(sum(pe_u) / len(pe_u), 3)))
-        rows.append((f"fig20/{impl.name}_lreg_util", 0.0,
+        rows.append((f"fig20/{impl.name}_lreg_util", None,
                      round(sum(lreg_u) / len(lreg_u), 3)))
     return rows
 

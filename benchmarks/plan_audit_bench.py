@@ -42,9 +42,9 @@ def bench_plan_audit():
     us = (time.perf_counter() - t0) * 1e6 / max(1, n_plans)
     rows.append(("audit/vgg+resnet/plan_audit_legal_frac", us,
                  round(n_legal / max(1, n_plans), 4)))
-    rows.append(("audit/vgg+resnet/plan_audit_traffic_mismatches", 0.0,
+    rows.append(("audit/vgg+resnet/plan_audit_traffic_mismatches", None,
                  mismatches))
-    rows.append(("audit/vgg+resnet/plans_checked", 0.0, n_plans))
+    rows.append(("audit/vgg+resnet/plans_checked", None, n_plans))
 
     # mosaic profile at the execution budget: how much of the stack is
     # already compiled-mode legal (informational row, ungated)
@@ -55,7 +55,7 @@ def bench_plan_audit():
                         target=TARGET_MOSAIC)
         m_legal += a.n_legal
         m_plans += a.n_plans
-    rows.append(("audit/vgg+resnet/mosaic_exec_legal_frac", 0.0,
+    rows.append(("audit/vgg+resnet/mosaic_exec_legal_frac", None,
                  round(m_legal / max(1, m_plans), 4)))
     return rows
 

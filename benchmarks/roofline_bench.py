@@ -26,18 +26,18 @@ def load_records(results_dir: str = RESULTS_DIR) -> list[dict]:
 def bench_roofline():
     recs = load_records()
     if not recs:
-        return [("roofline/NO_DRYRUN_RECORDS_RUN_dryrun_first", 0.0, 0)]
+        return [("roofline/NO_DRYRUN_RECORDS_RUN_dryrun_first", None, 0)]
     rows = []
     for r in recs:
         cell = f"{r['arch']}/{r['shape']}/{r['mesh']}"
-        rows.append((f"roofline/{cell}/t_compute_ms", 0.0,
+        rows.append((f"roofline/{cell}/t_compute_ms", None,
                      round(r["t_compute_ms"], 2)))
-        rows.append((f"roofline/{cell}/t_memory_ms", 0.0,
+        rows.append((f"roofline/{cell}/t_memory_ms", None,
                      round(r["t_memory_ms"], 2)))
-        rows.append((f"roofline/{cell}/t_collective_ms", 0.0,
+        rows.append((f"roofline/{cell}/t_collective_ms", None,
                      round(r["t_collective_ms"], 2)))
         rows.append((f"roofline/{cell}/bottleneck={r['bottleneck']}",
-                     0.0, round(r["roofline_fraction"], 3)))
+                     None, round(r["roofline_fraction"], 3)))
     return rows
 
 

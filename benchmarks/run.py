@@ -18,13 +18,15 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks.kernel_bench import ALL_KERNELS
+    from benchmarks.obs_bench import ALL_OBS
     from benchmarks.paper_tables import ALL_TABLES
     from benchmarks.plan_audit_bench import ALL_AUDIT
     from benchmarks.roofline_bench import ALL_ROOFLINE
     from benchmarks.serve_bench import ALL_SERVE
     from benchmarks.train_traffic_bench import ALL_TRAIN
 
-    benches = ALL_TABLES + ALL_KERNELS + ALL_SERVE + ALL_TRAIN + ALL_AUDIT
+    benches = (ALL_TABLES + ALL_KERNELS + ALL_SERVE + ALL_TRAIN
+               + ALL_AUDIT + ALL_OBS)
     if not args.skip_roofline:
         benches = benches + ALL_ROOFLINE
 
@@ -35,8 +37,15 @@ def main() -> None:
             continue
         try:
             for name, us, derived in fn():
-                print(f"{name},{us:.1f},{derived}")
-                rows.append({"name": name, "us_per_call": round(us, 1),
+                # us is None for analytic/derived-only rows: no wall
+                # clock was involved, and pretending 0.0 us would be a
+                # placeholder masquerading as a measurement
+                print(f"{name},"
+                      f"{'null' if us is None else format(us, '.1f')},"
+                      f"{derived}")
+                rows.append({"name": name,
+                             "us_per_call":
+                                 None if us is None else round(us, 1),
                              "derived": derived})
         except Exception as e:  # noqa: BLE001
             print(f"{fn.__name__}/ERROR,0.0,{e!r}", file=sys.stderr)

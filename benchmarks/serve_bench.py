@@ -28,15 +28,15 @@ def bench_serve_traffic():
     server.drain(now=t[0])
     s = server.ledger.summary()
     rows = [
-        ("serve/vgg16_mixed16/vs_bound_x", 0.0,
+        ("serve/vgg16_mixed16/vs_bound_x", None,
          round(s["vs_bound_x"], 3)),
-        ("serve/vgg16_mixed16/w_amortization_x", 0.0,
+        ("serve/vgg16_mixed16/w_amortization_x", None,
          round(s["w_amortization_x"], 2)),
-        ("serve/vgg16_mixed16/vs_serving_x", 0.0,
+        ("serve/vgg16_mixed16/vs_serving_x", None,
          round(s["vs_serving_x"], 3)),
-        ("serve/vgg16_mixed16/MB_per_image", 0.0,
+        ("serve/vgg16_mixed16/MB_per_image", None,
          round(s["bytes_per_image"] / 1e6, 1)),
-        ("serve/vgg16_mixed16/dispatches", 0.0, s["dispatches"]),
+        ("serve/vgg16_mixed16/dispatches", None, s["dispatches"]),
     ]
 
     # tail scenario: a lone odd-size request flushed on deadline — the
@@ -48,9 +48,9 @@ def bench_serve_traffic():
     t2[0] = 0.1                              # past the wait budget
     tail.poll(now=t2[0])
     st = tail.ledger.summary()
-    rows.append(("serve/vgg16_partial3of4/vs_bound_x", 0.0,
+    rows.append(("serve/vgg16_partial3of4/vs_bound_x", None,
                  round(st["vs_bound_x"], 3)))
-    rows.append(("serve/vgg16_partial3of4/padded_images", 0.0,
+    rows.append(("serve/vgg16_partial3of4/padded_images", None,
                  st["padded_images"]))
     return rows
 
@@ -78,15 +78,15 @@ def bench_resnet_serve_traffic():
     s = server.ledger.summary()
     model = s["by_model"][graph.name]
     return [
-        ("serve/resnet20_mixed16/resnet_vs_bound_x", 0.0,
+        ("serve/resnet20_mixed16/resnet_vs_bound_x", None,
          round(model["vs_bound_x"], 3)),
-        ("serve/resnet20_mixed16/w_amortization_x", 0.0,
+        ("serve/resnet20_mixed16/w_amortization_x", None,
          round(s["w_amortization_x"], 2)),
-        ("serve/resnet20_mixed16/vs_serving_x", 0.0,
+        ("serve/resnet20_mixed16/vs_serving_x", None,
          round(s["vs_serving_x"], 3)),
-        ("serve/resnet20_mixed16/MB_per_image", 0.0,
+        ("serve/resnet20_mixed16/MB_per_image", None,
          round(s["bytes_per_image"] / 1e6, 2)),
-        ("serve/resnet20_mixed16/dispatches", 0.0, s["dispatches"]),
+        ("serve/resnet20_mixed16/dispatches", None, s["dispatches"]),
     ]
 
 
@@ -130,15 +130,15 @@ def bench_serve_loop_bursty():
     s = server.ledger.summary()
     assert loop.all_terminal()
     return [
-        ("serve_loop/vgg16_bursty/serve_shed_frac", 0.0,
+        ("serve_loop/vgg16_bursty/serve_shed_frac", None,
          round(s["shed_frac"], 3)),
-        ("serve_loop/vgg16_bursty/serve_goodput_rps", 0.0,
+        ("serve_loop/vgg16_bursty/serve_goodput_rps", None,
          round(s["served_requests"] / horizon, 1)),
-        ("serve_loop/vgg16_bursty/serve_p99_x_budget", 0.0,
+        ("serve_loop/vgg16_bursty/serve_p99_x_budget", None,
          round(s["p99_latency_s"] / 0.30, 3)),
-        ("serve_loop/vgg16_bursty/vs_bound_x", 0.0,
+        ("serve_loop/vgg16_bursty/vs_bound_x", None,
          round(s["vs_bound_x"], 3)),
-        ("serve_loop/vgg16_bursty/dispatches", 0.0, s["dispatches"]),
+        ("serve_loop/vgg16_bursty/dispatches", None, s["dispatches"]),
     ]
 
 

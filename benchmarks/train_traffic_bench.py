@@ -32,16 +32,16 @@ def bench_train_traffic():
     rows = [
         ("train/vgg16_b8/train_vs_bound_x", plan_us,
          round(rep["train_vs_bound_x"], 3)),
-        ("train/vgg16_b8/GB_per_step", 0.0,
+        ("train/vgg16_b8/GB_per_step", None,
          round(rep["bytes_per_step"] / 1e9, 2)),
-        ("train/vgg16_b8/bwd_share", 0.0, round(rep["bwd_share"], 3)),
-        ("train/vgg16_b8/dgrad_kernel_layers", 0.0,
+        ("train/vgg16_b8/bwd_share", None, round(rep["bwd_share"], 3)),
+        ("train/vgg16_b8/dgrad_kernel_layers", None,
          rep["dgrad_kernel_layers"]),
     ]
     # inference-vs-training byte blowup at the same batch: what the
     # accountant was blind to before the backward was planned
     fwd_only = rep["bytes_per_step"] * (1.0 - rep["bwd_share"])
-    rows.append(("train/vgg16_b8/step_vs_fwd_bytes_x", 0.0,
+    rows.append(("train/vgg16_b8/step_vs_fwd_bytes_x", None,
                  round(rep["bytes_per_step"] / fwd_only, 2)))
     return rows
 
@@ -62,10 +62,10 @@ def bench_resnet_train_traffic():
     return [
         ("train/resnet20_b8/resnet_train_vs_bound_x", plan_us,
          round(rep["train_vs_bound_x"], 3)),
-        ("train/resnet20_b8/MB_per_step", 0.0,
+        ("train/resnet20_b8/MB_per_step", None,
          round(rep["bytes_per_step"] / 1e6, 1)),
-        ("train/resnet20_b8/bwd_share", 0.0, round(rep["bwd_share"], 3)),
-        ("train/resnet20_b8/dgrad_kernel_layers", 0.0,
+        ("train/resnet20_b8/bwd_share", None, round(rep["bwd_share"], 3)),
+        ("train/resnet20_b8/dgrad_kernel_layers", None,
          rep["dgrad_kernel_layers"]),
     ]
 

@@ -44,6 +44,9 @@ def main():
     ap.add_argument("--fault-plan", default=None,
                     help="fault schedule, e.g. 'fail@0,delay@2:0.05' "
                          "or 'random:7'")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Perfetto/Chrome trace JSON (+ JSONL "
+                         "event log at PATH.jsonl) for the run")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -53,9 +56,13 @@ def main():
     else:
         graph = None
         params = init_vgg(key, n_classes=10, width_mult=args.width_mult)
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer()
     server = ImageServer(params, args.image, args.image, graph=graph,
                          buckets=(1, 2, 4), wait_budget=0.01,
-                         compute=not args.account_only)
+                         compute=not args.account_only, tracer=tracer)
     loop = None
     if args.deadline is not None or args.fault_plan is not None:
         plan = FaultPlan.parse(args.fault_plan) if args.fault_plan \
@@ -91,6 +98,11 @@ def main():
     print(f"{len(results)} requests in {dt:.2f}s; stats {server.stats}")
     if loop is not None:
         print(f"loop: {loop.stats}")
+    if tracer is not None:
+        from repro.obs import write_trace
+        out = write_trace(args.trace, tracer, server.metrics)
+        print(f"trace: {out} ({len(tracer.records)} records; open in "
+              f"ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

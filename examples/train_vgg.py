@@ -14,6 +14,7 @@ step economics (milliseconds — the plans are analytic).
 """
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -43,7 +44,16 @@ def main():
     ap.add_argument("--paper-scale", action="store_true",
                     help="also report the account-only VGG16/224x224 "
                          "training-step economics")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Perfetto/Chrome trace JSON (+ JSONL "
+                         "event log at PATH.jsonl): planning spans, "
+                         "per-step spans, the training report span")
     args = ap.parse_args()
+
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer()
 
     key = jax.random.PRNGKey(0)
     params = init_vgg(key, n_classes=4, width_mult=args.width_mult)
@@ -53,34 +63,54 @@ def main():
     imgs = imgs + labels[:, None, None, None] * 0.5  # learnable shift
     batch = {"images": imgs, "labels": labels}
 
-    # the per-step traffic is plan-derived, hence step-invariant: one
-    # report covers every step of the run
-    rep = vgg_training_step_report(params, args.image, args.image,
-                                   batch=args.batch,
-                                   vmem_budget=args.budget_kib * 1024)
-    print(report_lines(rep, "per-step traffic"))
+    # scope the ambient tracer over the run so planning spans (inside
+    # the memoized plan_conv) and the training-report span all land in
+    # one trace; without --trace this is a no-op context
+    ctx = tracer.activate() if tracer is not None \
+        else contextlib.nullcontext()
+    with ctx:
+        # the per-step traffic is plan-derived, hence step-invariant:
+        # one report covers every step of the run
+        rep = vgg_training_step_report(params, args.image, args.image,
+                                       batch=args.batch,
+                                       vmem_budget=args.budget_kib
+                                       * 1024)
+        print(report_lines(rep, "per-step traffic"))
 
-    @jax.jit
-    def step(p):
-        loss, g = jax.value_and_grad(
-            lambda q: vgg_loss(q, batch, use_kernel=True))(p)
-        return loss, jax.tree_util.tree_map(
-            lambda a, b: a - args.lr * b, p, g)
+        @jax.jit
+        def step(p):
+            loss, g = jax.value_and_grad(
+                lambda q: vgg_loss(q, batch, use_kernel=True))(p)
+            return loss, jax.tree_util.tree_map(
+                lambda a, b: a - args.lr * b, p, g)
 
-    t0 = time.time()
-    for i in range(args.steps):
-        loss, params = step(params)
-        print(f"step {i}: loss {float(loss):.4f}  "
-              f"[{rep['bytes_per_step'] / 1e6:.2f} MB accounted, "
-              f"{rep['train_vs_bound_x']:.3f}x bound]")
-    print(f"{args.steps} steps in {time.time() - t0:.2f}s "
-          f"(interpret-mode kernel fwd + planned dgrad)")
+        t0 = time.time()
+        for i in range(args.steps):
+            if tracer is not None:
+                with tracer.span("train.step", step=i,
+                                 traffic_bytes=rep["bytes_per_step"]):
+                    loss, params = step(params)
+                    jax.block_until_ready(loss)
+            else:
+                loss, params = step(params)
+            print(f"step {i}: loss {float(loss):.4f}  "
+                  f"[{rep['bytes_per_step'] / 1e6:.2f} MB accounted, "
+                  f"{rep['train_vs_bound_x']:.3f}x bound]")
+        print(f"{args.steps} steps in {time.time() - t0:.2f}s "
+              f"(interpret-mode kernel fwd + planned dgrad)")
 
-    if args.paper_scale:
-        big = init_vgg(key, n_classes=10, width_mult=1.0)
-        rep224 = vgg_training_step_report(big, 224, 224, batch=8,
-                                          vmem_budget=1 << 20)
-        print(report_lines(rep224, "VGG16/224 @ 1 MiB (account-only)"))
+        if args.paper_scale:
+            big = init_vgg(key, n_classes=10, width_mult=1.0)
+            rep224 = vgg_training_step_report(big, 224, 224, batch=8,
+                                              vmem_budget=1 << 20)
+            print(report_lines(rep224,
+                               "VGG16/224 @ 1 MiB (account-only)"))
+
+    if tracer is not None:
+        from repro.obs import write_trace
+        out = write_trace(args.trace, tracer)
+        print(f"trace: {out} ({len(tracer.records)} records; open in "
+              f"ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

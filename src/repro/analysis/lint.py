@@ -32,6 +32,16 @@ deterministic benchmarks depend on.  Flags call sites of
 ``time.perf_counter()``; scoped to path fragments ``/serve/`` and
 ``/runtime/`` only.
 
+``L006`` Observability must stay deterministic and injectable: (a) no
+bare wall-clock / sleep call inside ``obs/`` modules — the tracer's
+``clock=`` is the *only* time source, so a trace replayed under a
+``VirtualClock`` exports bit-identically (parameter defaults like
+``clock=time.perf_counter`` remain the sanctioned idiom); (b) no
+``set_active(...)`` ambient-tracer mutation outside ``obs/`` —
+instrumented code takes ``tracer=`` or scopes the swap with
+``with tracer.activate():``, so no module can leave a global tracer
+installed behind a test's back.
+
 ``L004`` No obviously 0-d value returned from a ``shard_map`` body:
 scalar residuals crossing a differentiated ``shard_map`` break jax
 0.4.x's transpose (``_SpecError`` under ``grad``) — bodies must keep
@@ -59,6 +69,7 @@ LINT_RULES = {
     "L003": "interpret=True literal default outside src/repro/kernels/",
     "L004": "provably 0-d value returned from a shard_map body",
     "L005": "bare wall-clock/sleep call in serve/runtime (inject clock=)",
+    "L006": "bare clock in obs/, or set_active tracer mutation outside obs/",
 }
 
 #: path fragments (posix) that exempt a file from a rule
@@ -68,7 +79,12 @@ _ALLOW = {
     "L003": ("/kernels/",),
     "L004": (),
     "L005": (),
+    "L006": (),
 }
+
+#: path fragments marking the observability package (L006's pivot:
+#: clock calls are banned *inside*, set_active calls *outside*)
+_OBS_FRAGMENTS = ("/obs/",)
 
 #: path fragments a rule is *scoped to* (empty: applies everywhere)
 _ONLY = {
@@ -237,11 +253,25 @@ class _Linter(ast.NodeVisitor):
 
     def visit_Call(self, node: ast.Call) -> None:
         chain = _attr_chain(node.func)
+        in_obs = any(frag in Path(self.path).as_posix()
+                     for frag in _OBS_FRAGMENTS)
         if chain in _CLOCK_CALLS:
             self._emit("L005", node.lineno,
                        f"{chain}() called directly — take an "
                        "injectable clock=/sleep= (defaults like "
                        "clock=time.monotonic are fine)")
+            if in_obs:
+                self._emit("L006", node.lineno,
+                           f"{chain}() called inside obs/ — the "
+                           "tracer's injectable clock= is the only "
+                           "time source (defaults like "
+                           "clock=time.perf_counter are fine)")
+        if (chain == "set_active" or chain.endswith(".set_active")) \
+                and not in_obs:
+            self._emit("L006", node.lineno,
+                       "set_active() mutates the ambient tracer "
+                       "outside obs/ — pass tracer= or scope it "
+                       "with `with tracer.activate():`")
         if (chain == "shard_map" or chain.endswith(".shard_map")) \
                 and node.args:
             for line, expr in self._body_returns(node.args[0]):

@@ -69,6 +69,7 @@ from repro.core.layer import ceil_div
 from repro.core.tpu_adapter import (VMEM_BYTES, ConvBlockShape,
                                     balanced_tile, conv_block_candidates,
                                     conv_lb_block_shape, round_up)
+from repro.obs.tracer import active_tracer
 
 
 def _pair(v) -> tuple[int, int]:
@@ -429,9 +430,17 @@ def autotune_conv_blocks(batch: int, ho: int, wo: int, ci: int, co: int,
                     f"{vmem_budget} B budget for "
                     f"{ci}->{co} k{hk}x{wk} on {ho}x{wo}",
             hint="raise the VMEM budget or relax the target")])
-    return min(cands,
+    best = min(cands,
                key=lambda tb: (conv_plan_score(tb[0]),
                                tb[0].reads_w))[1]
+    # nests under the plan.search span when a tracer is ambient
+    active_tracer().event(
+        "plan.autotune", candidates=len(cands),
+        enumerated=len(seen), target=target,
+        layer=f"{ci}->{co}k{hk}x{wk}",
+        best=f"b={best.b},y={best.y},x={best.x},"
+             f"ci={best.ci},co={best.co}")
+    return best
 
 
 @lru_cache(maxsize=1024)
@@ -474,17 +483,25 @@ def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
     budget = VMEM_BYTES // 2 if vmem_budget is None else vmem_budget
     auto = blocks is None
     if blocks is None:
-        blocks = conv_lb_block_shape(ho, wo, ci, co, hk, wk,
-                                     batch=batch, stride=(sy, sx),
-                                     dilation=(dy, dx),
-                                     dtype_bytes=dtype_bytes,
-                                     vmem_budget=budget)
-        if autotune:
-            blocks = autotune_conv_blocks(
-                batch, ho, wo, ci, co, hk, wk, stride=(sy, sx),
-                dilation=(dy, dx), pool=pool, residual=residual,
-                dtype_bytes=dtype_bytes,
-                vmem_budget=budget, seed=blocks, target=target)
+        # fires only on LRU miss — a span per *distinct* geometry, via
+        # the ambient tracer (the lru_cache wrapper can't take tracer=)
+        with active_tracer().span(
+                "plan.search", layer=f"{ci}->{co}k{hk}x{wk}",
+                h=h, w=w, batch=batch, target=target,
+                autotune=autotune) as _sp:
+            blocks = conv_lb_block_shape(ho, wo, ci, co, hk, wk,
+                                         batch=batch, stride=(sy, sx),
+                                         dilation=(dy, dx),
+                                         dtype_bytes=dtype_bytes,
+                                         vmem_budget=budget)
+            if autotune:
+                blocks = autotune_conv_blocks(
+                    batch, ho, wo, ci, co, hk, wk, stride=(sy, sx),
+                    dilation=(dy, dx), pool=pool, residual=residual,
+                    dtype_bytes=dtype_bytes,
+                    vmem_budget=budget, seed=blocks, target=target)
+            _sp.set(blocks=f"b={blocks.b},y={blocks.y},x={blocks.x},"
+                           f"ci={blocks.ci},co={blocks.co}")
     ty = _snap_pool(min(blocks.y, ho), ho, pool)
     tx = _snap_pool(min(blocks.x, wo), wo, pool)
     cib, cob = min(blocks.ci, ci), min(blocks.co, co)
@@ -983,6 +1000,56 @@ def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
 
     kernel_conv.defvjp(_fwd, _bwd)
     return kernel_conv(x, w, bias, residual)
+
+
+def conv2d_lb_timed(x: jax.Array, w: jax.Array,
+                    bias: jax.Array | None = None,
+                    residual: jax.Array | None = None,
+                    *, stride=1, padding=0, dilation=1,
+                    groups: int = 1, relu: bool = False, pool: int = 1,
+                    interpret: bool = True, autotune: bool = True,
+                    fallback: bool = False,
+                    tracer=None, clock=None,
+                    name: str = "kernel.conv2d_lb") -> jax.Array:
+    """:func:`conv2d_lb` with a synced, *accounted* span around the
+    call: blocks on the result, then records one span carrying both
+    the measured seconds and the plan's analytic ``traffic_bytes`` —
+    i.e. the achieved-GB/s sample the roofline needs, per layer.
+
+    ``tracer`` defaults to the ambient tracer; ``clock`` (injectable,
+    lint L005/L006 idiom) defaults to the tracer's own clock, so under
+    a ``VirtualClock`` the trace stays deterministic while real runs
+    get ``time.perf_counter`` semantics.  The span fires for the
+    kernel path *and* the lax fallback (``mode`` attr tells them
+    apart); accounting is identical — the plan charges the dataflow,
+    not the executor."""
+    tr = active_tracer() if tracer is None else tracer
+    clk = tr.now if clock is None else clock
+    sy, sx = _pair(stride)
+    py, px = _pair(padding)
+    dy, dx = _pair(dilation)
+    b, h, wd, ci = x.shape
+    hk, wk, ci_g, co = w.shape
+    plan = plan_conv(h, wd, ci_g, co // groups, hk, wk, batch=b,
+                     stride=(sy, sx), padding=(py, px),
+                     dilation=(dy, dx), pool=pool,
+                     residual=residual is not None,
+                     dtype_bytes=x.dtype.itemsize, autotune=autotune)
+    n_bytes = groups * plan.traffic_bytes(b, dtype_bytes=x.dtype.itemsize)
+    with tr.span(name, layer=f"{ci}->{co}k{hk}x{wk}",
+                 mode="lax" if fallback else "kernel",
+                 batch=b, traffic_bytes=n_bytes) as sp:
+        t0 = clk()
+        out = conv2d_lb(x, w, bias, residual, stride=stride,
+                        padding=padding, dilation=dilation,
+                        groups=groups, relu=relu, pool=pool,
+                        interpret=interpret, autotune=autotune,
+                        fallback=fallback)
+        out = jax.block_until_ready(out)
+        dt = clk() - t0
+        sp.set(us=dt * 1e6,
+               achieved_gbps=(n_bytes / dt / 1e9) if dt > 0 else None)
+    return out
 
 
 # --------------------------------------------------------------------------

@@ -69,6 +69,11 @@ def main() -> None:
                          "account-only runs use a virtual clock so "
                          "delays cost no wall time)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Perfetto/Chrome trace JSON (+ JSONL "
+                         "event log at PATH.jsonl); under a virtual "
+                         "clock the trace is bit-deterministic per "
+                         "seed")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(args.seed)
@@ -86,12 +91,20 @@ def main() -> None:
     # real time (the pipeline cost is the point)
     clock = VirtualClock() if fault_tolerant and args.account_only \
         else None
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+
+        # a virtual-clock run gets a virtual-clock trace: replaying
+        # the same seed/schedule exports byte-identical files
+        tracer = Tracer(**({"clock": clock} if clock else {}))
     server = ImageServer(params, args.image, args.image, graph=graph,
                          buckets=args.buckets,
                          wait_budget=args.wait_ms / 1e3,
                          account_budget=args.budget_kib * 1024,
                          use_kernel=not args.no_kernel,
                          compute=not args.account_only,
+                         tracer=tracer,
                          **({"clock": clock} if clock else {}))
     loop = None
     if fault_tolerant:
@@ -128,6 +141,12 @@ def main() -> None:
         print(f"loop: {loop.stats}")
     print(f"served {s['requests']} requests / {s['images']} images in "
           f"{dt:.2f}s ({s['images'] / max(dt, 1e-9):.1f} img/s)")
+    if tracer is not None:
+        from repro.obs import write_trace
+
+        out = write_trace(args.trace, tracer, server.metrics)
+        print(f"trace: {out} ({len(tracer.records)} records; open in "
+              f"ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -194,7 +194,8 @@ def init_graph(key, graph: ConvGraph, n_classes: int = 10,
 
 
 def graph_forward(graph: ConvGraph, conv_params, x, *,
-                  use_kernel: bool = False, strict: bool = True):
+                  use_kernel: bool = False, strict: bool = True,
+                  tracer=None):
     """Execute the graph on ``x`` (B, H, W, Ci) -> (B, H', W', Co).
 
     ``conv_params`` aligns with ``graph.nodes`` (``{"w": ..., "b":}``
@@ -205,31 +206,53 @@ def graph_forward(graph: ConvGraph, conv_params, x, *,
     aligned pool; non-pool-aligned planes take the rare unfused pool.
     The lax path rides ``conv2d_lb(fallback=True)`` — the kernel
     module's single reference implementation (f32-accumulating conv +
-    unfused epilogue), so the two paths can never drift apart."""
-    from repro.kernels.conv_lb.ops import conv2d_lb
+    unfused epilogue), so the two paths can never drift apart.
 
+    ``tracer`` (default: the ambient tracer) records one synced
+    per-layer span — seconds *and* the plan's accounted bytes — but
+    only when executing eagerly: inside a jit trace spans would time
+    tracing, not running, so instrumentation turns itself off."""
+    from repro.kernels.conv_lb.ops import conv2d_lb, conv2d_lb_timed
+    from repro.obs.tracer import NULL_SPAN as _NULL_CTX
+    from repro.obs.tracer import active_tracer
+
+    tr = active_tracer() if tracer is None else tracer
+    # per-layer timing is only honest outside a jit trace
+    timing = tr.active and not isinstance(x, jax.core.Tracer)
     stages = graph_stages(graph, x.shape[1], x.shape[2], x.shape[3],
                           strict=strict)
     tensors = {GRAPH_INPUT: x}
     prev = GRAPH_INPUT
     out = x
-    for p, st in zip(conv_params, stages):
-        node = st.node
-        src = tensors[node.src or prev]
-        res = None if node.residual is None else tensors[node.residual]
-        bias = p.get("b") if node.bias else None
-        y = conv2d_lb(src, p["w"], bias, res,
-                      stride=node.stride, padding=node.pad,
+    fwd_span = (tr.span("graph.forward", model=graph.name,
+                        batch=x.shape[0],
+                        mode="kernel" if use_kernel else "lax")
+                if timing else _NULL_CTX)
+    with fwd_span:
+        for p, st in zip(conv_params, stages):
+            node = st.node
+            src = tensors[node.src or prev]
+            res = (None if node.residual is None
+                   else tensors[node.residual])
+            bias = p.get("b") if node.bias else None
+            kw = dict(stride=node.stride, padding=node.pad,
                       groups=node.groups, relu=node.relu,
                       pool=st.pool if st.fused_pool else 1,
                       fallback=not use_kernel)
-        if st.pool > 1 and not st.fused_pool:
-            y = jax.lax.reduce_window(
-                y, -jnp.inf, jax.lax.max, (1, st.pool, st.pool, 1),
-                (1, st.pool, st.pool, 1), "VALID")
-        tensors[node.name] = y
-        prev = node.name
-        out = y
+            if timing:
+                with tr.span("graph.layer", layer=node.name,
+                             model=graph.name):
+                    y = conv2d_lb_timed(src, p["w"], bias, res,
+                                        tracer=tr, **kw)
+            else:
+                y = conv2d_lb(src, p["w"], bias, res, **kw)
+            if st.pool > 1 and not st.fused_pool:
+                y = jax.lax.reduce_window(
+                    y, -jnp.inf, jax.lax.max, (1, st.pool, st.pool, 1),
+                    (1, st.pool, st.pool, 1), "VALID")
+            tensors[node.name] = y
+            prev = node.name
+            out = y
     return out
 
 
@@ -316,7 +339,8 @@ def graph_training_step_report(graph: ConvGraph, h: int, w: int, *,
                                batch: int, in_ch: int = 3,
                                dtype_bytes: int = 4,
                                vmem_budget: int | None = None,
-                               strict: bool = True) -> dict:
+                               strict: bool = True,
+                               tracer=None) -> dict:
     """Per-training-step traffic accounting for any conv graph.
 
     Sums every layer's planned fwd+dgrad+wgrad words
@@ -325,28 +349,36 @@ def graph_training_step_report(graph: ConvGraph, h: int, w: int, *,
     its realized plan footprint (residual joins add their mandatory
     read to both sides) — the training counterpart of the serve
     ledger's ``vs_bound_x``, for heterogeneous stacks."""
-    handles = graph_plan_handles(graph, h, w, batch=batch, in_ch=in_ch,
-                                 dtype_bytes=dtype_bytes,
-                                 vmem_budget=vmem_budget, training=True,
-                                 strict=strict)
-    words = fwd_words = bound = 0.0
-    kernel_layers = 0
-    for layer, tp in handles:
-        t = tp.traffic(batch)
-        words += t.total
-        fwd_words += t.fwd.total
-        bound += tp.bound_words(layer)
-        # grouped layers repeat per group but never ride the kernel
-        # dgrad (dgrad_kernel is gated on groups == 1), so the sum
-        # counts each kernel-dgrad layer exactly once
-        kernel_layers += int(tp.dgrad_kernel)
-    n_stages = len(graph_stages(graph, h, w, in_ch, strict=strict))
-    return {
-        "model": graph.name,
-        "layers": n_stages,
-        "dgrad_kernel_layers": kernel_layers,
-        "bytes_per_step": words * dtype_bytes,
-        "bound_bytes_per_step": bound * dtype_bytes,
-        "train_vs_bound_x": words / max(bound, 1e-30),
-        "bwd_share": (words - fwd_words) / max(words, 1e-30),
-    }
+    from repro.obs.tracer import active_tracer
+
+    tr = active_tracer() if tracer is None else tracer
+    with tr.span("graph.training_report", model=graph.name,
+                 batch=batch) as _sp:
+        handles = graph_plan_handles(graph, h, w, batch=batch,
+                                     in_ch=in_ch,
+                                     dtype_bytes=dtype_bytes,
+                                     vmem_budget=vmem_budget,
+                                     training=True, strict=strict)
+        words = fwd_words = bound = 0.0
+        kernel_layers = 0
+        for layer, tp in handles:
+            t = tp.traffic(batch)
+            words += t.total
+            fwd_words += t.fwd.total
+            bound += tp.bound_words(layer)
+            # grouped layers repeat per group but never ride the kernel
+            # dgrad (dgrad_kernel is gated on groups == 1), so the sum
+            # counts each kernel-dgrad layer exactly once
+            kernel_layers += int(tp.dgrad_kernel)
+        n_stages = len(graph_stages(graph, h, w, in_ch, strict=strict))
+        _sp.set(traffic_bytes=words * dtype_bytes,
+                train_vs_bound_x=words / max(bound, 1e-30))
+        return {
+            "model": graph.name,
+            "layers": n_stages,
+            "dgrad_kernel_layers": kernel_layers,
+            "bytes_per_step": words * dtype_bytes,
+            "bound_bytes_per_step": bound * dtype_bytes,
+            "train_vs_bound_x": words / max(bound, 1e-30),
+            "bwd_share": (words - fwd_words) / max(words, 1e-30),
+        }

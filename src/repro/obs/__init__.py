@@ -1,0 +1,47 @@
+"""Observability: span tracer, metrics registry, Perfetto export.
+
+The measurement substrate for the bytes-vs-seconds story — the same
+plan/request/layer units the :class:`~repro.serve.ledger.
+TrafficLedger` charges bytes to get wall-clock spans here, so every
+kernel span carries both an accounted ``traffic_bytes`` and a
+measured duration (achieved GB/s per layer).
+
+Idiom::
+
+    from repro.obs import Tracer, write_trace
+
+    tracer = Tracer()                      # or Tracer(clock=vclock)
+    server = ImageServer(..., tracer=tracer)
+    with tracer.activate():                # ambient, for plan_conv
+        loop.run_sync(...)
+    write_trace("serve.trace.json", tracer, server.metrics)
+"""
+
+from .tracer import (
+    NULL_TRACER,
+    NullTracer,
+    Span,
+    Tracer,
+    active_tracer,
+    set_active,
+    timed_call,
+)
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .export import chrome_trace, events_jsonl, write_trace
+
+__all__ = [
+    "NULL_TRACER",
+    "NullTracer",
+    "Span",
+    "Tracer",
+    "active_tracer",
+    "set_active",
+    "timed_call",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "chrome_trace",
+    "events_jsonl",
+    "write_trace",
+]

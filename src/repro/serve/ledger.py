@@ -36,6 +36,7 @@ from collections import deque
 from typing import Sequence
 
 from repro.core.lower_bound import q_dram_serving
+from repro.obs.metrics import MetricsRegistry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,9 +98,13 @@ class TrafficLedger:
     """
 
     def __init__(self, *, vmem_budget: int = 1 << 20,
-                 dtype_bytes: int = 4, keep_charges: int = 4096):
+                 dtype_bytes: int = 4, keep_charges: int = 4096,
+                 metrics: MetricsRegistry | None = None):
         self.vmem_budget = int(vmem_budget)
         self.dtype_bytes = int(dtype_bytes)
+        # shared with the server/loop so terminal-state counters and
+        # the per-bucket in-flight/backlog gauges land in one registry
+        self.metrics = MetricsRegistry() if metrics is None else metrics
         self.charges: deque[RequestCharge] = deque(maxlen=keep_charges)
         self.dispatches = 0
         self.padded_images = 0
@@ -182,6 +187,14 @@ class TrafficLedger:
             self._n_requests += 1
             self._n_images += n
             out.append(charge)
+            if charge.latency_s is not None \
+                    and not math.isnan(charge.latency_s):
+                self.metrics.histogram("serve_latency_s",
+                                       bucket=bucket).observe(
+                                           charge.latency_s)
+        self.metrics.counter("serve_served").inc(len(entries))
+        self.metrics.counter("serve_bytes",
+                             bucket=bucket).inc(total_all * db)
         return out
 
     # -- terminal states (serving-loop health) -----------------------------
@@ -193,9 +206,10 @@ class TrafficLedger:
         terminal state without ever dispatching, so it carries no
         traffic charge, only its slot in the served+shed+failed
         reconciliation."""
-        del rid, waited_s, reason      # identity kept by the loop
+        del rid, waited_s      # identity kept by the loop
         self.shed_requests += 1
         self.shed_images += int(n_images)
+        self.metrics.counter("serve_shed", reason=reason).inc()
 
     def record_failed(self, rid: int, n_images: int, *,
                       waited_s: float | None = None,
@@ -204,12 +218,13 @@ class TrafficLedger:
         del rid, waited_s, error
         self.failed_requests += 1
         self.failed_images += int(n_images)
+        self.metrics.counter("serve_failed").inc()
 
     def record_degraded(self, mode: str) -> None:
         """One dispatch served off the preferred path (``"lax"`` or
         account-only ``"account"``) by the circuit breaker."""
-        del mode
         self.degraded_dispatches += 1
+        self.metrics.counter("serve_degraded", mode=mode).inc()
 
     @property
     def submitted_requests(self) -> int:
@@ -337,13 +352,35 @@ class TrafficLedger:
             line += f", {s['degraded_dispatches']} degraded dispatches"
         return line
 
+    def _gauge_lines(self) -> str:
+        """Per-bucket in-flight/backlog gauges (fed by the serving
+        loop through the shared metrics registry), one line per bucket
+        with live work — empty string when nothing is in flight."""
+        inflight = self.metrics.find("serve_inflight{")
+        backlog = self.metrics.find("serve_backlog{")
+        buckets = sorted(
+            {int(k.split("bucket=")[1].rstrip("}"))
+             for k in list(inflight) + list(backlog)})
+        parts = []
+        for b in buckets:
+            inf = inflight.get(f"serve_inflight{{bucket={b}}}", 0)
+            bkl = backlog.get(f"serve_backlog{{bucket={b}}}", 0)
+            if inf or bkl:
+                parts.append(f"b{b}: {inf:g} in-flight / "
+                             f"{bkl:g} backlog")
+        if not parts:
+            return ""
+        return "\n  buckets: " + ", ".join(parts)
+
     def format_summary(self) -> str:
         s = self.summary()
         if not s["requests"]:
             if s["submitted_requests"]:
                 return ("ledger: no traffic charged\n"
-                        + self._health_line(s))
-            return "ledger: no traffic charged"
+                        + self._health_line(s) + self._gauge_lines())
+            # nothing terminal yet — but live backlog/in-flight gauges
+            # are exactly what an operator wants to see at this moment
+            return "ledger: no traffic charged" + self._gauge_lines()
         out = (f"ledger: {s['requests']} req / {s['images']} img in "
                f"{s['dispatches']} dispatches (+{s['padded_images']} pad)\n"
                f"  {s['bytes_per_image'] / 1e6:.2f} MB/img "
@@ -355,7 +392,7 @@ class TrafficLedger:
                f"  latency p50/p99/max  {s['p50_latency_s'] * 1e3:.1f}/"
                f"{s['p99_latency_s'] * 1e3:.1f}/"
                f"{s['max_latency_s'] * 1e3:.1f} ms\n"
-               + self._health_line(s))
+               + self._health_line(s) + self._gauge_lines())
         for label, row in sorted(s["by_model"].items()):
             out += (f"\n  [{label}] {row['images']} img, "
                     f"{row['bytes_per_image'] / 1e6:.2f} MB/img, "

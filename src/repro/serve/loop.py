@@ -78,6 +78,7 @@ import random
 import threading
 import time
 
+from repro.obs.tracer import NULL_SPAN
 from repro.serve.bucketing import ImageRequest
 from repro.serve.server import ImageServer, ServeResult
 
@@ -111,6 +112,11 @@ class TrackedRequest:
     error: str | None = None           # set iff FAILED
     shed_reason: str | None = None     # set iff SHED
     terminal_at: float | None = None
+    # the request's lifecycle span (begun at admission, ended at the
+    # terminal transition — possibly on another thread); NULL_SPAN
+    # when tracing is off
+    span: object = dataclasses.field(default=NULL_SPAN, repr=False,
+                                     compare=False)
 
     @property
     def terminal(self) -> bool:
@@ -151,11 +157,14 @@ class CircuitBreaker:
             return True
         return False
 
-    def record_success(self, now: float) -> None:
+    def record_success(self, now: float) -> bool:
+        """True when this success stepped recovery back up a level."""
         self._consecutive = 0
         if self.level > 0 and now - self._entered_at >= self.cooldown_s:
             self.level -= 1
             self._entered_at = now
+            return True
+        return False
 
 
 @dataclasses.dataclass
@@ -197,8 +206,15 @@ class ServingLoop:
                  fault_plan=None,
                  seed: int = 0,
                  clock=None,
-                 sleep=None):
+                 sleep=None,
+                 tracer=None,
+                 metrics=None):
         self.server = server
+        # observability rides the server's tracer/registry by default,
+        # so loop lifecycle events and server dispatch spans land in
+        # one trace and the ledger renders the loop's gauges
+        self.tracer = server.tracer if tracer is None else tracer
+        self.metrics = server.metrics if metrics is None else metrics
         self.deadline_s = deadline_s
         self.max_retries = int(max_retries)
         self.backoff_base_s = float(backoff_base_s)
@@ -219,6 +235,7 @@ class ServingLoop:
         self._retry_jobs: list[_Job] = []
         self._attempt_seq = 0          # FaultPlan's dispatch index
         self._inflight = 0
+        self._inflight_by_bucket: dict[int, int] = {}
         self.counters = {"submitted": 0, "done": 0, "shed": 0,
                          "failed": 0, "shed_admission": 0,
                          "shed_expired": 0, "dispatch_failures": 0,
@@ -226,11 +243,42 @@ class ServingLoop:
 
     # -- observability -----------------------------------------------------
 
+    def _backlog_by_bucket(self) -> dict[int, int]:
+        """Under lock: requests awaiting dispatch, keyed by the bucket
+        they'd ride — queued arrivals at their covering bucket plus
+        retry-job members at their job's bucket."""
+        out: dict[int, int] = {}
+        for r in self.server.queue.pending:
+            b = self.server.queue.bucket_for(r.n_images)
+            out[b] = out.get(b, 0) + 1
+        for j in self._retry_jobs:
+            out[j.bucket] = out.get(j.bucket, 0) + len(j.group)
+        return out
+
+    def _refresh_gauges(self) -> None:
+        """Under lock: publish per-bucket in-flight/backlog levels
+        into the shared registry (zeroing buckets that emptied, so a
+        stale gauge never reports phantom work)."""
+        backlog = self._backlog_by_bucket()
+        seen = (set(backlog) | set(self._inflight_by_bucket)
+                | set(self.server.queue.buckets))
+        for b in seen:
+            self.metrics.gauge("serve_backlog",
+                               bucket=b).set(backlog.get(b, 0))
+            self.metrics.gauge("serve_inflight", bucket=b).set(
+                self._inflight_by_bucket.get(b, 0))
+        self.metrics.gauge("serve_breaker_level").set(self.breaker.level)
+        self.metrics.gauge("serve_retry_backlog").set(
+            len(self._retry_jobs))
+
     @property
     def stats(self) -> dict:
         with self._lock:
+            self._refresh_gauges()
             return {**self.counters,
                     "inflight": self._inflight,
+                    "inflight_by_bucket": dict(self._inflight_by_bucket),
+                    "backlog_by_bucket": self._backlog_by_bucket(),
                     "retry_backlog": len(self._retry_jobs),
                     "queue_depth": self.server.queue.depth,
                     "breaker_level": self.breaker.level,
@@ -279,16 +327,21 @@ class ServingLoop:
             if deadline is not None and projected > deadline:
                 rid = self.server.reserve_rid()
                 self.counters["shed_admission"] += 1
+                t = TrackedRequest(rid=rid, n_images=n, arrival=now,
+                                   deadline_s=deadline,
+                                   span=self.tracer.begin("request",
+                                                          rid=rid,
+                                                          n_images=n))
                 self._terminal_shed(
-                    TrackedRequest(rid=rid, n_images=n, arrival=now,
-                                   deadline_s=deadline),
-                    now, reason=f"projected wait {projected:.3f}s > "
-                                f"budget {deadline:.3f}s")
+                    t, now, reason=f"projected wait {projected:.3f}s > "
+                                   f"budget {deadline:.3f}s")
                 return rid
             rid = self.server.submit(images, n_images=n_images, now=now)
+            n = self._queued_n_images(rid, n)
             self.requests[rid] = TrackedRequest(
-                rid=rid, n_images=self._queued_n_images(rid, n),
-                arrival=now, deadline_s=deadline)
+                rid=rid, n_images=n, arrival=now, deadline_s=deadline,
+                span=self.tracer.begin("request", rid=rid, n_images=n))
+            self._refresh_gauges()
             return rid
 
     def _queued_n_images(self, rid: int, fallback: int) -> int:
@@ -304,11 +357,23 @@ class ServingLoop:
         if t is None:
             t = TrackedRequest(rid=req.rid, n_images=req.n_images,
                                arrival=req.arrival,
-                               deadline_s=self.deadline_s)
+                               deadline_s=self.deadline_s,
+                               span=self.tracer.begin(
+                                   "request", rid=req.rid,
+                                   n_images=req.n_images, adopted=True))
             self.requests[req.rid] = t
         return t
 
     # -- terminal transitions ----------------------------------------------
+
+    def _terminal(self, t: TrackedRequest, state: RequestState) -> None:
+        """Shared terminal bookkeeping: close the lifecycle span and
+        emit exactly one ``request.terminal`` event per rid — the
+        span-tree mirror of the drop-free invariant."""
+        self.tracer.end(t.span, state=state.value,
+                        attempts=t.attempts)
+        self.tracer.event("request.terminal", rid=t.rid,
+                          state=state.value)
 
     def _terminal_shed(self, t: TrackedRequest, now: float, *,
                        reason: str) -> None:
@@ -317,6 +382,7 @@ class ServingLoop:
         t.terminal_at = now
         self.requests[t.rid] = t
         self.counters["shed"] += 1
+        self._terminal(t, RequestState.SHED)
         self.server.ledger.record_shed(
             t.rid, t.n_images, waited_s=max(0.0, now - t.arrival),
             reason=reason)
@@ -327,6 +393,7 @@ class ServingLoop:
         t.error = error
         t.terminal_at = now
         self.counters["failed"] += 1
+        self._terminal(t, RequestState.FAILED)
         self.server.ledger.record_failed(
             t.rid, t.n_images, waited_s=max(0.0, now - t.arrival),
             error=error)
@@ -383,6 +450,7 @@ class ServingLoop:
         completed results).  Bookkeeping runs under the loop lock; the
         fault delay and the pipeline execution run off-lock so
         concurrent drivers overlap them."""
+        tr = self.tracer
         with self._lock:
             attempt_idx = self._attempt_seq
             self._attempt_seq += 1
@@ -392,9 +460,17 @@ class ServingLoop:
                 t.state = RequestState.DISPATCHED
                 t.attempts += 1
             self._inflight += 1
+            self._inflight_by_bucket[job.bucket] = (
+                self._inflight_by_bucket.get(job.bucket, 0)
+                + len(job.group))
             self.counters["peak_inflight"] = max(
                 self.counters["peak_inflight"], self._inflight)
+            self._refresh_gauges()
             t0 = self._clock()
+        attempt_span = tr.begin(
+            "dispatch.attempt", bucket=job.bucket, mode=mode,
+            attempt=job.attempts + 1,
+            rids=",".join(str(r.rid) for r in job.group))
         try:
             if self.fault_plan is not None:
                 delay = self.fault_plan.before_dispatch(
@@ -408,14 +484,20 @@ class ServingLoop:
         except Exception as e:  # noqa: BLE001 — any dispatch fault
             with self._lock:
                 self._inflight -= 1
+                self._inflight_by_bucket[job.bucket] -= len(job.group)
                 done_at = self._clock()
+                tr.end(attempt_span, outcome="error", error=repr(e))
                 self._observe_service(done_at - t0)
-                self.breaker.record_failure(done_at)
+                if self.breaker.record_failure(done_at):
+                    tr.event("breaker.trip", level=self.breaker.level,
+                             mode=self.breaker.mode)
+                    self.metrics.counter("serve_breaker_trips").inc()
                 self.counters["dispatch_failures"] += 1
                 job.attempts += 1
                 if job.attempts > self.max_retries:
                     for t in tracked:
                         self._terminal_failed(t, done_at, error=repr(e))
+                    self._refresh_gauges()
                     return "failed", []
                 backoff = (self.backoff_base_s
                            * self.backoff_mult ** (job.attempts - 1))
@@ -424,14 +506,23 @@ class ServingLoop:
                 job.next_at = done_at + max(backoff, 0.0)
                 self._retry_jobs.append(job)
                 self.counters["retries"] += 1
+                self.metrics.counter("serve_retries").inc()
+                tr.event("dispatch.retry", bucket=job.bucket,
+                         attempt=job.attempts,
+                         backoff_s=job.next_at - done_at)
+                self._refresh_gauges()
                 return "retry", []
         with self._lock:
             self._inflight -= 1
+            self._inflight_by_bucket[job.bucket] -= len(job.group)
             done_at = self._clock()
+            tr.end(attempt_span, outcome="done")
             results = self.server._complete(job.group, job.bucket,
                                             logits, now=now)
             self._observe_service(done_at - t0)
-            self.breaker.record_success(done_at)
+            if self.breaker.record_success(done_at):
+                tr.event("breaker.recover", level=self.breaker.level,
+                         mode=self.breaker.mode)
             if mode != "kernel":
                 self.server.ledger.record_degraded(mode)
             for t, res in zip(tracked, results):
@@ -439,6 +530,8 @@ class ServingLoop:
                 t.result = res
                 t.terminal_at = done_at
                 self.counters["done"] += 1
+                self._terminal(t, RequestState.DONE)
+            self._refresh_gauges()
             return "done", results
 
     # -- drivers -----------------------------------------------------------

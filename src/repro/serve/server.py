@@ -41,6 +41,8 @@ import jax.numpy as jnp
 from repro.models.cnn import vgg_graph
 from repro.models.graph import (ConvGraph, graph_logits,
                                 graph_plan_handles)
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracer import NULL_TRACER
 from repro.serve.bucketing import (DEFAULT_BUCKETS, AdmissionQueue,
                                    ImageRequest)
 from repro.serve.ledger import RequestCharge, TrafficLedger
@@ -83,7 +85,9 @@ class ImageServer:
                  use_kernel: bool = True,
                  compute: bool = True,
                  keep_results: int = 1024,
-                 clock=time.monotonic):
+                 clock=time.monotonic,
+                 tracer=None,
+                 metrics: MetricsRegistry | None = None):
         self.params = params
         if graph is None and forward is not None:
             # a custom forward with no graph would have the ledger
@@ -101,9 +105,16 @@ class ImageServer:
         self.dtype = jnp.dtype(dtype)
         self.account_budget = int(account_budget)
         self._clock = clock
+        # observability is opt-in and injectable: the default tracer
+        # is the shared no-op (zero-cost), the registry is per-server
+        # (process-local, hermetic across tests); both are shared with
+        # the ledger and any ServingLoop mounted on this server
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self.metrics = MetricsRegistry() if metrics is None else metrics
         self.queue = AdmissionQueue(buckets, wait_budget)
         self.ledger = TrafficLedger(vmem_budget=account_budget,
-                                    dtype_bytes=self.dtype.itemsize)
+                                    dtype_bytes=self.dtype.itemsize,
+                                    metrics=self.metrics)
         self._handles: dict[tuple, list] = {}
         self._pipelines: dict[int, Any] = {}
         # bounded lookup of recent results (insertion-ordered dict,
@@ -155,6 +166,9 @@ class ImageServer:
         rid = self.reserve_rid()
         self.queue.submit(ImageRequest(rid=rid, n_images=n, arrival=now,
                                        images=images))
+        self.tracer.event("serve.admit", rid=rid, n_images=n)
+        self.metrics.counter("serve_admitted").inc()
+        self.metrics.gauge("serve_queue_depth").set(self.queue.depth)
         return rid
 
     def reserve_rid(self) -> int:
@@ -186,12 +200,20 @@ class ImageServer:
         key = (self.graph, int(bucket), self.h, self.w, self.in_ch,
                self.dtype.itemsize)
         if key not in self._handles:
-            self._handles[key] = graph_plan_handles(
-                self.graph, self.h, self.w, batch=bucket,
-                in_ch=self.in_ch, dtype_bytes=self.dtype.itemsize,
-                vmem_budget=self.account_budget, verify=True)
+            with self.tracer.span("plan.handles", bucket=int(bucket),
+                                  model=self.graph.name,
+                                  plan_key=f"{self.graph.name}/b{bucket}"
+                                           f"/{self.h}x{self.w}"):
+                self._handles[key] = graph_plan_handles(
+                    self.graph, self.h, self.w, batch=bucket,
+                    in_ch=self.in_ch, dtype_bytes=self.dtype.itemsize,
+                    vmem_budget=self.account_budget, verify=True)
+            self.metrics.counter("plan_cache_miss").inc()
         else:
             self._counters["plan_hits"] += 1
+            self.tracer.event("plan.cache_hit", bucket=int(bucket),
+                              model=self.graph.name)
+            self.metrics.counter("plan_cache_hit").inc()
         return self._handles[key]
 
     def pipeline(self, bucket: int, use_kernel: bool | None = None):
@@ -248,8 +270,29 @@ class ImageServer:
         if pad:
             payload = jnp.pad(payload,
                               ((0, pad), (0, 0), (0, 0), (0, 0)))
-        return jax.block_until_ready(
-            self.pipeline(bucket, use_kernel)(self.params, payload))
+        tr = self.tracer
+        uk = self.use_kernel if use_kernel is None \
+            else (self.use_kernel and bool(use_kernel))
+        # the dispatch's accounted bytes (same handles the ledger
+        # charges) ride on the span next to the measured seconds —
+        # one span, both halves of the achieved-GB/s ratio
+        n_bytes = None
+        if tr.active:
+            n_bytes = sum(p.traffic(bucket).total
+                          for _, p in self.plan_handles(bucket)) \
+                * self.dtype.itemsize
+        with tr.span("serve.execute", bucket=int(bucket),
+                     mode="kernel" if uk else "lax",
+                     n_images=int(payload.shape[0]) - pad,
+                     traffic_bytes=n_bytes) as sp:
+            t0 = tr.now()
+            out = jax.block_until_ready(
+                self.pipeline(bucket, use_kernel)(self.params, payload))
+            dt = tr.now() - t0
+            sp.set(us=dt * 1e6,
+                   achieved_gbps=(n_bytes / dt / 1e9)
+                   if (n_bytes and dt > 0) else None)
+        return out
 
     def _complete(self, group: list[ImageRequest], bucket: int, logits,
                   now: float) -> list[ServeResult]:
@@ -261,6 +304,8 @@ class ImageServer:
         done = max(self._clock(), now, *(r.arrival for r in group))
         for r in group:
             r.done = done
+            self.tracer.event("serve.complete", rid=r.rid,
+                              bucket=int(bucket))
         handles = self.plan_handles(bucket)
         entries = [(r.rid, r.n_images) for r in group]
         charges = self.ledger.charge_batch(

@@ -140,6 +140,69 @@ def test_L005_is_scoped_to_serve_and_runtime_paths(tmp_path):
     assert not _lint_snippet(tmp_path, _CLOCKY)
 
 
+def test_L006_flags_bare_clock_calls_inside_obs(tmp_path):
+    d = tmp_path / "obs"
+    d.mkdir()
+    (d / "tracey.py").write_text(textwrap.dedent(_CLOCKY))
+    rules = [f.rule for f in lint.lint_file(d / "tracey.py")]
+    # obs/ is outside L005's serve/runtime scope, so each bare clock
+    # call is exactly one L006 finding
+    assert rules == ["L006", "L006", "L006"]
+
+
+def test_L006_allows_clock_defaults_and_injected_clocks_in_obs(tmp_path):
+    d = tmp_path / "obs"
+    d.mkdir()
+    (d / "tracer.py").write_text(textwrap.dedent("""
+        import time
+
+        class Tracer:
+            def __init__(self, clock=time.perf_counter):
+                self._clock = clock
+
+            def now(self):
+                return self._clock()
+        """))
+    assert not lint.lint_file(d / "tracer.py")
+
+
+def test_L006_flags_set_active_mutation_outside_obs(tmp_path):
+    rules = {f.rule for f in _lint_snippet(tmp_path, """
+        from repro.obs.tracer import set_active
+
+        def hijack(tracer):
+            set_active(tracer)
+        """)}
+    assert rules == {"L006"}
+    rules = {f.rule for f in _lint_snippet(tmp_path, """
+        from repro.obs import tracer as trc
+
+        def hijack(t):
+            trc.set_active(t)
+        """, name="other.py")}
+    assert rules == {"L006"}
+
+
+def test_L006_allows_set_active_inside_obs_and_activate_scopes(tmp_path):
+    d = tmp_path / "obs"
+    d.mkdir()
+    (d / "tracer.py").write_text(textwrap.dedent("""
+        def set_active(tracer):
+            return tracer
+
+        class _Activation:
+            def __enter__(self):
+                return set_active(self)
+        """))
+    assert not lint.lint_file(d / "tracer.py")
+    # the sanctioned caller idiom — a scoped activate() — is clean
+    assert not _lint_snippet(tmp_path, """
+        def run(tracer):
+            with tracer.activate():
+                pass
+        """)
+
+
 def test_syntax_errors_are_findings_not_crashes(tmp_path):
     findings = _lint_snippet(tmp_path, "def broken(:\n")
     assert findings and findings[0].rule == "parse"
