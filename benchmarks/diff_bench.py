@@ -25,7 +25,10 @@ Tracked metrics (by row-name suffix):
     fault-tolerant serving loop's bursty-trace health rows;
   * ``.../obs_overhead_frac`` (lower is better) — the tracing layer's
     analytic cost over the account-only serve smoke
-    (``obs_bench.py``): observability must stay ~free.
+    (``obs_bench.py``): observability must stay ~free;
+  * ``.../compiled_speedup_x`` (higher is better) and
+    ``.../compiled_numeric_maxerr`` (lower is better) — the compiled
+    (``interpret=False``) execution gate from ``kernel_bench``.
 
 Usage:  python benchmarks/diff_bench.py [BENCH_2.json BENCH_3.json ...]
 (no args: every BENCH_*.json next to the repo root, ordered by n).
@@ -51,6 +54,11 @@ TRACKED = {
     "w_amortization_x": False,
     "reduction_x": False,
     "autotune_vs_closed_x": False,
+    # compiled execution (interpret=False): the compiled kernel must
+    # stay faster than the interpreter on the gated geometry, and its
+    # fwd+grad numerics must stay at lax parity
+    "compiled_speedup_x": False,
+    "compiled_numeric_maxerr": True,
     # static-analysis gates: the audited legal fraction must not
     # regress (higher better); mismatch/lint counts must stay 0 —
     # with a 0 baseline ANY nonzero value trips the ratio gate

@@ -13,6 +13,11 @@ from repro.core.tpu_adapter import (BlockShape, arithmetic_intensity,
 from repro.obs import timed_call
 
 
+#: execution target for the walltime benches (run.py --target
+#: overrides this module global before dispatching)
+WALLTIME_TARGET = "interpret"
+
+
 def _time_call(fn, *args, reps=3):
     # sync every rep: timing only the last rep's completion would
     # measure async dispatch for all earlier reps
@@ -118,35 +123,89 @@ def bench_conv_batch_fold():
 
 
 def bench_kernel_walltime():
-    """Interpret-mode sanity timings (not TPU performance)."""
+    """Kernel sanity timings at ``WALLTIME_TARGET`` (interpret by
+    default — not TPU performance; ``run.py --target compiled`` times
+    the same calls through the compiled CPU lowering)."""
+    from repro.core.exec_target import resolve_target
     from repro.kernels.attention_block.ops import flash_attention
     from repro.kernels.conv_lb.ops import conv2d_lb
     from repro.kernels.matmul_lb.ops import matmul_lb
 
+    tgt = resolve_target(WALLTIME_TARGET)
+    tag = "interp" if tgt.name == "interpret" else tgt.name
     rows = []
     x = jax.random.normal(jax.random.PRNGKey(0), (256, 256))
     w = jax.random.normal(jax.random.PRNGKey(1), (256, 256))
-    rows.append(("kernels/matmul_lb_256_interp_us",
-                 _time_call(lambda a, b: matmul_lb(a, b), x, w), 0))
+    rows.append((f"kernels/matmul_lb_256_{tag}_us",
+                 _time_call(lambda a, b: matmul_lb(a, b, target=tgt),
+                            x, w), 0))
     xi = jax.random.normal(jax.random.PRNGKey(0), (1, 16, 16, 8))
     wi = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 8, 16))
-    rows.append(("kernels/conv_lb_16_interp_us",
-                 _time_call(lambda a, b: conv2d_lb(a, b, padding=1),
+    rows.append((f"kernels/conv_lb_16_{tag}_us",
+                 _time_call(lambda a, b: conv2d_lb(a, b, padding=1,
+                                                   target=tgt),
                             xi, wi), 0))
     xt = jax.random.normal(jax.random.PRNGKey(0), (1, 48, 48, 8))
     wt = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 8, 16))
-    rows.append(("kernels/conv_lb_48_tiled_interp_us",
+    rows.append((f"kernels/conv_lb_48_tiled_{tag}_us",
                  _time_call(lambda a, b: conv2d_lb(
                      a, b, padding=1, y_block=12, x_block=12,
-                     ci_block=8, co_block=16), xt, wt), 0))
+                     ci_block=8, co_block=16, target=tgt), xt, wt), 0))
     q = jax.random.normal(jax.random.PRNGKey(0), (1, 128, 4, 16))
     kk = jax.random.normal(jax.random.PRNGKey(1), (1, 128, 2, 16))
-    rows.append(("kernels/flash_attn_128_interp_us",
-                 _time_call(lambda a, b: flash_attention(a, b, b,
-                                                         bq=64, bk=64),
-                            q, kk), 0))
+    rows.append((f"kernels/flash_attn_128_{tag}_us",
+                 _time_call(lambda a, b: flash_attention(
+                     a, b, b, bq=64, bk=64, target=tgt), q, kk), 0))
     return rows
 
 
+def bench_conv_compiled():
+    """Compiled execution gate: wall clock of the *same* conv under
+    ``interpret=False`` (the registered CPU lowering — straight-line
+    XLA over the kernel's grid schedule) vs the Pallas interpreter on
+    one mosaic-legal geometry, plus fwd+grad numerics vs lax.  The
+    first real (synced, non-null ``us_per_call``) compiled rows of the
+    repro."""
+    from repro.core.exec_target import COMPILED, INTERPRET, LAX
+    from repro.kernels.conv_lb.ops import conv2d_lb
+
+    # 256 input channels split the reduction (nci=2): per-step
+    # interpreter overhead doubles while the compiled straight-line
+    # schedule stays flat — a robust, not knife-edge, speedup gate
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8, 256))
+    w = jax.random.normal(jax.random.PRNGKey(1),
+                          (3, 3, 256, 128)) * 0.05
+
+    def call(tgt):
+        return conv2d_lb(x, w, padding=1, target=tgt)
+
+    # warm both jit caches first: the compiled path's first call pays
+    # the unrolled-grid XLA compile, which is not the steady state
+    call(COMPILED).block_until_ready()
+    call(INTERPRET).block_until_ready()
+    us_c = _time_call(call, COMPILED)
+    us_i = _time_call(call, INTERPRET)
+
+    def grads(tgt):
+        return jax.grad(
+            lambda a, b: (conv2d_lb(a, b, padding=1, relu=True,
+                                    target=tgt) ** 2).mean(),
+            argnums=(0, 1))(x, w)
+
+    yc, yl = call(COMPILED), call(LAX)
+    maxerr = float(jnp.max(jnp.abs(yc - yl)))
+    for gc, gl in zip(grads(COMPILED), grads(LAX)):
+        maxerr = max(maxerr, float(jnp.max(jnp.abs(gc - gl))))
+    return [
+        ("kernels/conv_lb_8x256_compiled_us", us_c, 0),
+        ("kernels/conv_lb_8x256_interp_us", us_i, 0),
+        ("kernels/conv_lb_8x256/compiled_speedup_x", None,
+         round(us_i / us_c, 2)),
+        ("kernels/conv_lb_8x256/compiled_numeric_maxerr", None,
+         float(f"{maxerr:.2e}")),
+    ]
+
+
 ALL_KERNELS = [bench_matmul_traffic, bench_conv_traffic,
-               bench_conv_batch_fold, bench_kernel_walltime]
+               bench_conv_batch_fold, bench_kernel_walltime,
+               bench_conv_compiled]

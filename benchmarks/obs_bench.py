@@ -173,11 +173,12 @@ def bench_obs_kernel_gbps():
 
     rows = []
 
-    def conv_row(tag, x, w):
+    def conv_row(tag, x, w, target=None):
         tr = Tracer()
-        conv2d_lb_timed(x, w, padding=1, tracer=tr)    # compile+warm
+        kw = {} if target is None else {"target": target}
+        conv2d_lb_timed(x, w, padding=1, tracer=tr, **kw)  # warm
         for _ in range(3):
-            conv2d_lb_timed(x, w, padding=1, tracer=tr)
+            conv2d_lb_timed(x, w, padding=1, tracer=tr, **kw)
         sps = tr.find(name="kernel.conv2d_lb")[-3:]
         us = sum(s.attrs["us"] for s in sps) / len(sps)
         gbps = sum(s.attrs["achieved_gbps"] for s in sps) / len(sps)
@@ -189,6 +190,13 @@ def bench_obs_kernel_gbps():
     conv_row("conv_lb_48",
              jax.random.normal(jax.random.PRNGKey(0), (1, 48, 48, 8)),
              jax.random.normal(jax.random.PRNGKey(1), (3, 3, 8, 16)))
+    # compiled (interpret=False) achieved-GB/s on the mosaic-legal
+    # geometry: the bytes-vs-seconds pipeline over a *compiled* kernel
+    conv_row("conv_lb_8x128_compiled",
+             jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8, 128)),
+             jax.random.normal(jax.random.PRNGKey(1),
+                               (3, 3, 128, 128)) * 0.05,
+             target="compiled")
 
     x = jax.random.normal(jax.random.PRNGKey(0), (256, 256))
     w = jax.random.normal(jax.random.PRNGKey(1), (256, 256))

@@ -15,7 +15,16 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON to PATH "
                          "(e.g. BENCH_2.json)")
+    ap.add_argument("--target", default=None,
+                    choices=("interpret", "compiled", "lax",
+                             "account-only"),
+                    help="execution target for the kernel walltime "
+                         "benches (default: interpret)")
     args = ap.parse_args()
+
+    if args.target:
+        import benchmarks.kernel_bench as kernel_bench
+        kernel_bench.WALLTIME_TARGET = args.target
 
     from benchmarks.kernel_bench import ALL_KERNELS
     from benchmarks.obs_bench import ALL_OBS

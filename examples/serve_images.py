@@ -37,7 +37,12 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--image", type=int, default=16)
     ap.add_argument("--width-mult", type=float, default=0.08)
-    ap.add_argument("--account-only", action="store_true")
+    ap.add_argument("--target", default=None,
+                    choices=("interpret", "compiled", "lax",
+                             "account-only"),
+                    help="execution backend (default: interpret)")
+    ap.add_argument("--account-only", action="store_true",
+                    help="deprecated alias for --target account-only")
     ap.add_argument("--deadline", type=float, default=None,
                     help="per-request latency budget (seconds); "
                          "routes through the fault-tolerant loop")
@@ -56,13 +61,16 @@ def main():
     else:
         graph = None
         params = init_vgg(key, n_classes=10, width_mult=args.width_mult)
+    target = args.target or ("account-only" if args.account_only
+                             else "interpret")
+    account_only = target == "account-only"
     tracer = None
     if args.trace:
         from repro.obs import Tracer
         tracer = Tracer()
     server = ImageServer(params, args.image, args.image, graph=graph,
                          buckets=(1, 2, 4), wait_budget=0.01,
-                         compute=not args.account_only, tracer=tracer)
+                         target=target, tracer=tracer)
     loop = None
     if args.deadline is not None or args.fault_plan is not None:
         plan = FaultPlan.parse(args.fault_plan) if args.fault_plan \
@@ -75,7 +83,7 @@ def main():
     for rid in range(args.requests):
         k = jax.random.fold_in(key, rid)
         n = 1 + rid % 2                       # mixed 1- and 2-image requests
-        imgs = None if args.account_only else jax.random.normal(
+        imgs = None if account_only else jax.random.normal(
             k, (n, args.image, args.image, 3))
         if loop is not None:
             loop.submit(imgs, n_images=n if imgs is None else None)

@@ -41,6 +41,11 @@ def main():
     ap.add_argument("--lr", type=float, default=0.08)
     ap.add_argument("--budget-kib", type=int, default=1024,
                     help="on-chip accounting budget for the bound")
+    ap.add_argument("--target", default="interpret",
+                    choices=("interpret", "compiled", "lax"),
+                    help="execution backend for the training step "
+                         "(compiled runs the Pallas kernels with "
+                         "interpret=False)")
     ap.add_argument("--paper-scale", action="store_true",
                     help="also report the account-only VGG16/224x224 "
                          "training-step economics")
@@ -80,7 +85,7 @@ def main():
         @jax.jit
         def step(p):
             loss, g = jax.value_and_grad(
-                lambda q: vgg_loss(q, batch, use_kernel=True))(p)
+                lambda q: vgg_loss(q, batch, args.target))(p)
             return loss, jax.tree_util.tree_map(
                 lambda a, b: a - args.lr * b, p, g)
 
@@ -97,7 +102,7 @@ def main():
                   f"[{rep['bytes_per_step'] / 1e6:.2f} MB accounted, "
                   f"{rep['train_vs_bound_x']:.3f}x bound]")
         print(f"{args.steps} steps in {time.time() - t0:.2f}s "
-              f"(interpret-mode kernel fwd + planned dgrad)")
+              f"({args.target}-target kernel fwd + planned dgrad)")
 
         if args.paper_scale:
             big = init_vgg(key, n_classes=10, width_mult=1.0)

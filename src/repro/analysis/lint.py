@@ -42,6 +42,13 @@ instrumented code takes ``tracer=`` or scopes the swap with
 ``with tracer.activate():``, so no module can leave a global tracer
 installed behind a test's back.
 
+``L007`` No raw ``interpret=`` / ``use_kernel=`` keyword at a *call
+site* outside ``src/repro/kernels/``: the execution backend is a
+first-class :class:`~repro.core.exec_target.ExecTarget` — callers pass
+``target=`` and let the kernel wrappers own the raw flag.  The
+sanctioned adapter :func:`~repro.core.exec_target.from_flags` (the one
+place legacy booleans become a target) is exempt by callee name.
+
 ``L004`` No obviously 0-d value returned from a ``shard_map`` body:
 scalar residuals crossing a differentiated ``shard_map`` break jax
 0.4.x's transpose (``_SpecError`` under ``grad``) — bodies must keep
@@ -70,16 +77,20 @@ LINT_RULES = {
     "L004": "provably 0-d value returned from a shard_map body",
     "L005": "bare wall-clock/sleep call in serve/runtime (inject clock=)",
     "L006": "bare clock in obs/, or set_active tracer mutation outside obs/",
+    "L007": "interpret=/use_kernel= kwarg passed outside src/repro/kernels/",
 }
 
 #: path fragments (posix) that exempt a file from a rule
 _ALLOW = {
     "L001": ("parallel/compat.py",),
     "L002": ("_hypothesis_compat.py",),
-    "L003": ("/kernels/",),
+    "L003": ("/kernels/", "core/exec_target.py"),
     "L004": (),
     "L005": (),
     "L006": (),
+    # exec_target.py *defines* the backend abstraction — its singleton
+    # constructors are the one place the raw flags are spelled out
+    "L007": ("/kernels/", "core/exec_target.py"),
 }
 
 #: path fragments marking the observability package (L006's pivot:
@@ -272,6 +283,14 @@ class _Linter(ast.NodeVisitor):
                        "set_active() mutates the ambient tracer "
                        "outside obs/ — pass tracer= or scope it "
                        "with `with tracer.activate():`")
+        if chain.rpartition(".")[2] != "from_flags":
+            for kw in node.keywords:
+                if kw.arg in ("interpret", "use_kernel"):
+                    self._emit("L007", node.lineno,
+                               f"{kw.arg}= passed at a call site — "
+                               "pass target= (an ExecTarget) instead; "
+                               "raw backend kwargs live under "
+                               "src/repro/kernels/ only")
         if (chain == "shard_map" or chain.endswith(".shard_map")) \
                 and node.args:
             for line, expr in self._body_returns(node.args[0]):
@@ -319,7 +338,9 @@ def lint_paths(paths) -> list[Finding]:
 def lint_repo(root: str | Path | None = None) -> list[Finding]:
     """Lint every tracked source tree of the repo."""
     root = Path(root) if root is not None else repo_root()
-    trees = [root / d for d in ("src", "models", "tests", "benchmarks")]
+    trees = [root / d
+             for d in ("src", "models", "tests", "benchmarks",
+                       "examples")]
     return lint_paths([t for t in trees if t.is_dir()])
 
 

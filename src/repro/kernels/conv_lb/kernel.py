@@ -153,6 +153,11 @@ def conv_lb_call(x: jax.Array, w: jax.Array, *,
     if residual is not None:
         assert residual.shape == (b, ho, wo, co), (residual.shape,
                                                    (b, ho, wo, co))
+    if not interpret and jax.default_backend() == "cpu":
+        # no TPU attached: compiled mode runs through the straight-line
+        # XLA lowering instead of raising "interpret only on CPU"
+        from repro.kernels.pallas_cpu import ensure_compiled_cpu
+        ensure_compiled_cpu()
     kern = functools.partial(_conv_kernel, nci=nci, hk=hk, wk=wk,
                              bb=b_block, ty=y_block, tx=x_block,
                              stride=stride, dilation=dilation,

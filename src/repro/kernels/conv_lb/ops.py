@@ -65,6 +65,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dataflow import Traffic
+from repro.core.exec_target import resolve_target
 from repro.core.layer import ceil_div
 from repro.core.tpu_adapter import (VMEM_BYTES, ConvBlockShape,
                                     balanced_tile, conv_block_candidates,
@@ -113,6 +114,10 @@ class ConvPlan:
     # streams one pre-pool output-shaped read per psum tile (accounted
     # in traffic()), and the bound gains the join's mandatory read
     residual: bool = False
+    # the plan_check legality profile this plan was planned (and, when
+    # auto-chosen, verified) for — "interpret" or "mosaic"; an
+    # ExecTarget.COMPILED execution requires a mosaic-target plan
+    target: str = "interpret"
 
     @property
     def grid(self) -> tuple[int, int, int, int]:
@@ -168,7 +173,7 @@ class ConvPlan:
 
     def explain(self, *, batch: int = 1, dtype_bytes: int = 4,
                 vmem_budget: int | None = None,
-                target: str = "interpret") -> str:
+                target: str | None = None) -> str:
         """Human-readable account of this plan: block geometry, grid,
         VMEM working set, per-operand traffic split, and every
         :class:`~repro.analysis.plan_check.Diagnostic` the static
@@ -179,6 +184,7 @@ class ConvPlan:
                                                format_diagnostics)
         from repro.core.tpu_adapter import VMEM_BYTES as _VMEM
 
+        target = self.target if target is None else target
         budget = _VMEM // 2 if vmem_budget is None else vmem_budget
         blk = self.blocks
         pinned = blk.ci >= self.ci_pad and blk.co >= self.co_pad
@@ -464,12 +470,14 @@ def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
     Eq. (15) comparisons are evaluated at).
 
     ``target`` names the :mod:`repro.analysis.plan_check` legality
-    profile the plan must satisfy.  Auto-chosen plans (``blocks=None``)
-    are verified before being returned — a failing plan raises
-    :class:`~repro.analysis.plan_check.PlanLegalityError` instead of
-    silently entering the LRU cache.  Explicit ``blocks`` overrides
-    are the caller's contract and bypass the gate (tests deliberately
-    probe odd shapes)."""
+    profile the plan must satisfy, and the returned plan *remembers
+    it* (``ConvPlan.target``) — an ``ExecTarget.COMPILED`` execution
+    only trusts a mosaic-target plan.  Auto-chosen plans
+    (``blocks=None``) are verified before being returned — a failing
+    plan raises :class:`~repro.analysis.plan_check.PlanLegalityError`
+    instead of silently entering the LRU cache.  Explicit ``blocks``
+    overrides are the caller's contract and bypass the gate (tests
+    deliberately probe odd shapes)."""
     sy, sx = _pair(stride)
     py, px = _pair(padding)
     dy, dx = _pair(dilation)
@@ -520,7 +528,7 @@ def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
                     stride=(sy, sx), dilation=(dy, dx), pool=pool,
                     hk=hk, wk=wk,
                     h=h, w=w, ci=ci, co=co, py=py, px=px,
-                    residual=residual)
+                    residual=residual, target=target)
     if auto:
         from repro.analysis.plan_check import (PlanLegalityError,
                                                check_conv_plan, errors)
@@ -866,6 +874,7 @@ def _lax_epilogue(y, bias, relu, pool, residual=None):
 @partial(jax.jit, static_argnames=("stride", "padding", "dilation",
                                    "groups", "relu", "pool",
                                    "interpret", "fallback", "autotune",
+                                   "target",
                                    "b_block", "y_block", "x_block",
                                    "ci_block", "co_block"))
 def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
@@ -876,7 +885,7 @@ def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
               y_block: int | None = None, x_block: int | None = None,
               ci_block: int | None = None, co_block: int | None = None,
               interpret: bool = True, autotune: bool = True,
-              fallback: bool = False) -> jax.Array:
+              fallback: bool = False, target=None) -> jax.Array:
     """NHWC conv through the paper-dataflow batch-folded tiled kernel.
 
     x: (B, H, W, Ci); w: (Hk, Wk, Ci/groups, Co)
@@ -893,6 +902,17 @@ def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
     routes through ``lax.conv_general_dilated`` + the unfused epilogue
     (same math, XLA's schedule).
 
+    ``target`` (an :class:`~repro.core.exec_target.ExecTarget` or its
+    name) is the first-class way to choose the backend and overrides
+    the legacy ``interpret``/``fallback`` booleans: ``COMPILED`` plans
+    at the mosaic legality profile and runs
+    ``pallas_call(interpret=False)``; a geometry with no mosaic-legal
+    plan (or a grid too large for the unrolled CPU lowering) degrades
+    *loudly* to the lax path — a traced ``exec.fallback`` event, never
+    a silent interpreter run.  The backward pass inherits the target;
+    its dgrad conv re-negotiates per-layer (the dgrad geometry may be
+    mosaic-legal when the forward is not, and vice versa).
+
     Differentiable, with a *planned* backward: for unit-stride
     ungrouped layers (the whole VGG stack) dx is computed by the
     batch-folded Pallas kernel itself — the dgrad conv of dy against
@@ -903,6 +923,14 @@ def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
     the ``lax`` VJP wholesale but remain planned and accounted through
     the same handles.
     """
+    tgt = None if target is None else resolve_target(target)
+    if tgt is not None:
+        if not tgt.compute:
+            raise ValueError("account-only target cannot execute a "
+                             "conv; plan/account via conv_lb_traffic "
+                             "or serve through an account-only server")
+        fallback = not tgt.kernel
+        interpret = tgt.interpret
     sy, sx = _pair(stride)
     py, px = _pair(padding)
     dy, dx = _pair(dilation)
@@ -920,11 +948,30 @@ def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
     if fallback:
         return _lax_full(x, w, bias, residual)
 
-    plan = plan_conv(h, wd, ci_g, co // groups, hk, wk, batch=b,
-                     stride=(sy, sx), padding=(py, px),
-                     dilation=(dy, dx), pool=pool,
-                     residual=residual is not None,
-                     dtype_bytes=x.dtype.itemsize, autotune=autotune)
+    plan_target = tgt.plan_target if tgt is not None else "interpret"
+
+    def _loud_fallback(reason: str) -> jax.Array:
+        # a COMPILED request this geometry can't honor degrades to lax
+        # with a traced event — never to a silent interpreter run
+        active_tracer().event("exec.fallback",
+                              target=tgt.name, to="lax",
+                              layer=f"{ci}->{co}k{hk}x{wk}",
+                              reason=reason)
+        return _lax_full(x, w, bias, residual)
+
+    try:
+        plan = plan_conv(h, wd, ci_g, co // groups, hk, wk, batch=b,
+                         stride=(sy, sx), padding=(py, px),
+                         dilation=(dy, dx), pool=pool,
+                         residual=residual is not None,
+                         dtype_bytes=x.dtype.itemsize,
+                         autotune=autotune, target=plan_target)
+    except Exception as e:
+        from repro.analysis.plan_check import PlanLegalityError
+        if plan_target == "interpret" or not isinstance(
+                e, PlanLegalityError):
+            raise
+        return _loud_fallback("no mosaic-legal plan under the budget")
     if any(v is not None for v in (b_block, y_block, x_block,
                                    ci_block, co_block)):
         bk = plan.blocks
@@ -942,7 +989,28 @@ def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
         plan = plan_conv(h, wd, ci_g, co // groups, hk, wk, batch=b,
                          stride=(sy, sx), padding=(py, px),
                          dilation=(dy, dx), pool=pool,
-                         residual=residual is not None, blocks=override)
+                         residual=residual is not None, blocks=override,
+                         target=plan_target)
+        if plan_target != "interpret":
+            # explicit overrides bypass plan_conv's gate; a compiled
+            # execution still refuses (loudly) to run an illegal shape
+            from repro.analysis.plan_check import (check_conv_plan,
+                                                   errors)
+            diags = check_conv_plan(plan, batch=b,
+                                    dtype_bytes=x.dtype.itemsize,
+                                    target=plan_target)
+            if errors(diags):
+                return _loud_fallback(
+                    "explicit blocks are not mosaic-legal")
+    if tgt is not None and not tgt.interpret \
+            and jax.default_backend() == "cpu":
+        from repro.kernels.pallas_cpu import (COMPILED_MAX_GRID_STEPS,
+                                              grid_steps)
+        steps = ceil_div(b, plan.blocks.b) * grid_steps(plan.grid)
+        if steps > COMPILED_MAX_GRID_STEPS:
+            return _loud_fallback(
+                f"grid of {steps} steps exceeds the unrolled CPU "
+                f"lowering budget ({COMPILED_MAX_GRID_STEPS})")
     co_g = co // groups
 
     def _run(x, w, bias, residual):
@@ -987,10 +1055,12 @@ def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
         gy, db, dres = epi_vjp(g)
         # 2) dgrad through the planned kernel: dy * flipped weights at
         #    full padding rides the same batch-folded u x z dataflow
+        # the dgrad conv re-negotiates the target per-layer: its
+        # geometry may be mosaic-legal when the forward is not
         gx = conv2d_lb(gy, _flip_w(w), None, stride=1,
                        padding=((hk - 1) * dy - py, (wk - 1) * dx - px),
                        dilation=(dy, dx), interpret=interpret,
-                       autotune=autotune)
+                       autotune=autotune, target=tgt)
         # 3) wgrad via the exact lax counterpart (accounted off
         #    plan_conv_wgrad; kernel execution is a ROADMAP follow-up)
         _, w_vjp = jax.vjp(
@@ -1008,7 +1078,7 @@ def conv2d_lb_timed(x: jax.Array, w: jax.Array,
                     *, stride=1, padding=0, dilation=1,
                     groups: int = 1, relu: bool = False, pool: int = 1,
                     interpret: bool = True, autotune: bool = True,
-                    fallback: bool = False,
+                    fallback: bool = False, target=None,
                     tracer=None, clock=None,
                     name: str = "kernel.conv2d_lb") -> jax.Array:
     """:func:`conv2d_lb` with a synced, *accounted* span around the
@@ -1022,7 +1092,14 @@ def conv2d_lb_timed(x: jax.Array, w: jax.Array,
     get ``time.perf_counter`` semantics.  The span fires for the
     kernel path *and* the lax fallback (``mode`` attr tells them
     apart); accounting is identical — the plan charges the dataflow,
-    not the executor."""
+    not the executor.  ``target`` (an
+    :class:`~repro.core.exec_target.ExecTarget` or name) supersedes
+    the ``interpret``/``fallback`` booleans and names the span's
+    ``mode``; the accounted bytes come from the plan at the target's
+    legality profile (the dataflow actually executed)."""
+    from repro.analysis.plan_check import PlanLegalityError
+
+    tgt = None if target is None else resolve_target(target)
     tr = active_tracer() if tracer is None else tracer
     clk = tr.now if clock is None else clock
     sy, sx = _pair(stride)
@@ -1030,21 +1107,32 @@ def conv2d_lb_timed(x: jax.Array, w: jax.Array,
     dy, dx = _pair(dilation)
     b, h, wd, ci = x.shape
     hk, wk, ci_g, co = w.shape
-    plan = plan_conv(h, wd, ci_g, co // groups, hk, wk, batch=b,
-                     stride=(sy, sx), padding=(py, px),
-                     dilation=(dy, dx), pool=pool,
-                     residual=residual is not None,
-                     dtype_bytes=x.dtype.itemsize, autotune=autotune)
+    plan_kw = dict(batch=b, stride=(sy, sx), padding=(py, px),
+                   dilation=(dy, dx), pool=pool,
+                   residual=residual is not None,
+                   dtype_bytes=x.dtype.itemsize, autotune=autotune)
+    try:
+        plan = plan_conv(h, wd, ci_g, co // groups, hk, wk,
+                         target=tgt.plan_target if tgt is not None
+                         else "interpret", **plan_kw)
+    except PlanLegalityError:
+        # execution will degrade to lax; account the interpret-profile
+        # dataflow (the words any planned schedule at least moves)
+        plan = plan_conv(h, wd, ci_g, co // groups, hk, wk, **plan_kw)
+    if tgt is not None:
+        mode = tgt.name
+    else:
+        mode = "lax" if fallback else "kernel"
     n_bytes = groups * plan.traffic_bytes(b, dtype_bytes=x.dtype.itemsize)
     with tr.span(name, layer=f"{ci}->{co}k{hk}x{wk}",
-                 mode="lax" if fallback else "kernel",
+                 mode=mode,
                  batch=b, traffic_bytes=n_bytes) as sp:
         t0 = clk()
         out = conv2d_lb(x, w, bias, residual, stride=stride,
                         padding=padding, dilation=dilation,
                         groups=groups, relu=relu, pool=pool,
                         interpret=interpret, autotune=autotune,
-                        fallback=fallback)
+                        fallback=fallback, target=tgt)
         out = jax.block_until_ready(out)
         dt = clk() - t0
         sp.set(us=dt * 1e6,

@@ -1,0 +1,183 @@
+"""Compiled (``interpret=False``) execution of Pallas kernels on CPU.
+
+Stock JAX 0.4.x refuses ``pallas_call(interpret=False)`` on the CPU
+backend ("Only interpret mode is supported on CPU backend") — so every
+wall-clock number this repo could produce so far measured the
+*interpreter*: a ``lax.while_loop`` over grid steps, each step paying
+dynamic-slice/masking machinery per block, opaque to XLA fusion.
+
+This module registers a CPU platform lowering for ``pallas_call_p``
+that compiles the kernel's grid schedule to straight-line XLA instead:
+
+  * the grid is static, so the grid walk is unrolled at trace time
+    (``itertools.product``, last axis fastest — the same order as
+    interpret mode's ``_get_next_indices``, which the psum
+    accumulation across the innermost ``ci`` axis depends on);
+  * the kernel jaxpr's Refs are discharged once
+    (``state_discharge.discharge_state``) and evaluated per step on
+    statically-shaped blocks, with scratch threaded through the steps
+    as loop carries;
+  * ``Unblocked``-with-padding specs (the conv halo) become one
+    ``lax.pad`` before the walk and one ``lax.slice`` after.
+
+XLA then sees ordinary adds/dots/dynamic-slices with static indices
+and fuses across grid steps — on the repo's conv geometry this is
+~2x faster than the interpreter wall clock, with bit-identical
+results.  It is *not* Mosaic and says nothing about TPU performance;
+it is the honest "compiled where no TPU is attached" rung of
+``ExecTarget.COMPILED``, so compiled-vs-interpret speedups and
+compiled-vs-lax numerics are measurable on any host.
+
+Because the walk is unrolled, program size grows linearly with the
+number of grid steps; :data:`COMPILED_MAX_GRID_STEPS` is the guard
+callers check before choosing this path (beyond it, ops fall back to
+lax with a traced event rather than melting the compiler).
+
+Scope guards (raise ``NotImplementedError``): dynamic grid bounds and
+scalar-prefetch operands — none of the repo's kernels use either.
+"""
+
+from __future__ import annotations
+
+import functools
+import itertools
+
+import jax.numpy as jnp
+from jax import lax
+from jax._src import core as jax_core
+from jax._src.interpreters import mlir
+from jax._src.pallas import core as pallas_core
+from jax._src.pallas import pallas_call as _pc
+from jax._src.state import discharge as state_discharge
+
+#: Grid-step budget for the unrolled CPU lowering.  Each step adds one
+#: discharged-jaxpr evaluation to the XLA program, so compile time and
+#: program size scale linearly; past ~1k steps the compile dominates
+#: any runtime win.  Ops gate on this *before* building the call so
+#: oversized grids degrade loudly to lax instead of hanging in XLA.
+COMPILED_MAX_GRID_STEPS = 1024
+
+#: Number of pallas_call lowerings that took the compiled (non-
+#: interpret) path since process start.  Tests assert this moves to
+#: prove a geometry really compiled rather than silently interpreting.
+COMPILED_CALLS = 0
+
+_registered = False
+
+
+def _compiled_impl(*args, jaxpr, grid_mapping, input_output_aliases,
+                   **_params):
+    global COMPILED_CALLS
+    COMPILED_CALLS += 1
+    if grid_mapping.num_dynamic_grid_bounds:
+        raise NotImplementedError(
+            "compiled CPU pallas lowering: dynamic grid bounds")
+    if grid_mapping.num_index_operands:
+        raise NotImplementedError(
+            "compiled CPU pallas lowering: scalar prefetch operands")
+    grid = tuple(int(g) for g in grid_mapping.grid)
+    with grid_mapping.trace_env():
+        djaxpr, dconsts = state_discharge.discharge_state(jaxpr, ())
+    out = _pc._initialize_output_vals(grid_mapping.block_mappings_output,
+                                      args, input_output_aliases)
+    block_args = list(args)
+    scratch_invars = jaxpr.invars[grid_mapping.slice_scratch_ops]
+    scratch_avals = [v.aval for v in scratch_invars]
+    scratch = list(_pc._initialize_scratch_vals(tuple(scratch_avals)))
+
+    # materialize Unblocked halo padding once, ahead of the grid walk
+    carry = []
+    for x, bm in zip(itertools.chain(block_args, out),
+                     grid_mapping.block_mappings):
+        if isinstance(bm.indexing_mode, pallas_core.Unblocked):
+            padding = bm.indexing_mode.padding
+            if padding is not None and any(p != (0, 0) for p in padding):
+                x = lax.pad(x, jnp.zeros((), x.dtype),
+                            [(*p, 0) for p in padding])
+        carry.append(x)
+    is_indexing_dim = [
+        tuple(b is pallas_core.mapped for b in bm.block_shape)
+        for bm in grid_mapping.block_mappings]
+    block_shapes = [
+        tuple(1 if i else b for i, b in zip(iid, bm.block_shape))
+        for iid, bm in zip(is_indexing_dim, grid_mapping.block_mappings)]
+    carry = list(map(_pc._pad_values_to_block_dimension, carry,
+                     block_shapes))
+
+    n_in = len(block_args)
+    n_blocks = n_in + len(out)
+    # static unroll: last grid axis fastest, matching interpret mode's
+    # _get_next_indices so innermost-axis psum accumulation is ordered
+    # identically
+    for loop_idx in itertools.product(*(range(g) for g in grid)):
+        if grid_mapping.local_grid_env is not None:
+            env = grid_mapping.local_grid_env(loop_idx, grid)
+        else:
+            env = tuple(
+                pallas_core.GridAxis(idx, b)
+                for dim, (idx, b) in enumerate(zip(loop_idx, grid))
+                if dim not in grid_mapping.vmapped_dims)
+        with pallas_core.grid_env(env):
+            starts = [bm.compute_start_indices_interpret(loop_idx)
+                      for bm in grid_mapping.block_mappings]
+            blocks = [lax.dynamic_slice(c, tuple(s), bs)
+                      if bs is not None else c
+                      for c, s, bs in zip(carry, starts, block_shapes)]
+            blocks = [lax.squeeze(b, [i for i, d in enumerate(iid) if d])
+                      if any(iid) else b
+                      for b, iid in zip(blocks, is_indexing_dim)]
+            res = jax_core.eval_jaxpr(djaxpr, dconsts, *blocks, *scratch)
+        out_blocks, scratch = res[:n_blocks], list(res[n_blocks:])
+        for i in range(n_in, n_blocks):
+            b, iid = out_blocks[i], is_indexing_dim[i]
+            if any(iid):
+                b = lax.expand_dims(b, [k for k, d in enumerate(iid) if d])
+            carry[i] = lax.dynamic_update_slice(carry[i], b,
+                                                tuple(starts[i]))
+
+    outs = []
+    for o, bm in zip(carry[n_in:n_blocks],
+                     grid_mapping.block_mappings_output):
+        if isinstance(bm.indexing_mode, pallas_core.Unblocked):
+            padding = bm.indexing_mode.padding
+            if padding is not None and any(p != (0, 0) for p in padding):
+                lo, hi = zip(*padding)
+                o = lax.slice(o, lo,
+                              [s - p for s, p in zip(o.shape, hi)])
+        if o.shape != bm.array_shape_dtype.shape:
+            o = lax.slice(o, (0,) * o.ndim, bm.array_shape_dtype.shape)
+        outs.append(o)
+    return outs
+
+
+def _cpu_lowering(ctx, *in_nodes, interpret, backend=None, **params):
+    if interpret:
+        impl = functools.partial(_pc._pallas_call_impl_interpret, **params)
+    else:
+        impl = functools.partial(_compiled_impl, **params)
+    return mlir.lower_fun(impl, multiple_results=True)(ctx, *in_nodes)
+
+
+def ensure_compiled_cpu() -> None:
+    """Idempotently register the compiled CPU lowering for
+    ``pallas_call_p``.  Platform-specific rules take precedence over
+    the stock generic rule, so ``interpret=True`` calls are unchanged
+    (delegated to the stock interpret impl) and ``interpret=False``
+    stops raising and compiles.  Kernel wrappers call this right
+    before building a non-interpret ``pallas_call``; it is a no-op
+    after the first call."""
+    global _registered
+    if _registered:
+        return
+    mlir.register_lowering(_pc.pallas_call_p, _cpu_lowering,
+                           platform="cpu")
+    _registered = True
+
+
+def grid_steps(grid) -> int:
+    """Total step count of a static grid (the unroll length the
+    compiled CPU lowering would pay)."""
+    n = 1
+    for g in grid:
+        n *= int(g)
+    return n

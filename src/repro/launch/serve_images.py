@@ -51,11 +51,18 @@ def main() -> None:
                     help="deadline flush budget for partial buckets")
     ap.add_argument("--budget-kib", type=int, default=1024,
                     help="on-chip accounting budget (ledger scale)")
+    ap.add_argument("--target", default=None,
+                    choices=("interpret", "compiled", "lax",
+                             "account-only"),
+                    help="execution backend: interpret (Pallas "
+                         "interpreter, the default), compiled "
+                         "(interpret=False Pallas), lax (XLA "
+                         "reference), account-only (plan + ledger, "
+                         "no compute)")
     ap.add_argument("--account-only", action="store_true",
-                    help="plan + account without executing pipelines")
+                    help="deprecated alias for --target account-only")
     ap.add_argument("--no-kernel", action="store_true",
-                    help="run the lax fallback instead of the "
-                         "Pallas kernel path")
+                    help="deprecated alias for --target lax")
     ap.add_argument("--deadline", type=float, default=None,
                     metavar="SECONDS",
                     help="serve through the fault-tolerant ServingLoop "
@@ -84,12 +91,16 @@ def main() -> None:
         graph = None
         params = init_vgg(key, n_classes=args.classes,
                           width_mult=args.width_mult)
+    target = args.target or ("account-only" if args.account_only
+                             else "lax" if args.no_kernel
+                             else "interpret")
+    account_only = target == "account-only"
     fault_tolerant = (args.deadline is not None
                       or args.fault_plan is not None)
     # account-only fault-tolerant runs ride a virtual clock so
     # injected delays and backoff waits are free; compute runs keep
     # real time (the pipeline cost is the point)
-    clock = VirtualClock() if fault_tolerant and args.account_only \
+    clock = VirtualClock() if fault_tolerant and account_only \
         else None
     tracer = None
     if args.trace:
@@ -102,8 +113,7 @@ def main() -> None:
                          buckets=args.buckets,
                          wait_budget=args.wait_ms / 1e3,
                          account_budget=args.budget_kib * 1024,
-                         use_kernel=not args.no_kernel,
-                         compute=not args.account_only,
+                         target=target,
                          tracer=tracer,
                          **({"clock": clock} if clock else {}))
     loop = None
@@ -120,7 +130,7 @@ def main() -> None:
     for rid in range(args.requests):
         k = jax.random.fold_in(key, 1000 + rid)
         n = 1 + int(jax.random.randint(k, (), 0, max_req))
-        imgs = None if args.account_only else jax.random.normal(
+        imgs = None if account_only else jax.random.normal(
             k, (n, args.image, args.image, 3))
         if loop is not None:
             loop.submit(imgs, n_images=n if imgs is None else None)

@@ -145,22 +145,24 @@ def vgg_training_step_report(params, h: int, w: int, *, batch: int,
         dtype_bytes=dtype_bytes, vmem_budget=vmem_budget, strict=False)
 
 
-def vgg_forward(params, images, use_kernel: bool = False):
+def vgg_forward(params, images, target=None):
     """images: (B, H, W, 3) -> logits (B, n_classes).
 
     Batch-polymorphic: the kernel path re-plans (memoized) per arrival
     batch, so a serving bucket of b images folds straight into the
-    kernel's ``b_block`` tiling dimension.  With ``use_kernel`` the
-    conv layers run the batch-folded Pallas kernel with the
-    bias/relu/(2x2 maxpool) epilogue *fused*: each layer issues a
-    single HBM output write instead of the unfused
+    kernel's ``b_block`` tiling dimension.  ``target`` (an
+    :class:`~repro.core.exec_target.ExecTarget` or name; default
+    ``LAX``) picks the backend: under a kernel target the conv layers
+    run the batch-folded Pallas kernel with the bias/relu/(2x2
+    maxpool) epilogue *fused* — each layer issues a single HBM output
+    write instead of the unfused
     ``conv-write -> read -> bias/relu/pool -> write`` round trip."""
     return graph_logits(vgg_graph(params), params, images,
-                        use_kernel=use_kernel, strict=False)
+                        target=target, strict=False)
 
 
-def vgg_loss(params, batch, use_kernel: bool = False):
-    logits = vgg_forward(params, batch["images"], use_kernel)
+def vgg_loss(params, batch, target=None):
+    logits = vgg_forward(params, batch["images"], target)
     labels = batch["labels"]
     logp = jax.nn.log_softmax(logits.astype(jnp.float32))
     nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)
@@ -223,11 +225,11 @@ def init_resnet(key, graph: ConvGraph | None = None,
                       dtype=dtype)
 
 
-def resnet_forward(graph: ConvGraph, params, images,
-                   use_kernel: bool = False):
+def resnet_forward(graph: ConvGraph, params, images, target=None):
     """images: (B, H, W, in_ch) -> logits — :func:`graph_logits` over a
-    ResNet graph (residual joins fused on the kernel path)."""
-    return graph_logits(graph, params, images, use_kernel=use_kernel)
+    ResNet graph (residual joins fused on the kernel path); ``target``
+    selects the execution backend."""
+    return graph_logits(graph, params, images, target=target)
 
 
 __all__ = [

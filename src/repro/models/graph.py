@@ -194,28 +194,38 @@ def init_graph(key, graph: ConvGraph, n_classes: int = 10,
 
 
 def graph_forward(graph: ConvGraph, conv_params, x, *,
-                  use_kernel: bool = False, strict: bool = True,
+                  target=None, strict: bool = True,
                   tracer=None):
     """Execute the graph on ``x`` (B, H, W, Ci) -> (B, H', W', Co).
 
     ``conv_params`` aligns with ``graph.nodes`` (``{"w": ..., "b":}``
-    per node).  With ``use_kernel`` every conv runs the batch-folded
+    per node).  ``target`` (an
+    :class:`~repro.core.exec_target.ExecTarget` or name; default
+    ``LAX``) picks the backend for every conv: under a kernel target
+    (``interpret``/``compiled``) each conv runs the batch-folded
     Pallas kernel with its epilogue *fused* — bias, the residual join
     (added on the VMEM-resident psum tile, so the shortcut costs one
     streamed read instead of an extra HBM round trip), ReLU and an
     aligned pool; non-pool-aligned planes take the rare unfused pool.
-    The lax path rides ``conv2d_lb(fallback=True)`` — the kernel
-    module's single reference implementation (f32-accumulating conv +
-    unfused epilogue), so the two paths can never drift apart.
+    ``LAX`` rides ``conv2d_lb``'s reference path (f32-accumulating
+    conv + unfused epilogue), so the two paths can never drift apart;
+    a ``compiled`` layer with no mosaic-legal plan degrades to it
+    per-layer with a traced event.
 
     ``tracer`` (default: the ambient tracer) records one synced
     per-layer span — seconds *and* the plan's accounted bytes — but
     only when executing eagerly: inside a jit trace spans would time
     tracing, not running, so instrumentation turns itself off."""
+    from repro.core.exec_target import LAX, resolve_target
     from repro.kernels.conv_lb.ops import conv2d_lb, conv2d_lb_timed
     from repro.obs.tracer import NULL_SPAN as _NULL_CTX
     from repro.obs.tracer import active_tracer
 
+    tgt = resolve_target(target, default=LAX)
+    if not tgt.compute:
+        raise ValueError("graph_forward executes the graph; an "
+                         "account-only target belongs to the serve "
+                         "ledger, not here")
     tr = active_tracer() if tracer is None else tracer
     # per-layer timing is only honest outside a jit trace
     timing = tr.active and not isinstance(x, jax.core.Tracer)
@@ -225,8 +235,7 @@ def graph_forward(graph: ConvGraph, conv_params, x, *,
     prev = GRAPH_INPUT
     out = x
     fwd_span = (tr.span("graph.forward", model=graph.name,
-                        batch=x.shape[0],
-                        mode="kernel" if use_kernel else "lax")
+                        batch=x.shape[0], mode=tgt.name)
                 if timing else _NULL_CTX)
     with fwd_span:
         for p, st in zip(conv_params, stages):
@@ -238,7 +247,7 @@ def graph_forward(graph: ConvGraph, conv_params, x, *,
             kw = dict(stride=node.stride, padding=node.pad,
                       groups=node.groups, relu=node.relu,
                       pool=st.pool if st.fused_pool else 1,
-                      fallback=not use_kernel)
+                      target=tgt)
             if timing:
                 with tr.span("graph.layer", layer=node.name,
                              model=graph.name):
@@ -257,12 +266,13 @@ def graph_forward(graph: ConvGraph, conv_params, x, *,
 
 
 def graph_logits(graph: ConvGraph, params, images, *,
-                 use_kernel: bool = False, strict: bool = True):
+                 target=None, strict: bool = True):
     """Full classification forward: graph features, global mean pool,
     linear head — ``params`` from :func:`init_graph` (or any pytree of
-    the same ``{"convs", "head"}`` shape)."""
+    the same ``{"convs", "head"}`` shape).  ``target`` selects the
+    execution backend exactly as in :func:`graph_forward`."""
     h = graph_forward(graph, params["convs"], images,
-                      use_kernel=use_kernel, strict=strict)
+                      target=target, strict=strict)
     return h.mean(axis=(1, 2)) @ params["head"]
 
 

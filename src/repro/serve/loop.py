@@ -35,8 +35,9 @@ asyncio- *and* thread-compatible):
 
 A :class:`CircuitBreaker` keeps the loop serving *something* under
 persistent faults: ``breaker_threshold`` consecutive dispatch failures
-degrade the execution path one level — kernel -> lax -> account-only
-(``compute=False``: planning + ledger, no logits) — and a success
+degrade the execution path one rung down the server target's
+:meth:`~repro.core.exec_target.ExecTarget.ladder` — e.g. interpret ->
+lax -> account-only (planning + ledger, no logits) — and a success
 after ``breaker_cooldown_s`` at a degraded level steps back up.  Every
 degraded dispatch is counted in the ledger, so ``summary()`` reports
 goodput / shed fraction / p50-p99 latency next to the vs-bound ratios.
@@ -78,6 +79,7 @@ import random
 import threading
 import time
 
+from repro.core.exec_target import INTERPRET, ExecTarget
 from repro.obs.tracer import NULL_SPAN
 from repro.serve.bucketing import ImageRequest
 from repro.serve.server import ImageServer, ServeResult
@@ -94,8 +96,11 @@ class RequestState(enum.Enum):
 TERMINAL_STATES = frozenset(
     {RequestState.DONE, RequestState.SHED, RequestState.FAILED})
 
-#: circuit-breaker degradation ladder, best path first
-DEGRADE_MODES = ("kernel", "lax", "account")
+#: default circuit-breaker degradation ladder (target names, best path
+#: first) — the actual ladder is ``server.target.ladder()``, downward
+#: :class:`~repro.core.exec_target.ExecTarget` transitions from the
+#: server's own ceiling
+DEGRADE_MODES = tuple(t.name for t in INTERPRET.ladder())
 
 
 @dataclasses.dataclass
@@ -126,30 +131,35 @@ class TrackedRequest:
 class CircuitBreaker:
     """Consecutive-failure breaker over the degradation ladder.
 
-    ``threshold`` consecutive failures step ``level`` down one mode
-    (kernel -> lax -> account-only); any success resets the failure
-    count, and a success after ``cooldown_s`` at a degraded level
-    steps back up one — a half-open recovery that re-probes the
+    ``ladder`` is the sequence of :class:`ExecTarget` rungs, best path
+    first (default: the interpret kernel's own downward ladder,
+    interpret -> lax -> account-only).  ``threshold`` consecutive
+    failures step ``level`` down one rung; any success resets the
+    failure count, and a success after ``cooldown_s`` at a degraded
+    level steps back up one — a half-open recovery that re-probes the
     better path one dispatch at a time instead of thundering back.
     """
 
-    def __init__(self, threshold: int = 3, cooldown_s: float = 1.0):
+    def __init__(self, threshold: int = 3, cooldown_s: float = 1.0,
+                 ladder: tuple[ExecTarget, ...] | None = None):
         self.threshold = max(1, int(threshold))
         self.cooldown_s = float(cooldown_s)
+        self.ladder = INTERPRET.ladder() if ladder is None \
+            else tuple(ladder)
         self.level = 0
         self.trips = 0
         self._consecutive = 0
         self._entered_at = -math.inf
 
     @property
-    def mode(self) -> str:
-        return DEGRADE_MODES[self.level]
+    def mode(self) -> ExecTarget:
+        return self.ladder[self.level]
 
     def record_failure(self, now: float) -> bool:
         """True when this failure tripped a degradation."""
         self._consecutive += 1
         if (self._consecutive >= self.threshold
-                and self.level < len(DEGRADE_MODES) - 1):
+                and self.level < len(self.ladder) - 1):
             self.level += 1
             self.trips += 1
             self._consecutive = 0
@@ -221,8 +231,12 @@ class ServingLoop:
         self.backoff_mult = float(backoff_mult)
         self.jitter_frac = float(jitter_frac)
         self.max_inflight = max(1, int(max_inflight))
+        # the breaker degrades downward from the server's own target
+        # ceiling, so a COMPILED server trips to LAX, never "up" to
+        # the interpreter
         self.breaker = CircuitBreaker(breaker_threshold,
-                                      breaker_cooldown_s)
+                                      breaker_cooldown_s,
+                                      ladder=server.target.ladder())
         self.fault_plan = fault_plan
         self._rng = random.Random(seed)
         self._clock = server._clock if clock is None else clock
@@ -282,7 +296,7 @@ class ServingLoop:
                     "retry_backlog": len(self._retry_jobs),
                     "queue_depth": self.server.queue.depth,
                     "breaker_level": self.breaker.level,
-                    "breaker_mode": self.breaker.mode,
+                    "breaker_mode": self.breaker.mode.name,
                     "service_ema_s": self._service_ema}
 
     def state_of(self, rid: int) -> RequestState | None:
@@ -468,7 +482,7 @@ class ServingLoop:
             self._refresh_gauges()
             t0 = self._clock()
         attempt_span = tr.begin(
-            "dispatch.attempt", bucket=job.bucket, mode=mode,
+            "dispatch.attempt", bucket=job.bucket, mode=mode.name,
             attempt=job.attempts + 1,
             rids=",".join(str(r.rid) for r in job.group))
         try:
@@ -477,10 +491,8 @@ class ServingLoop:
                     attempt_idx, job.bucket, clock=self._clock)
                 if delay > 0:
                     self._sleep(delay)
-            logits = self.server._execute(
-                job.group, job.bucket,
-                use_kernel=mode == "kernel",
-                compute=mode != "account")
+            logits = self.server._execute(job.group, job.bucket,
+                                          target=mode)
         except Exception as e:  # noqa: BLE001 — any dispatch fault
             with self._lock:
                 self._inflight -= 1
@@ -490,7 +502,7 @@ class ServingLoop:
                 self._observe_service(done_at - t0)
                 if self.breaker.record_failure(done_at):
                     tr.event("breaker.trip", level=self.breaker.level,
-                             mode=self.breaker.mode)
+                             mode=self.breaker.mode.name)
                     self.metrics.counter("serve_breaker_trips").inc()
                 self.counters["dispatch_failures"] += 1
                 job.attempts += 1
@@ -522,9 +534,9 @@ class ServingLoop:
             self._observe_service(done_at - t0)
             if self.breaker.record_success(done_at):
                 tr.event("breaker.recover", level=self.breaker.level,
-                         mode=self.breaker.mode)
-            if mode != "kernel":
-                self.server.ledger.record_degraded(mode)
+                         mode=self.breaker.mode.name)
+            if mode is not self.server.target:
+                self.server.ledger.record_degraded(mode.name)
             for t, res in zip(tracked, results):
                 t.state = RequestState.DONE
                 t.result = res

@@ -38,6 +38,7 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.exec_target import ExecTarget, from_flags, resolve_target
 from repro.models.cnn import vgg_graph
 from repro.models.graph import (ConvGraph, graph_logits,
                                 graph_plan_handles)
@@ -66,13 +67,22 @@ class ImageServer:
     (:func:`repro.models.graph.init_graph` /
     :func:`repro.models.cnn.init_vgg`); ``graph=None`` reconstructs
     the VGG graph from the param shapes — the historical default.  A
-    custom ``forward`` callable ``(params, images, use_kernel) ->
-    logits`` overrides the generic :func:`graph_logits` pipeline.
-    Every request carries 1..max(buckets) images of the
+    custom ``forward`` callable ``(params, images, target) -> logits``
+    overrides the generic :func:`graph_logits` pipeline (``target`` is
+    the resolved :class:`~repro.core.exec_target.ExecTarget` of the
+    dispatch).  Every request carries 1..max(buckets) images of the
     ``(h, w, in_ch)`` serving geometry.  ``account_budget`` is the
     on-chip scale the ledger scores distance-to-bound at (default: the
     paper's 1 MiB GBuf); execution plans use the kernel's own VMEM
     default regardless.
+
+    ``target`` is the server's execution ceiling (default
+    ``INTERPRET``, the historical ``use_kernel=True``); per-dispatch
+    overrides clamp *downward* against it
+    (:meth:`ExecTarget.clamp`) — a lax-only or account-only server can
+    never be upgraded by a caller or by the circuit breaker.  The
+    legacy ``use_kernel=``/``compute=`` booleans remain as deprecated
+    spellings and are ignored when ``target`` is given.
     """
 
     def __init__(self, params, h: int, w: int, in_ch: int = 3, *,
@@ -82,6 +92,7 @@ class ImageServer:
                  wait_budget: float = 0.02,
                  account_budget: int = 1 << 20,
                  dtype=jnp.float32,
+                 target: ExecTarget | str | None = None,
                  use_kernel: bool = True,
                  compute: bool = True,
                  keep_results: int = 1024,
@@ -100,8 +111,11 @@ class ImageServer:
         self.graph = vgg_graph(params) if graph is None else graph
         self._forward = forward
         self.h, self.w, self.in_ch = int(h), int(w), int(in_ch)
-        self.use_kernel = bool(use_kernel)
-        self.compute = bool(compute)
+        if target is not None:
+            self.target = resolve_target(target)
+        else:
+            self.target = from_flags(use_kernel=bool(use_kernel),
+                                     compute=bool(compute))
         self.dtype = jnp.dtype(dtype)
         self.account_budget = int(account_budget)
         self._clock = clock
@@ -127,6 +141,16 @@ class ImageServer:
                           "pipeline_hits": 0, "plan_hits": 0,
                           "results_evicted": 0}
         self._next_rid = 0
+
+    @property
+    def use_kernel(self) -> bool:
+        """Deprecated boolean view of :attr:`target` (kernel vs lax)."""
+        return self.target.kernel
+
+    @property
+    def compute(self) -> bool:
+        """Deprecated boolean view of :attr:`target` (account-only)."""
+        return self.target.compute
 
     @property
     def stats(self) -> dict:
@@ -216,16 +240,15 @@ class ImageServer:
             self.metrics.counter("plan_cache_hit").inc()
         return self._handles[key]
 
-    def pipeline(self, bucket: int, use_kernel: bool | None = None):
+    def pipeline(self, bucket: int, target: ExecTarget | str | None = None):
         """The compiled (bucket, H, W, C) -> logits pipeline.
 
-        ``use_kernel`` overrides (never upgrades) the server default —
-        the circuit breaker's kernel -> lax degradation dispatches
-        through a separately cached lax pipeline instead of retracing
-        the kernel one."""
-        uk = self.use_kernel if use_kernel is None \
-            else (self.use_kernel and bool(use_kernel))
-        key = (bucket, uk)
+        ``target`` clamps (never upgrades) against the server's — the
+        circuit breaker's kernel -> lax degradation dispatches through
+        a separately cached lax pipeline instead of retracing the
+        kernel one; the cache key carries the resolved target name."""
+        tgt = self.target.clamp(target)
+        key = (bucket, tgt.name)
         if key in self._pipelines:
             self._counters["pipeline_hits"] += 1
             return self._pipelines[key]
@@ -233,9 +256,8 @@ class ImageServer:
         def fwd(params, imgs):
             self._counters["traces"] += 1    # bumped at trace time only
             if self._forward is not None:
-                return self._forward(params, imgs, uk)
-            return graph_logits(self.graph, params, imgs,
-                                use_kernel=uk)
+                return self._forward(params, imgs, tgt)
+            return graph_logits(self.graph, params, imgs, target=tgt)
 
         self._pipelines[key] = jax.jit(fwd)
         return self._pipelines[key]
@@ -254,16 +276,16 @@ class ImageServer:
     # -- dispatch ----------------------------------------------------------
 
     def _execute(self, group: list[ImageRequest], bucket: int, *,
-                 use_kernel: bool | None = None,
-                 compute: bool | None = None):
+                 target: ExecTarget | str | None = None):
         """Run the compute half of a dispatch (no shared-state
         bookkeeping beyond cache counters): the serving loop calls
         this off-lock so bucket N+1 admission overlaps bucket N's
-        pipeline.  ``use_kernel``/``compute`` override *downwards*
-        only — a lax-only or account-only server never upgrades."""
-        do_compute = self.compute if compute is None \
-            else (self.compute and bool(compute))
-        if not do_compute:
+        pipeline.  ``target`` clamps *downward* against the server's
+        (:meth:`ExecTarget.clamp`, the one negotiation) — a lax-only
+        or account-only server never upgrades; an ``ACCOUNT_ONLY``
+        resolution skips execution entirely."""
+        tgt = self.target.clamp(target)
+        if not tgt.compute:
             return None
         payload = jnp.concatenate([r.images for r in group], axis=0)
         pad = bucket - payload.shape[0]
@@ -271,8 +293,6 @@ class ImageServer:
             payload = jnp.pad(payload,
                               ((0, pad), (0, 0), (0, 0), (0, 0)))
         tr = self.tracer
-        uk = self.use_kernel if use_kernel is None \
-            else (self.use_kernel and bool(use_kernel))
         # the dispatch's accounted bytes (same handles the ledger
         # charges) ride on the span next to the measured seconds —
         # one span, both halves of the achieved-GB/s ratio
@@ -282,12 +302,12 @@ class ImageServer:
                           for _, p in self.plan_handles(bucket)) \
                 * self.dtype.itemsize
         with tr.span("serve.execute", bucket=int(bucket),
-                     mode="kernel" if uk else "lax",
+                     mode=tgt.name,
                      n_images=int(payload.shape[0]) - pad,
                      traffic_bytes=n_bytes) as sp:
             t0 = tr.now()
             out = jax.block_until_ready(
-                self.pipeline(bucket, use_kernel)(self.params, payload))
+                self.pipeline(bucket, tgt)(self.params, payload))
             dt = tr.now() - t0
             sp.set(us=dt * 1e6,
                    achieved_gbps=(n_bytes / dt / 1e9)

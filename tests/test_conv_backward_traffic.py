@@ -126,16 +126,16 @@ def test_vgg_stack_grad_matches_lax_and_uses_kernel_dgrad():
     params = init_vgg(key, n_classes=4, width_mult=0.05)
     imgs = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, 8, 3))
     batch = {"images": imgs, "labels": jnp.arange(2) % 4}
-    gk = jax.grad(lambda p: vgg_loss(p, batch, use_kernel=True))(params)
-    gl = jax.grad(lambda p: vgg_loss(p, batch, use_kernel=False))(params)
+    gk = jax.grad(lambda p: vgg_loss(p, batch, target="interpret"))(params)
+    gl = jax.grad(lambda p: vgg_loss(p, batch, target="lax"))(params)
     flat_k, _ = jax.tree_util.tree_flatten(gk)
     flat_l, _ = jax.tree_util.tree_flatten(gl)
     for a, c in zip(flat_k, flat_l):
         assert float(jnp.max(jnp.abs(a - c))) < 1e-4
     fwd = str(jax.make_jaxpr(
-        lambda p: vgg_loss(p, batch, use_kernel=True))(params))
+        lambda p: vgg_loss(p, batch, target="interpret"))(params))
     bwd = str(jax.make_jaxpr(jax.grad(
-        lambda p: vgg_loss(p, batch, use_kernel=True)))(params))
+        lambda p: vgg_loss(p, batch, target="interpret")))(params))
     assert bwd.count("pallas_call") > fwd.count("pallas_call")
 
 

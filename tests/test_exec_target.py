@@ -1,0 +1,68 @@
+"""ExecTarget: the one execution-backend switch (resolve / clamp /
+ladder / legacy-flag adapter)."""
+
+import dataclasses
+
+import pytest
+
+from repro.core.exec_target import (ACCOUNT_ONLY, COMPILED, INTERPRET,
+                                    LAX, TARGETS, ExecTarget,
+                                    from_flags, resolve_target)
+
+
+def test_canonical_targets_and_ranks():
+    assert set(TARGETS) == {"interpret", "compiled", "lax",
+                            "account-only"}
+    assert (ACCOUNT_ONLY.rank < LAX.rank < INTERPRET.rank
+            < COMPILED.rank)
+    assert COMPILED.plan_target == "mosaic" and not COMPILED.interpret
+    assert INTERPRET.interpret and INTERPRET.kernel
+    assert not LAX.kernel and LAX.compute
+    assert not ACCOUNT_ONLY.compute
+
+
+def test_resolve_accepts_names_aliases_and_instances():
+    assert resolve_target("compiled") is COMPILED
+    assert resolve_target("mosaic") is COMPILED        # alias
+    assert resolve_target("Account_Only") is ACCOUNT_ONLY
+    assert resolve_target("account") is ACCOUNT_ONLY
+    assert resolve_target(LAX) is LAX
+    assert resolve_target(None, default=INTERPRET) is INTERPRET
+    with pytest.raises(ValueError, match="unknown execution target"):
+        resolve_target("gpu")
+    with pytest.raises(ValueError, match="no execution target"):
+        resolve_target(None)
+
+
+def test_clamp_is_downward_only():
+    """The one negotiation every boundary uses: a request can degrade
+    a server's target but never upgrade it (the old
+    ``self.use_kernel and bool(use_kernel)`` double-negotiation)."""
+    assert INTERPRET.clamp(None) is INTERPRET
+    assert INTERPRET.clamp("lax") is LAX                 # downgrade
+    assert LAX.clamp("compiled") is LAX                  # no upgrade
+    assert ACCOUNT_ONLY.clamp(COMPILED) is ACCOUNT_ONLY
+    assert COMPILED.clamp(INTERPRET) is INTERPRET
+    assert COMPILED.clamp(COMPILED) is COMPILED
+
+
+def test_ladder_walks_down_to_account_only():
+    assert COMPILED.ladder() == (COMPILED, LAX, ACCOUNT_ONLY)
+    assert INTERPRET.ladder() == (INTERPRET, LAX, ACCOUNT_ONLY)
+    assert LAX.ladder() == (LAX, ACCOUNT_ONLY)
+    assert ACCOUNT_ONLY.ladder() == (ACCOUNT_ONLY,)
+
+
+def test_from_flags_maps_the_legacy_boolean_triple():
+    assert from_flags() is INTERPRET
+    assert from_flags(use_kernel=False) is LAX
+    assert from_flags(compute=False) is ACCOUNT_ONLY
+    assert from_flags(compute=False, use_kernel=False) is ACCOUNT_ONLY
+    assert from_flags(interpret=False) is COMPILED
+
+
+def test_targets_are_frozen_hashable_and_jit_static_safe():
+    assert {COMPILED: 1}[COMPILED] == 1                 # dict key
+    assert str(LAX) == "lax"
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        COMPILED.rank = 0

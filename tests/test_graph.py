@@ -119,22 +119,21 @@ def _tiny_resnet():
 
 def test_resnet_forward_kernel_matches_lax():
     """BasicBlock stack (stride-2 downsample + 1x1 projection + fused
-    residual joins) through graph_forward(use_kernel=True) matches the
+    residual joins) through graph_forward(target="interpret") matches the
     lax path, and grads of the kernel path match lax to 1e-4."""
     g, params = _tiny_resnet()
     imgs = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 8, 3))
-    lk = graph_logits(g, params, imgs, use_kernel=True)
-    ll = graph_logits(g, params, imgs, use_kernel=False)
+    lk = graph_logits(g, params, imgs, target="interpret")
+    ll = graph_logits(g, params, imgs, target="lax")
     assert lk.shape == (2, 3)
     np.testing.assert_allclose(np.asarray(lk), np.asarray(ll),
                                rtol=1e-4, atol=1e-4)
 
-    def loss(p, use_kernel):
-        return (graph_logits(g, p, imgs, use_kernel=use_kernel)
-                ** 2).sum()
+    def loss(p, target):
+        return (graph_logits(g, p, imgs, target=target) ** 2).sum()
 
-    gk = jax.grad(lambda p: loss(p, True))(params)
-    gl = jax.grad(lambda p: loss(p, False))(params)
+    gk = jax.grad(lambda p: loss(p, "interpret"))(params)
+    gl = jax.grad(lambda p: loss(p, "lax"))(params)
     flat_k, _ = jax.tree_util.tree_flatten(gk)
     flat_l, _ = jax.tree_util.tree_flatten(gl)
     for a, b in zip(flat_k, flat_l):
@@ -151,7 +150,7 @@ def test_residual_join_fused_into_kernel_epilogue():
     imgs = jnp.zeros((2, 8, 8, 3))
     jaxpr = str(jax.make_jaxpr(
         lambda x: graph_forward(g, params["convs"], x,
-                                use_kernel=True))(imgs))
+                                target="interpret"))(imgs))
     assert jaxpr.count("pallas_call") == len(g.nodes)
     handles = graph_plan_handles(g, 8, 8, batch=2, vmem_budget=S_1M)
     by_name = {l.name: p for l, p in handles}
@@ -176,8 +175,8 @@ def test_grouped_conv_through_graph():
     ))
     params = init_graph(jax.random.PRNGKey(3), g, n_classes=3)
     imgs = jax.random.normal(jax.random.PRNGKey(4), (2, 8, 8, 3))
-    lk = graph_logits(g, params, imgs, use_kernel=True)
-    ll = graph_logits(g, params, imgs, use_kernel=False)
+    lk = graph_logits(g, params, imgs, target="interpret")
+    ll = graph_logits(g, params, imgs, target="lax")
     np.testing.assert_allclose(np.asarray(lk), np.asarray(ll),
                                rtol=1e-4, atol=1e-4)
     handles = graph_plan_handles(g, 8, 8, batch=2, vmem_budget=S_1M)

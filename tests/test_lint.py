@@ -203,6 +203,35 @@ def test_L006_allows_set_active_inside_obs_and_activate_scopes(tmp_path):
         """)
 
 
+def test_L007_flags_raw_backend_kwargs_at_call_sites(tmp_path):
+    findings = _lint_snippet(tmp_path, """
+        def run(conv, srv):
+            a = conv(x, w, interpret=True)
+            b = srv.pipeline(2, use_kernel=False)
+            # positional args and other kwargs are fine
+            c = conv(x, w, target="compiled")
+            return a, b, c
+        """)
+    assert [f.rule for f in findings] == ["L007", "L007"]
+
+
+def test_L007_exempts_kernels_tree_and_from_flags(tmp_path):
+    d = tmp_path / "kernels"
+    d.mkdir()
+    (d / "wrapper.py").write_text(textwrap.dedent("""
+        def call(x):
+            return pallas_call(x, interpret=True)
+        """))
+    assert not lint.lint_file(d / "wrapper.py")
+    # the sanctioned legacy-boolean adapter is exempt by callee name
+    assert not _lint_snippet(tmp_path, """
+        from repro.core.exec_target import from_flags
+
+        def adapt(flag):
+            return from_flags(use_kernel=flag, compute=True)
+        """)
+
+
 def test_syntax_errors_are_findings_not_crashes(tmp_path):
     findings = _lint_snippet(tmp_path, "def broken(:\n")
     assert findings and findings[0].rule == "parse"

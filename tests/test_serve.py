@@ -244,12 +244,12 @@ def test_kernel_and_fallback_pipelines_agree():
                       width_mult=0.05)
     imgs = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 8, 3))
     out = {}
-    for use_kernel in (True, False):
+    for target in ("interpret", "lax"):
         srv = ImageServer(params, 8, 8, buckets=(2,), wait_budget=0.0,
-                          use_kernel=use_kernel)
+                          target=target)
         srv.submit(imgs)
-        out[use_kernel] = srv.poll()[0].logits
-    assert jnp.allclose(out[True], out[False], atol=2e-4)
+        out[target] = srv.poll()[0].logits
+    assert jnp.allclose(out["interpret"], out["lax"], atol=2e-4)
 
 
 # --------------------------------------------------------------------------
@@ -314,7 +314,7 @@ def test_server_serves_resnet_end_to_end():
     srv.submit(imgs)
     (res,) = srv.poll()
     assert res.logits.shape == (2, 4)
-    ref = graph_logits(graph, params, imgs, use_kernel=False)
+    ref = graph_logits(graph, params, imgs, target="lax")
     assert jnp.allclose(res.logits, ref, atol=2e-4)
     s = srv.ledger.summary()
     assert "rn-serve" in s["by_model"]

@@ -202,34 +202,54 @@ def test_drain_mid_storm_drops_nothing():
 
 
 # --------------------------------------------------------------------------
-# circuit breaker: kernel -> lax -> account-only
+# circuit breaker: downward ExecTarget ladder (interpret -> lax ->
+# account-only, from the server's own target ceiling)
 # --------------------------------------------------------------------------
 
 def test_breaker_degrades_down_the_ladder_and_ledger_counts_it():
+    srv = ImageServer(_tiny_params(), 8, 8, buckets=(2,),
+                      wait_budget=0.0)
+    loop = ServingLoop(srv, deadline_s=None,
+                       breaker_threshold=1, max_retries=5,
+                       fault_plan=FaultPlan.failures(0, 1))
+    imgs = jnp.ones((2, 8, 8, 3))
+    rid = loop.submit(imgs)
+    loop.run_sync(tick_s=0.01)
+    assert loop.state_of(rid) is RequestState.DONE
+    assert loop.breaker.trips == 2
+    assert loop.breaker.mode.name == "account-only"
+    assert loop.server.ledger.degraded_dispatches == 1
+    _assert_reconciled(loop)
+
+
+def test_breaker_ladder_is_capped_at_the_servers_own_target():
+    """An account-only server has a one-rung ladder: the breaker can
+    never degrade (or "recover" upward past the server's ceiling)."""
     clock = VirtualClock()
     loop = ServingLoop(_account_server(clock), deadline_s=None,
                        breaker_threshold=1, max_retries=5,
                        fault_plan=FaultPlan.failures(0, 1))
+    assert [t.name for t in loop.breaker.ladder] == ["account-only"]
     rid = loop.submit(n_images=8)
     loop.run_sync(tick_s=0.01)
     assert loop.state_of(rid) is RequestState.DONE
-    assert loop.breaker.trips == 2
-    assert loop.breaker.mode == "account"  # kernel -> lax -> account
-    assert loop.server.ledger.degraded_dispatches == 1
+    assert loop.breaker.trips == 0
+    assert loop.breaker.mode.name == "account-only"
+    assert loop.server.ledger.degraded_dispatches == 0
     _assert_reconciled(loop)
 
 
 def test_breaker_steps_back_up_after_cooldown():
     br = CircuitBreaker(threshold=2, cooldown_s=1.0)
-    assert br.mode == "kernel"
+    assert br.mode.name == "interpret"    # default ladder ceiling
     br.record_failure(0.0)
     assert br.level == 0                  # below threshold
     br.record_failure(0.0)
-    assert (br.level, br.mode, br.trips) == (1, "lax", 1)
+    assert (br.level, br.mode.name, br.trips) == (1, "lax", 1)
     br.record_success(0.5)                # inside cooldown: stays
     assert br.level == 1
     br.record_success(1.6)                # cooled down: half-open re-probe
-    assert (br.level, br.mode) == (0, "kernel")
+    assert (br.level, br.mode.name) == (0, "interpret")
 
 
 def test_breaker_routes_around_a_poisoned_kernel_path():
@@ -239,10 +259,10 @@ def test_breaker_routes_around_a_poisoned_kernel_path():
     params = _tiny_params()
     graph = vgg_graph(params)
 
-    def forward(p, imgs, use_kernel):
-        if use_kernel:
+    def forward(p, imgs, target):
+        if target.kernel:
             raise RuntimeError("kernel path poisoned")
-        return graph_logits(graph, p, imgs, use_kernel=False)
+        return graph_logits(graph, p, imgs, target=target)
 
     srv = ImageServer(params, 8, 8, graph=graph, forward=forward,
                       buckets=(2,), wait_budget=0.0)
@@ -252,10 +272,10 @@ def test_breaker_routes_around_a_poisoned_kernel_path():
     rid = loop.submit(imgs)
     (res,) = loop.run_sync(tick_s=0.005)
     assert loop.state_of(rid) is RequestState.DONE
-    assert loop.breaker.mode == "lax"
+    assert loop.breaker.mode.name == "lax"
     assert jnp.allclose(res.logits,
                         graph_logits(graph, params, imgs,
-                                     use_kernel=False), atol=1e-5)
+                                     target="lax"), atol=1e-5)
     assert srv.ledger.degraded_dispatches == 1
 
 

@@ -83,14 +83,14 @@ def test_vgg_cnn_trains(tmp_path):
 
 
 def test_vgg_kernel_path_matches_xla():
-    """vgg_forward(use_kernel=True) routes through the Pallas conv
+    """vgg_forward(target="interpret") routes through the Pallas conv
     (bias/relu/pool fused into the kernel epilogue) and must agree
     with the unfused lax.conv path."""
     key = jax.random.PRNGKey(0)
     params = init_vgg(key, n_classes=4, width_mult=0.05)
     imgs = jax.random.normal(key, (2, 16, 16, 3))
-    a = vgg_forward(params, imgs, use_kernel=False)
-    b = vgg_forward(params, imgs, use_kernel=True)
+    a = vgg_forward(params, imgs, target="lax")
+    b = vgg_forward(params, imgs, target="interpret")
     assert float(jnp.max(jnp.abs(a - b))) < 1e-3
 
 
@@ -103,13 +103,13 @@ def test_vgg_kernel_path_fuses_epilogue():
     params = init_vgg(key, n_classes=4, width_mult=0.05)
     imgs = jax.random.normal(key, (2, 16, 16, 3))
 
-    def prims(use_kernel):
+    def prims(target):
         jaxpr = jax.make_jaxpr(
-            lambda p, x: vgg_forward(p, x, use_kernel=use_kernel)
+            lambda p, x: vgg_forward(p, x, target)
         )(params, imgs)
         return str(jaxpr)
 
-    lax_path, kernel_path = prims(False), prims(True)
+    lax_path, kernel_path = prims("lax"), prims("interpret")
     assert "reduce_window_max" in lax_path
     assert "reduce_window_max" not in kernel_path
     assert "conv_general_dilated" not in kernel_path
@@ -127,12 +127,12 @@ def test_vgg_kernel_trains(tmp_path):
     labels = jnp.arange(8) % 4
     imgs = imgs + labels[:, None, None, None] * 0.5
     batch = {"images": imgs, "labels": labels}
-    loss0 = float(vgg_loss(params, batch, use_kernel=True))
+    loss0 = float(vgg_loss(params, batch, target="interpret"))
 
     @jax.jit
     def step(p):
         l, g = jax.value_and_grad(
-            lambda q: vgg_loss(q, batch, use_kernel=True))(p)
+            lambda q: vgg_loss(q, batch, target="interpret"))(p)
         return l, jax.tree_util.tree_map(lambda a, b: a - 0.08 * b, p, g)
 
     best = loss0
