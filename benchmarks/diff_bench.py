@@ -48,6 +48,18 @@ TRACKED = {
     "resnet_train_vs_bound_x": True,  # cross-model training ratio
     "resnet_vs_bound_x": True,        # cross-model serving ratio
     "train_vs_bound_x": True,    # training-step fwd+dgrad+wgrad ratio
+    # executing-backward gates: the wgrad kernel's *measured* traffic
+    # vs its dW-stationary Eq. (15) bound; the fraction of layers whose
+    # dgrad rides the kernel (1.0 = strided downsamples included); the
+    # compiled training step's win over the interpreter; grad numerics
+    # vs the lax VJP; and the process-wide lax-fallback tally (0
+    # baseline - ANY quiet escape from the planned dataflow trips it)
+    "wgrad_vs_bound_x": True,
+    "dgrad_kernel_frac": False,
+    "train_compiled_speedup_x": False,
+    "grad_numeric_maxerr": True,
+    "numeric_relerr": True,
+    "exec_fallbacks": True,
     "vs_bound_x": True,
     "vs_serving_x": True,
     "w_reduction_x": False,

@@ -28,13 +28,40 @@ FLEXFLOW_DRAM_PER_MAC = 0.0049     # published, 192KB on-chip
 
 
 def _timed(fn):
-    t0 = time.perf_counter()
+    """``fn()``'s output plus its warmed, rep-normalized mean µs.
+
+    The one-shot ``perf_counter`` delta this replaces charged whatever
+    the first call dragged in — ``lru_cache`` misses, lazy imports,
+    first-touch allocation — to one row and nearly nothing to its
+    cached neighbours, a five-orders ``us_per_call`` spread inside the
+    same figure.  ``timed_call`` warms once and means over three reps,
+    so every row reports the same steady-state quantity."""
+    from repro.obs import timed_call
+
     out = fn()
-    return out, (time.perf_counter() - t0) * 1e6
+    return out, timed_call(fn, name="bench.table")
+
+
+def _eval_traffic(df, best):
+    """Network traffic at already-found tilings — the comparable unit
+    of work every fig13 timing row measures."""
+    total = None
+    for layer, t in best:
+        q = df.traffic(layer, t)
+        total = q if total is None else total + q
+    return total
 
 
 def fig13_dataflow_comparison():
-    """Fig. 13: DRAM access vs effective on-chip memory, all dataflows."""
+    """Fig. 13: DRAM access vs effective on-chip memory, all dataflows.
+
+    Every mapping's ``us_per_call`` times the *same* work — one
+    analytic traffic evaluation per layer at the mapping's best tiling
+    — with the exhaustive tiling search done untimed up front.  Timing
+    the search made the column incomparable: candidate-space sizes
+    differ five orders across mappings (WtR-B's handful vs ours'
+    balanced sweep), so the old rows compared search budgets, not
+    dataflows."""
     layers = vgg16_conv_layers(3)
     rows = []
     for kb in (33.25, 66.5, 133, 173.5, 266):
@@ -42,11 +69,17 @@ def fig13_dataflow_comparison():
         lb = sum(q_dram_practical(l, s) for l in layers) * MB
         rows.append((f"fig13/lower_bound/{kb}KB", None, round(lb, 1)))
         for df in dataflow_zoo():
-            q, us = _timed(lambda df=df: network_traffic(layers, s, df))
+            best = [(l, df.search(l, s)[0]) for l in layers]
+            q, us = _timed(lambda df=df, best=best:
+                           _eval_traffic(df, best))
             rows.append((f"fig13/{df.name}/{kb}KB", us,
                          round(q.total * MB, 1)))
-        fm, us = _timed(
-            lambda: sum(found_minimum(l, s)[2].total for l in layers))
+        zoo = {df.name: df for df in dataflow_zoo()}
+        wins = [(zoo[name], l, t)
+                for l in layers
+                for name, t, _q in [found_minimum(l, s)]]
+        fm, us = _timed(lambda wins=wins: sum(
+            df.traffic(l, t).total for df, l, t in wins))
         rows.append((f"fig13/found_minimum/{kb}KB", us,
                      round(fm * MB, 1)))
     return rows

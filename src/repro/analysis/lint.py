@@ -49,6 +49,15 @@ first-class :class:`~repro.core.exec_target.ExecTarget` — callers pass
 sanctioned adapter :func:`~repro.core.exec_target.from_flags` (the one
 place legacy booleans become a target) is exempt by callee name.
 
+``L008`` No ``jax.lax.conv*`` call inside a backward code path
+(functions whose names mention ``bwd``/``backward``/``dgrad``/
+``wgrad``) unless an enclosing function is ``_lax_fallback``-suffixed:
+the backward pass *executes* through the Pallas kernels (lhs-dilated
+dgrad, dW-stationary wgrad), and the only sanctioned lax escape is a
+loudly-named fallback that records itself via ``record_fallback`` —
+a quiet ``lax.conv`` in a gradient path silently un-does the paper
+dataflow while every plan still claims it rode the kernel.
+
 ``L004`` No obviously 0-d value returned from a ``shard_map`` body:
 scalar residuals crossing a differentiated ``shard_map`` break jax
 0.4.x's transpose (``_SpecError`` under ``grad``) — bodies must keep
@@ -78,6 +87,7 @@ LINT_RULES = {
     "L005": "bare wall-clock/sleep call in serve/runtime (inject clock=)",
     "L006": "bare clock in obs/, or set_active tracer mutation outside obs/",
     "L007": "interpret=/use_kernel= kwarg passed outside src/repro/kernels/",
+    "L008": "jax.lax.conv* in a backward path outside *_lax_fallback",
 }
 
 #: path fragments (posix) that exempt a file from a rule
@@ -91,7 +101,11 @@ _ALLOW = {
     # exec_target.py *defines* the backend abstraction — its singleton
     # constructors are the one place the raw flags are spelled out
     "L007": ("/kernels/", "core/exec_target.py"),
+    "L008": (),
 }
+
+#: function-name fragments marking a backward code path (L008 scope)
+_BWD_NAME_FRAGMENTS = ("bwd", "backward", "dgrad", "wgrad")
 
 #: path fragments marking the observability package (L006's pivot:
 #: clock calls are banned *inside*, set_active calls *outside*)
@@ -175,6 +189,11 @@ class _Linter(ast.NodeVisitor):
         # every def in the module, by name — shard_map bodies are
         # resolved against this (closures included)
         self.defs: dict[str, ast.FunctionDef] = {}
+        # enclosing function names, outermost first — L008 resolves a
+        # call site against the whole lexical chain (a closure inside
+        # _bwd is still a backward path; a closure inside
+        # _dgrad_lax_fallback is still sanctioned)
+        self.fn_stack: list[str] = []
 
     def _emit(self, rule: str, line: int, message: str) -> None:
         if not _allowed(self.path, rule):
@@ -243,7 +262,11 @@ class _Linter(ast.NodeVisitor):
     def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
         self.defs.setdefault(node.name, node)
         self._check_defaults(node)
-        self.generic_visit(node)
+        self.fn_stack.append(node.name)
+        try:
+            self.generic_visit(node)
+        finally:
+            self.fn_stack.pop()
 
     visit_AsyncFunctionDef = visit_FunctionDef
 
@@ -283,6 +306,17 @@ class _Linter(ast.NodeVisitor):
                        "set_active() mutates the ambient tracer "
                        "outside obs/ — pass tracer= or scope it "
                        "with `with tracer.activate():`")
+        head, _, tail = chain.rpartition(".")
+        if tail.startswith("conv") and head.rpartition(".")[2] == "lax" \
+                and any(frag in name for name in self.fn_stack
+                        for frag in _BWD_NAME_FRAGMENTS) \
+                and not any(name.endswith("_lax_fallback")
+                            for name in self.fn_stack):
+            self._emit("L008", node.lineno,
+                       f"{chain}() inside a backward path — gradients "
+                       "execute through the Pallas kernels; the only "
+                       "lax escape is a *_lax_fallback function that "
+                       "records itself via record_fallback")
         if chain.rpartition(".")[2] != "from_flags":
             for kw in node.keywords:
                 if kw.arg in ("interpret", "use_kernel"):

@@ -79,10 +79,16 @@ RULES = {
     "conv.vmem": "psums + double-buffered operand panels (+ residual "
                  "join panel, + pinned-weight single buffer) must fit "
                  "the VMEM budget",
+    "conv.lhsdil": "an lhs-dilated plan's compact fetches must start "
+                   "on the dilation phase (block*stride divisible by "
+                   "lhs_dilation) and fuse no pool/residual epilogue",
     "wgrad.vmem": "resident f32 dW block + double-buffered x/dy "
                   "strips must fit the VMEM budget",
     "wgrad.grid": "dW channel blocks must not exceed the layer's "
                   "channel counts",
+    "wgrad.strip": "the lagged carry must cover the strip halo "
+                   "(lag * strip*stride >= ekh - stride) so the "
+                   "rolling disjoint fetches stay exact",
     "matmul.shape": "block dims must be positive and not exceed the "
                     "padded operand dims",
     "matmul.vmem": "psum block + double-buffered A/B panels must fit "
@@ -250,6 +256,24 @@ def check_conv_plan(plan, *, batch: int = 1, dtype_bytes: int = 4,
                 hint="pad the input to the last tile's halo end",
                 where=where))
 
+    # -- structural: lhs-dilated compact-plane walk -----------------------
+    if getattr(plan, "lhs_dilated", False):
+        ldy, ldx = plan.lhs_dilation
+        for name, bv, s, ld in (("y", blk.y, sy, ldy),
+                                ("x", blk.x, sx, ldx)):
+            if ld > 1 and (bv * s) % ld:
+                diags.append(_err(
+                    "conv.lhsdil",
+                    f"{name}-block {bv} * stride {s} is not a multiple "
+                    f"of lhs_dilation {ld} — compact fetches would "
+                    f"start mid-phase",
+                    hint="snap the block so block*stride % lhs_dilation"
+                         " == 0", where=where))
+        if plan.pool > 1 or plan.residual:
+            diags.append(_err(
+                "conv.lhsdil", "lhs-dilated plans fuse no "
+                "pool/residual epilogue", where=where))
+
     # -- structural: fused pool alignment ---------------------------------
     if plan.pool > 1:
         if blk.y % plan.pool or blk.x % plan.pool:
@@ -295,15 +319,22 @@ def check_conv_plan(plan, *, batch: int = 1, dtype_bytes: int = 4,
         diags.append(d)
     if plan.wo_pad // blk.x > 1:
         # unblocked halo tiles index by element offset xi*x_block*sx:
-        # every offset must land on a sublane-aligned input row
+        # every offset must land on a sublane-aligned input row.  An
+        # lhs-dilated plan walks the compact plane, so the advance is
+        # the compact step block*stride / lhs_dilation
         sub = sublane_for(dtype_bytes)
-        if (blk.x * sx) % sub:
+        adv = blk.x * sx
+        if getattr(plan, "lhs_dilated", False):
+            ldx = plan.lhs_dilation[1]
+            if ldx > 1 and adv % ldx == 0:
+                adv //= ldx
+        if adv % sub:
             diags.append(Diagnostic(
                 rule="mosaic.offset", severity=_mosaic_sev(target),
                 where=where,
-                message=f"halo x-offsets advance by {blk.x * sx} "
+                message=f"halo x-offsets advance by {adv} "
                         f"rows, not a {sub}-row multiple",
-                hint=f"make x_block*stride a multiple of {sub}"))
+                hint=f"make the x advance a multiple of {sub}"))
     if blk.ci < min(MXU_DIM, plan.ci_pad):
         diags.append(Diagnostic(
             rule="mosaic.mxu", severity=WARN, where=where,
@@ -314,17 +345,21 @@ def check_conv_plan(plan, *, batch: int = 1, dtype_bytes: int = 4,
 
 
 # --------------------------------------------------------------------------
-# legality pass: WgradPlan (lax-executed, structural rules only)
+# legality pass: WgradPlan (executed by the dW-stationary kernel)
 # --------------------------------------------------------------------------
 
-def check_wgrad_plan(wplan, *, dtype_bytes: int = 4,
+def check_wgrad_plan(wplan, *, batch: int = 1, dtype_bytes: int = 4,
                      vmem_budget: int | None = None,
+                     target: str = TARGET_INTERPRET,
                      where: str = "") -> list[Diagnostic]:
     """Verify a dW-stationary :class:`WgradPlan`: the resident dW
-    block plus double-buffered x/dy strips must fit the budget, and
-    the channel blocks must describe a real partition of the layer.
-    (Execution rides lax, so Mosaic tile rules do not apply — this is
-    the accounting schedule's feasibility check.)"""
+    block plus double-buffered x/dy strips must fit the budget, the
+    channel blocks must describe a real partition of the layer, and
+    the lagged carry must cover the strip halo — the structural
+    contract :func:`~repro.kernels.conv_lb.wgrad.wgrad_lb_call`
+    executes.  Under the ``mosaic`` target the streamed panels also
+    obey the lane tiling rules (the kernel's last dims are the
+    channel blocks)."""
     budget = VMEM_BYTES // 2 if vmem_budget is None else vmem_budget
     diags: list[Diagnostic] = []
     for name, b, dim in (("ci_b", wplan.ci_b, wplan.ci),
@@ -334,6 +369,21 @@ def check_wgrad_plan(wplan, *, dtype_bytes: int = 4,
             diags.append(_err(
                 "wgrad.grid", f"{name}={b} outside [1, {dim}]",
                 where=where))
+    if diags:
+        return diags
+    # the lagged rolling fetch: carry rows must cover the halo strips
+    # share, and the warm-up shift must be non-negative (re-derived
+    # from the raw geometry, not through WgradPlan.lag)
+    r_rows = wplan.strip * wplan.sy
+    k_rows = max(0, wplan.ekh - wplan.sy)
+    lag = -(-k_rows // r_rows) if k_rows > 0 else 0
+    if wplan.lag != lag or lag * r_rows < k_rows:
+        diags.append(_err(
+            "wgrad.strip",
+            f"lag {wplan.lag} x {r_rows}-row fetches cannot carry the "
+            f"{k_rows}-row strip halo",
+            hint="lag must be ceil((ekh - stride) / (strip*stride))",
+            where=where))
     xrows = (wplan.strip - 1) * wplan.sy + wplan.ekh
     need = (4 * wplan.hk * wplan.wk * wplan.ci_b * wplan.co_b
             + 2 * dtype_bytes * xrows * wplan.wp * wplan.ci_b
@@ -344,6 +394,14 @@ def check_wgrad_plan(wplan, *, dtype_bytes: int = 4,
             f"> {budget} B budget",
             hint="shrink the strip first, then the channel blocks",
             where=where))
+    ci_pad = ceil_div(wplan.ci, wplan.ci_b) * wplan.ci_b
+    co_pad = ceil_div(wplan.co, wplan.co_b) * wplan.co_b
+    for d in (_lane_rule(wplan.ci_b, ci_pad, "x strip panel", target,
+                         where),
+              _lane_rule(wplan.co_b, co_pad, "dy strip panel", target,
+                         where)):
+        if d:
+            diags.append(d)
     return diags
 
 
@@ -419,7 +477,19 @@ def symbolic_conv_traffic(plan, batch: int) -> Traffic:
     # across the Co sweep only when there is a sole Ci block
     in_fetches = (spatial_blocks if nci == 1
                   else spatial_blocks * nco * nci)
-    in_words = in_fetches * (tb * blk.halo_y * blk.halo_x * blk.ci)
+    # an lhs-dilated plan fetches the *compact* plane: of a halo
+    # window's rows only those landing on the dilation phase are real
+    # — ceil(pad/ld) rows' worth of leading conv padding plus at least
+    # one real row per started phase period of the remaining extent
+    fetch_y, fetch_x = blk.halo_y, blk.halo_x
+    if getattr(plan, "lhs_dilated", False):
+        def compact(halo, ld, p):
+            if ld == 1:
+                return halo
+            return ceil_div(p, ld) + max(1, ceil_div(halo - p, ld))
+        fetch_y = compact(blk.halo_y, plan.lhs_dilation[0], plan.py)
+        fetch_x = compact(blk.halo_x, plan.lhs_dilation[1], plan.px)
+    in_words = in_fetches * (tb * fetch_y * fetch_x * blk.ci)
     # weight slice: index map reads (cii, coi) — constant over the
     # whole grid iff both channel dims have a single block
     w_fetches = 1 if nci * nco == 1 else spatial_blocks * nco * nci
@@ -438,16 +508,24 @@ def symbolic_conv_traffic(plan, batch: int) -> Traffic:
 
 
 def symbolic_wgrad_traffic(wplan, batch: int) -> Traffic:
-    """Independent re-derivation of :meth:`WgradPlan.traffic`: per
-    (ci-block, co-block) sweep the rolling x strips read every touched
-    input row once, dy streams once per Ci-block sweep, and the
-    resident dW block flushes exactly once."""
+    """Independent re-derivation of :meth:`WgradPlan.traffic`, walked
+    straight off the executing kernel's grid
+    ``(nci, nco, batch, strips + lag)``: the disjoint x fetch's index
+    map changes every step (one ``strip*stride``-row block per step,
+    warm-up fetches included), the dy strip's clamped index map
+    ``max(si - lag, 0)`` takes exactly ``strips`` distinct values per
+    (ci-block, co-block, image), and the resident dW block flushes
+    exactly once."""
     nci = ceil_div(wplan.ci, wplan.ci_b)
     nco = ceil_div(wplan.co, wplan.co_b)
-    x_rows = (wplan.ho - 1) * wplan.sy + wplan.ekh
-    x_plane = x_rows * wplan.wp
-    reads_x = nco * (batch * nci * wplan.ci_b) * x_plane
-    reads_dy = nci * (batch * nco * wplan.co_b) * wplan.ho * wplan.wo
+    ns = ceil_div(wplan.ho, wplan.strip)
+    r_rows = wplan.strip * wplan.sy
+    k_rows = max(0, wplan.ekh - wplan.sy)
+    lag = -(-k_rows // r_rows) if k_rows > 0 else 0
+    reads_x = (nci * nco * batch * (ns + lag)
+               * r_rows * wplan.wp * wplan.ci_b)
+    reads_dy = (nci * nco * batch * ns
+                * wplan.strip * wplan.wo * wplan.co_b)
     writes = (wplan.hk * wplan.wk) * (nci * wplan.ci_b) * (nco
                                                            * wplan.co_b)
     return Traffic(reads_in=float(reads_x), reads_w=float(reads_dy),

@@ -47,6 +47,21 @@ Tiling contract (``ops.py`` enforces it by padding):
     Hp == (Ho-1)*stride_y + (Hk-1)*dil_y + 1 (same for W);
   * ``bias`` arrives as a (1, Co) row so the (1, co_block) slice rides
     the same Co-block sweep as the weights.
+
+Lhs-dilated planes (``lhs_dilation != (1, 1)``) — the strided-dgrad /
+transposed-conv geometry: the *logical* input plane is the forward
+stride's zero-dilation of a compact plane (``stride-1`` zeros between
+rows/cols), but HBM only ever holds the compact plane.  The BlockSpec
+walks the compact plane — each tile fetches the ``ceil``-shrunk halo —
+and the kernel re-inserts the zeros in VMEM with one interior-padding
+``lax.pad`` before the window sweep, so the dilated tile is
+materialized on chip from a compact fetch: traffic scales with the
+compact (true dy) plane, not the dilated one.  Phase contract: the
+per-tile input offset ``y_block*stride_y`` must divide by the lhs
+dilation so every compact fetch starts on a real row (``ops.py`` snaps
+tiles accordingly); ``pad=(py, px)`` carries the conv padding of the
+*dilated* plane so the kernel can place the first real row at
+``ceil(py/ld)*ld - py`` inside the reconstructed tile.
 """
 
 from __future__ import annotations
@@ -68,9 +83,41 @@ def halo_dims(y_block: int, x_block: int, hk: int, wk: int,
     return yp, xp
 
 
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def compact_halo(halo: int, ld: int, pad: int) -> int:
+    """Compact rows fetched per tile on one lhs-dilated axis: the
+    ``ceil``-shrunk image of a ``halo``-row dilated window, phase-
+    shifted by the conv padding (``ceil(pad/ld)`` leading zero-rows)."""
+    if ld == 1:
+        return halo
+    return ceil_div(pad, ld) + max(1, ceil_div(halo - pad, ld))
+
+
+def compact_axis_dims(block: int, halo: int, stride: int, ld: int,
+                      pad: int) -> tuple[int, int, int]:
+    """Compact-plane walk geometry for one lhs-dilated axis.
+
+    Returns ``(chalo, step, off)``: the compact rows fetched per tile,
+    the compact-row advance between neighbouring tiles, and the local
+    offset of logical dilated row 0 inside the reconstructed VMEM tile
+    (``ceil(pad/ld)*ld - pad``, the phase shift that aligns the conv
+    padding onto the zero-dilation grid).  Requires the dilated-plane
+    tile offset ``block*stride`` to divide by ``ld``."""
+    if ld == 1:
+        return halo, block * stride, 0
+    assert (block * stride) % ld == 0, (block, stride, ld)
+    off = ceil_div(pad, ld) * ld - pad      # in [0, ld)
+    return compact_halo(halo, ld, pad), (block * stride) // ld, off
+
+
 def _conv_kernel(*refs, nci: int, hk: int, wk: int,
                  bb: int, ty: int, tx: int,
                  stride: tuple[int, int], dilation: tuple[int, int],
+                 lhs_dilation: tuple[int, int],
+                 off: tuple[int, int], hi_pad: tuple[int, int],
                  has_bias: bool, has_residual: bool, relu: bool,
                  pool: int):
     refs = list(refs)
@@ -86,15 +133,26 @@ def _conv_kernel(*refs, nci: int, hk: int, wk: int,
 
     sy, sx = stride
     dy, dx = dilation
+    ldy, ldx = lhs_dilation
+    offy, offx = off
     cib = x_ref.shape[-1]
     cob = acc_ref.shape[-1]
+    xt = x_ref[...]
+    if (ldy, ldx) != (1, 1):
+        # compact fetch -> dilated VMEM tile: one interior-padding
+        # lax.pad re-inserts the stride-1 zero rows/cols (plus a short
+        # hi edge so the last window's slice stays in bounds)
+        xt = jax.lax.pad(
+            xt, jnp.array(0, xt.dtype),
+            ((0, 0, 0), (0, hi_pad[0], ldy - 1),
+             (0, hi_pad[1], ldx - 1), (0, 0, 0)))
     for ky in range(hk):                      # unrolled window sweep:
         for kx in range(wk):                  # WndR served from VMEM
             xs = jax.lax.slice(
-                x_ref[...],
-                (0, ky * dy, kx * dx, 0),
-                (bb, ky * dy + (ty - 1) * sy + 1,
-                 kx * dx + (tx - 1) * sx + 1, cib),
+                xt,
+                (0, offy + ky * dy, offx + kx * dx, 0),
+                (bb, offy + ky * dy + (ty - 1) * sy + 1,
+                 offx + kx * dx + (tx - 1) * sx + 1, cib),
                 (1, sy, sx, 1))               # (bb, ty, tx, cib)
             acc_ref[...] += jnp.dot(
                 xs.reshape(bb * ty * tx, cib), w_ref[ky, kx],
@@ -122,6 +180,9 @@ def conv_lb_call(x: jax.Array, w: jax.Array, *,
                  relu: bool = False, pool: int = 1,
                  stride: tuple[int, int] = (1, 1),
                  dilation: tuple[int, int] = (1, 1),
+                 lhs_dilation: tuple[int, int] = (1, 1),
+                 pad: tuple[int, int] = (0, 0),
+                 out_plane: tuple[int, int] | None = None,
                  b_block: int = 1,
                  y_block: int, x_block: int,
                  ci_block: int, co_block: int,
@@ -132,15 +193,26 @@ def conv_lb_call(x: jax.Array, w: jax.Array, *,
     BasicBlock, served by one streamed read per output tile instead of
     a separate HBM round trip) or None.
 
+    With ``lhs_dilation != (1, 1)`` x is the *compact* plane (zeros not
+    materialized); ``pad`` is the conv padding of the logical dilated
+    plane and ``out_plane`` the padded (Ho, Wo) — both required because
+    neither is derivable from the compact shape alone.
+
     See the module docstring for the padding/divisibility contract."""
     b, hp, wp, ci = x.shape
     hk, wk, ci2, co = w.shape
     sy, sx = stride
     dy, dx = dilation
+    ldy, ldx = lhs_dilation
+    lhs_dilated = (ldy, ldx) != (1, 1)
     assert ci == ci2 and ci % ci_block == 0 and co % co_block == 0
     assert b % b_block == 0, (b, b_block)
-    ho = (hp - ((hk - 1) * dy + 1)) // sy + 1
-    wo = (wp - ((wk - 1) * dx + 1)) // sx + 1
+    if lhs_dilated:
+        assert out_plane is not None, "lhs-dilated calls need out_plane"
+        ho, wo = out_plane
+    else:
+        ho = (hp - ((hk - 1) * dy + 1)) // sy + 1
+        wo = (wp - ((wk - 1) * dx + 1)) // sx + 1
     assert ho % y_block == 0 and wo % x_block == 0, (
         f"output plane {ho}x{wo} does not divide tile "
         f"{y_block}x{x_block}; ops.py must pad")
@@ -149,6 +221,19 @@ def conv_lb_call(x: jax.Array, w: jax.Array, *,
     nb, ny, nx = b // b_block, ho // y_block, wo // x_block
     nci, nco = ci // ci_block, co // co_block
     yp, xp = halo_dims(y_block, x_block, hk, wk, stride, dilation)
+    chalo_y, step_y, offy = compact_axis_dims(y_block, yp, sy, ldy,
+                                              pad[0])
+    chalo_x, step_x, offx = compact_axis_dims(x_block, xp, sx, ldx,
+                                              pad[1])
+    # rows of the reconstructed tile after interior padding, extended
+    # hi so the deepest window slice (off + halo rows) stays in bounds
+    hi_y = max(0, offy + yp - ((chalo_y - 1) * ldy + 1))
+    hi_x = max(0, offx + xp - ((chalo_x - 1) * ldx + 1))
+    if lhs_dilated:
+        assert hp >= (ny - 1) * step_y + chalo_y, (hp, ny, step_y,
+                                                   chalo_y)
+        assert wp >= (nx - 1) * step_x + chalo_x, (wp, nx, step_x,
+                                                   chalo_x)
     out_dtype = out_dtype or x.dtype
     if residual is not None:
         assert residual.shape == (b, ho, wo, co), (residual.shape,
@@ -161,15 +246,18 @@ def conv_lb_call(x: jax.Array, w: jax.Array, *,
     kern = functools.partial(_conv_kernel, nci=nci, hk=hk, wk=wk,
                              bb=b_block, ty=y_block, tx=x_block,
                              stride=stride, dilation=dilation,
+                             lhs_dilation=lhs_dilation,
+                             off=(offy, offx), hi_pad=(hi_y, hi_x),
                              has_bias=bias is not None,
                              has_residual=residual is not None,
                              relu=relu, pool=pool)
     in_specs = [
-        # overlapping halo tile: element offsets, not block indices
+        # overlapping halo tile: element offsets, not block indices —
+        # an lhs-dilated walk strides the compact plane instead
         pl.BlockSpec(
-            (b_block, yp, xp, ci_block),
+            (b_block, chalo_y, chalo_x, ci_block),
             lambda bi, yi, xi, coi, cii: (
-                bi * b_block, yi * y_block * sy, xi * x_block * sx,
+                bi * b_block, yi * step_y, xi * step_x,
                 cii * ci_block),
             indexing_mode=pl.Unblocked()),
         pl.BlockSpec((hk, wk, ci_block, co_block),

@@ -23,8 +23,10 @@ max-``pool``) applied while the psum tile is still in VMEM — a
 residual shortcut is added before the ReLU for one streamed read
 instead of a separate HBM round trip; ``fallback=True`` routes
 the same surface through ``lax.conv_general_dilated`` (XLA's schedule,
-identical math).  Input (lhs) dilation and asymmetric before/after
-padding are out of scope for both paths — express those directly via
+identical math).  Input (lhs) dilation rides the compact-plane walk
+(:func:`ConvPlan.compact_geometry`): zeros are re-inserted on the
+VMEM-resident fetch, never streamed.  Asymmetric before/after padding
+stays out of scope for both paths — express it directly via
 ``jax.lax``.
 
 ``conv_lb_traffic`` is the analytic per-BlockSpec accountant: it
@@ -33,13 +35,16 @@ re-fetched whenever its index-map output changes between consecutive
 grid steps — Pallas' pipelining rule), giving the *measured* side of
 the paper's Eq. (14)/(15) validation in tests and benchmarks.
 
-The backward pass is planned through the same machinery (the paper's
-bound holds for dgrad/wgrad — they are convs too): stride-1 dgrad
-executes through the kernel itself via :func:`plan_conv_dgrad`,
-wgrad is accounted off the dW-stationary :class:`WgradPlan`, and
-:func:`plan_conv_training` / :meth:`ConvPlan.training_traffic` bundle
-the per-training-step triple scored against
-``lower_bound.q_dram_training``.
+The backward pass is planned *and executed* through the same
+machinery (the paper's bound holds for dgrad/wgrad — they are convs
+too): dgrad executes through the kernel itself via
+:func:`plan_conv_dgrad` — strided layers included, by handing the
+kernel the compact dy plane with ``lhs_dilation = stride`` — wgrad
+executes through the dW-stationary
+:func:`~repro.kernels.conv_lb.wgrad.wgrad_lb_call` realizing
+:class:`WgradPlan`'s BlockSpecs, and :func:`plan_conv_training` /
+:meth:`ConvPlan.training_traffic` bundle the per-training-step triple
+scored against ``lower_bound.q_dram_training``.
 
 The batch-reuse term of Eq. (14)/(15): the bound is over output
 elements u = B*Ho*Wo, so per u x z block the z-kernel weight slice is
@@ -60,6 +65,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import lru_cache, partial
+from math import gcd as _gcd
 
 import jax
 import jax.numpy as jnp
@@ -70,6 +76,7 @@ from repro.core.layer import ceil_div
 from repro.core.tpu_adapter import (VMEM_BYTES, ConvBlockShape,
                                     balanced_tile, conv_block_candidates,
                                     conv_lb_block_shape, round_up)
+from repro.kernels.conv_lb.wgrad import wgrad_lb_call
 from repro.obs.tracer import active_tracer
 
 
@@ -101,6 +108,14 @@ class ConvPlan:
     hk: int            # kernel extent (accounting needs the w panel)
     wk: int
     pool: int = 1      # fused epilogue max-pool window (1 = none)
+    # lhs (input) dilation: the strided-dgrad / transposed-conv
+    # geometry.  The *logical* plane the conv runs over is the
+    # zero-dilated expansion of a compact plane, but HBM only holds the
+    # compact plane: BlockSpecs walk it with ceil-shrunk halos and the
+    # kernel re-inserts the zeros in VMEM (see kernel.py).  With
+    # lhs_dilation != (1, 1), ``h``/``hp_pad`` stay in *dilated*
+    # coordinates while traffic/padding account the compact fetches.
+    lhs_dilation: tuple[int, int] = (1, 1)
     # true (pre-padding) layer geometry — what the plan was planned
     # *for*; lets the backward planners derive the dgrad/wgrad conv
     # geometry from a forward handle alone
@@ -128,6 +143,35 @@ class ConvPlan:
                 self.co_pad // self.blocks.co,
                 self.ci_pad // self.blocks.ci)
 
+    @property
+    def lhs_dilated(self) -> bool:
+        return self.lhs_dilation != (1, 1)
+
+    def compact_geometry(self) -> tuple[tuple[int, int, int, int],
+                                        tuple[int, int, int, int]]:
+        """Per-axis ``(chalo, step, pad_lo, total)`` of the compact
+        plane the BlockSpecs walk when ``lhs_dilated``: rows fetched
+        per tile, compact rows advanced between tiles, leading
+        zero-rows of conv padding (``ceil(p/ld)``), and the padded
+        compact plane extent the last tile's fetch reaches.  For a
+        plain plan this degenerates to the dilated-coordinate walk
+        ``(halo, block*stride, p, hp_pad)``."""
+        from repro.kernels.conv_lb.kernel import compact_axis_dims
+
+        out = []
+        for blk, s, halo, ld, p, n, full in (
+                (self.blocks.y, self.stride[0], self.blocks.halo_y,
+                 self.lhs_dilation[0], self.py,
+                 self.ho_pad // self.blocks.y, self.hp_pad),
+                (self.blocks.x, self.stride[1], self.blocks.halo_x,
+                 self.lhs_dilation[1], self.px,
+                 self.wo_pad // self.blocks.x, self.wp_pad)):
+            chalo, step, _off = compact_axis_dims(blk, halo, s, ld, p)
+            pc = ceil_div(p, ld)
+            total = ((n - 1) * step + chalo) if ld > 1 else full
+            out.append((chalo, step, pc if ld > 1 else p, total))
+        return tuple(out)
+
     def traffic(self, batch: int) -> Traffic:
         """HBM words this plan moves for one group at ``batch`` images
         (the batch extent is not plan state: the same memoized plan
@@ -135,7 +179,9 @@ class ConvPlan:
         return _blocks_traffic(batch, self.blocks, self.hk, self.wk,
                                self.ho, self.wo, self.ci_pad,
                                self.co_pad, self.pool,
-                               residual=self.residual)
+                               residual=self.residual,
+                               lhs_dilation=self.lhs_dilation,
+                               pad=(self.py, self.px))
 
     def traffic_bytes(self, batch: int, dtype_bytes: int = 4) -> float:
         return self.traffic(batch).total * dtype_bytes
@@ -216,7 +262,9 @@ class ConvPlan:
 
 def _blocks_traffic(batch: int, blk: ConvBlockShape, hk: int, wk: int,
                     ho: int, wo: int, ci: int, co: int,
-                    pool: int = 1, residual: bool = False) -> Traffic:
+                    pool: int = 1, residual: bool = False,
+                    lhs_dilation: tuple[int, int] = (1, 1),
+                    pad: tuple[int, int] = (0, 0)) -> Traffic:
     """HBM words moved by the kernel's BlockSpecs for one group.
 
     Pallas re-fetches an operand block whenever its index-map output
@@ -232,6 +280,13 @@ def _blocks_traffic(batch: int, blk: ConvBlockShape, hk: int, wk: int,
     psum-stationary OutR guarantee (reads_out = 0, writes = padded
     |outputs| / pool**2 when the epilogue pool is fused).
 
+    An lhs-dilated plan (``lhs_dilation != (1, 1)``) fetches the
+    *compact* plane — the ceil-shrunk halo of
+    :func:`repro.kernels.conv_lb.kernel.compact_axis_dims` — so its
+    input traffic scales with the true dy plane, not the zero-dilated
+    one the conv logically runs over (``pad`` carries the dilated
+    plane's conv padding the compact halo depends on).
+
     Not counted: the fused bias row's (1, co_b) fetches — O(nb*ny*nx*co)
     words, vanishing next to any conv operand panel (the smallest of
     which carries an hk*wk*ci_b factor per fetch).
@@ -245,7 +300,13 @@ def _blocks_traffic(batch: int, blk: ConvBlockShape, hk: int, wk: int,
     steps = nb * ny * nx * nco * nci
     in_fetches = steps if nci > 1 else nb * ny * nx
     w_fetches = steps if nco * nci > 1 else 1
-    reads_in = in_fetches * tb * blk.halo_y * blk.halo_x * blk.ci
+    fetch_y, fetch_x = blk.halo_y, blk.halo_x
+    if lhs_dilation != (1, 1):
+        from repro.kernels.conv_lb.kernel import compact_halo
+
+        fetch_y = compact_halo(blk.halo_y, lhs_dilation[0], pad[0])
+        fetch_x = compact_halo(blk.halo_x, lhs_dilation[1], pad[1])
+    reads_in = in_fetches * tb * fetch_y * fetch_x * blk.ci
     reads_w = w_fetches * hk * wk * blk.ci * blk.co
     if residual:
         # fused residual join: the pre-pool output-shaped operand is
@@ -282,6 +343,8 @@ def autotune_conv_blocks(batch: int, ho: int, wo: int, ci: int, co: int,
                          hk: int, wk: int, *,
                          stride: tuple[int, int],
                          dilation: tuple[int, int],
+                         lhs_dilation: tuple[int, int] = (1, 1),
+                         pad: tuple[int, int] = (0, 0),
                          pool: int = 1, residual: bool = False,
                          dtype_bytes: int = 4,
                          vmem_budget: int,
@@ -321,6 +384,7 @@ def autotune_conv_blocks(batch: int, ho: int, wo: int, ci: int, co: int,
 
     sy, sx = stride
     dy, dx = dilation
+    ldy, ldx = lhs_dilation
     db = dtype_bytes
     kk = hk * wk
     mosaic = target == TARGET_MOSAIC
@@ -332,9 +396,18 @@ def autotune_conv_blocks(batch: int, ho: int, wo: int, ci: int, co: int,
             diagnostics.append(Diagnostic(rule=rule, severity="warn",
                                           message=message, hint=hint))
 
+    def snap_lhs(v: int, dim: int, s: int, ld: int) -> int:
+        """Round a tile up so its input offset (v*stride) lands on the
+        lhs-dilation phase — every compact fetch starts on a real row."""
+        if ld == 1 or (v * s) % ld == 0:
+            return v
+        step = ld // _gcd(ld, s)
+        return min(round_up(v, step), round_up(dim, step))
+
     def traffic(blk: ConvBlockShape) -> Traffic:
         return _blocks_traffic(batch, blk, hk, wk, ho, wo, ci, co, pool,
-                               residual=residual)
+                               residual=residual,
+                               lhs_dilation=lhs_dilation, pad=pad)
 
     def fits(blk: ConvBlockShape) -> bool:
         pinned = blk.ci >= ci and blk.co >= co
@@ -393,6 +466,8 @@ def autotune_conv_blocks(batch: int, ho: int, wo: int, ci: int, co: int,
         y, x = _snap_pool(y, ho, pool), _snap_pool(x, wo, pool)
         if mosaic:
             cib, x = snap_ch(cib, ci), snap_x(x)
+        y = snap_lhs(y, ho, sy, ldy)
+        x = snap_lhs(x, wo, sx, ldx)
         yp = (y - 1) * sy + (hk - 1) * dy + 1
         xp = (x - 1) * sx + (wk - 1) * dx + 1
         # largest co_b under the budget: psums 4*b*y*x*co_b plus
@@ -452,7 +527,7 @@ def autotune_conv_blocks(batch: int, ho: int, wo: int, ci: int, co: int,
 @lru_cache(maxsize=1024)
 def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
               batch: int = 1, stride=(1, 1), padding=(0, 0),
-              dilation=(1, 1), pool: int = 1,
+              dilation=(1, 1), lhs_dilation=(1, 1), pool: int = 1,
               residual: bool = False,
               blocks: ConvBlockShape | None = None,
               dtype_bytes: int = 4,
@@ -477,10 +552,17 @@ def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
     plan raises :class:`~repro.analysis.plan_check.PlanLegalityError`
     instead of silently entering the LRU cache.  Explicit ``blocks``
     overrides are the caller's contract and bypass the gate (tests
-    deliberately probe odd shapes)."""
+    deliberately probe odd shapes).
+
+    ``lhs_dilation != (1, 1)`` plans the conv over the *logical*
+    zero-dilated plane (``h``/``w`` are the dilated extents; callers
+    hold the compact plane — dy of a strided forward, or a
+    transposed-conv input) with compact-plane BlockSpec traffic and
+    phase-snapped tiles; see :class:`ConvPlan`."""
     sy, sx = _pair(stride)
     py, px = _pair(padding)
     dy, dx = _pair(dilation)
+    ldy, ldx = _pair(lhs_dilation)
     hp, wp = h + 2 * py, w + 2 * px
     ekh, ekw = (hk - 1) * dy + 1, (wk - 1) * dx + 1   # dilated extent
     ho = (hp - ekh) // sy + 1
@@ -488,6 +570,9 @@ def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
     if pool > 1 and (ho % pool or wo % pool):
         raise ValueError(f"fused pool={pool} needs pool-divisible "
                          f"output plane, got {ho}x{wo}")
+    if (ldy, ldx) != (1, 1) and (pool > 1 or residual):
+        raise ValueError("lhs-dilated plans fuse no pool/residual "
+                         "epilogue (dgrad/transposed convs have none)")
     budget = VMEM_BYTES // 2 if vmem_budget is None else vmem_budget
     auto = blocks is None
     if blocks is None:
@@ -505,13 +590,21 @@ def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
             if autotune:
                 blocks = autotune_conv_blocks(
                     batch, ho, wo, ci, co, hk, wk, stride=(sy, sx),
-                    dilation=(dy, dx), pool=pool, residual=residual,
+                    dilation=(dy, dx), lhs_dilation=(ldy, ldx),
+                    pad=(py, px), pool=pool, residual=residual,
                     dtype_bytes=dtype_bytes,
                     vmem_budget=budget, seed=blocks, target=target)
             _sp.set(blocks=f"b={blocks.b},y={blocks.y},x={blocks.x},"
                            f"ci={blocks.ci},co={blocks.co}")
     ty = _snap_pool(min(blocks.y, ho), ho, pool)
     tx = _snap_pool(min(blocks.x, wo), wo, pool)
+    if ldy > 1 and (ty * sy) % ldy:
+        # phase-snap: every compact fetch must start on a real row
+        step = ldy // _gcd(ldy, sy)
+        ty = min(round_up(ty, step), round_up(ho, step))
+    if ldx > 1 and (tx * sx) % ldx:
+        step = ldx // _gcd(ldx, sx)
+        tx = min(round_up(tx, step), round_up(wo, step))
     cib, cob = min(blocks.ci, ci), min(blocks.co, co)
     tb = max(1, min(blocks.b, batch))
     blocks = ConvBlockShape(y=ty, x=tx, co=cob, ci=cib,
@@ -525,7 +618,8 @@ def plan_conv(h: int, w: int, ci: int, co: int, hk: int, wk: int, *,
                     hp_pad=max(hp, (ho_pad - 1) * sy + ekh),
                     wp_pad=max(wp, (wo_pad - 1) * sx + ekw),
                     ci_pad=round_up(ci, cib), co_pad=round_up(co, cob),
-                    stride=(sy, sx), dilation=(dy, dx), pool=pool,
+                    stride=(sy, sx), dilation=(dy, dx),
+                    lhs_dilation=(ldy, ldx), pool=pool,
                     hk=hk, wk=wk,
                     h=h, w=w, ci=ci, co=co, py=py, px=px,
                     residual=residual, target=target)
@@ -552,13 +646,14 @@ def _flip_w(w: jax.Array) -> jax.Array:
 
 def dgrad_rides_kernel(plan: ConvPlan) -> bool:
     """True when the layer's dgrad can execute through the planned
-    conv_lb kernel itself: unit forward stride (the dgrad conv is then
-    an ordinary conv over the flipped weights — no lhs dilation) and a
-    forward padding the full-padding transform can absorb."""
+    conv_lb kernel itself: a forward padding the full-padding
+    transform can absorb.  Unit-stride layers run the plain conv over
+    the flipped weights; strided layers run the *same* kernel over the
+    compact dy plane with ``lhs_dilation = stride`` (the BlockSpec
+    walks dy, the kernel re-inserts the stride-1 zeros in VMEM)."""
     ekh = (plan.hk - 1) * plan.dilation[0] + 1
     ekw = (plan.wk - 1) * plan.dilation[1] + 1
-    return (plan.stride == (1, 1)
-            and plan.py <= ekh - 1 and plan.px <= ekw - 1)
+    return plan.py <= ekh - 1 and plan.px <= ekw - 1
 
 
 def plan_conv_dgrad(plan: ConvPlan, *, batch: int = 1,
@@ -569,11 +664,11 @@ def plan_conv_dgrad(plan: ConvPlan, *, batch: int = 1,
 
     dx is the conv of dy with the spatially-flipped ``(Hk, Wk, Co, Ci)``
     weights at unit stride and full padding — for unit forward stride
-    it is exactly the conv the batch-folded kernel runs
-    (:func:`dgrad_rides_kernel`); a strided forward dilates the dy
-    plane first (lhs dilation), which the kernel does not execute, but
-    the dataflow is planned and accounted all the same over the dilated
-    plane (the lax fallback moves at least those words).
+    it is exactly the conv the batch-folded kernel runs; a strided
+    forward lhs-dilates the dy plane first (``stride-1`` zeros between
+    dy rows/cols), which the kernel executes off the *compact* plane
+    (``lhs_dilation = stride``): the plan is over the dilated extents
+    but its BlockSpecs fetch — and its traffic charges — dy words only.
     """
     sy, sx = plan.stride
     hd = plan.ho if sy == 1 else (plan.ho - 1) * sy + 1
@@ -584,7 +679,8 @@ def plan_conv_dgrad(plan: ConvPlan, *, batch: int = 1,
                      batch=batch, stride=(1, 1),
                      padding=(max(0, ekh - 1 - plan.py),
                               max(0, ekw - 1 - plan.px)),
-                     dilation=plan.dilation, dtype_bytes=dtype_bytes,
+                     dilation=plan.dilation,
+                     lhs_dilation=(sy, sx), dtype_bytes=dtype_bytes,
                      vmem_budget=vmem_budget, autotune=autotune)
 
 
@@ -611,15 +707,19 @@ class WgradPlan:
     10-60x off Eq. (15); this schedule attains the once-per-word floor
     outright whenever the full dW fits on chip.
 
-    Per (ci-block, co-block) sweep the strips roll: consecutive x
-    strips share ``ekh - stride`` halo rows that simply *stay
-    resident* (the dW psums never evict them), so each plane pass
-    reads every touched x row exactly once — x is re-fetched once per
-    Co-block sweep, dy once per Ci-block sweep.  ``strip`` is the
-    footprint knob (rows in flight), not a re-read multiplier.
-    Execution currently rides lax (XLA's schedule); this plan is the
-    analytic accounting/bound handle — the charged volume is what the
-    schedule provably needs, cf. the paper's WtR-B stationarity
+    Per (ci-block, co-block) sweep the strips roll: each grid step
+    fetches a *disjoint* ``strip*stride``-row x block (every touched
+    row enters the chip once per plane pass) while the ``ekh - stride``
+    shared halo rows stay resident in a carry scratch the dW psums
+    never evict — the compute *lags* the fetch by
+    ``lag = ceil((ekh - stride)/(strip*stride))`` steps so strip ``j``
+    reduces over carry + fetch rows ``[j*R, j*R + R + K)``.  x is
+    re-fetched once per Co-block sweep, dy once per Ci-block sweep;
+    ``strip`` is the footprint knob (rows in flight), and the only
+    re-read overhead is the ``lag`` warm-up fetch per plane pass.
+    Execution rides :func:`repro.kernels.conv_lb.wgrad.wgrad_lb_call`
+    — the kernel realizes exactly these BlockSpecs, so the charged
+    volume is the moved volume, cf. the paper's WtR-B stationarity
     analysis.
     """
 
@@ -635,19 +735,46 @@ class WgradPlan:
     ci_b: int          # resident dW block channels
     co_b: int
     strip: int         # dy rows streamed per strip
+    # executing-kernel geometry (defaults keep prior handles valid)
+    sx: int = 1        # fwd stride cols
+    ekw: int = 1       # dilated kernel extent cols
+    dly: int = 1       # rhs (kernel) dilation
+    dlx: int = 1
+    py: int = 0        # fwd conv padding
+    px: int = 0
+    h: int = 0         # true input plane rows (0: unknown/legacy)
+
+    @property
+    def n_strips(self) -> int:
+        return ceil_div(self.ho, self.strip)
+
+    @property
+    def lag(self) -> int:
+        """Fetch steps the compute trails behind: the resident carry
+        holds ``K = ekh - stride`` halo rows spanning the previous
+        ``lag`` disjoint fetches (0 when ``ekh <= stride`` — strips
+        don't overlap at all)."""
+        k = self.ekh - self.sy
+        return ceil_div(k, self.strip * self.sy) if k > 0 else 0
+
+    @property
+    def ho_pad(self) -> int:
+        """dy rows after strip alignment (zero-padded tail)."""
+        return self.n_strips * self.strip
 
     @property
     def grid(self) -> tuple[int, int, int]:
         """(n_ci_blocks, n_co_blocks, n_strips)."""
         return (ceil_div(self.ci, self.ci_b),
                 ceil_div(self.co, self.co_b),
-                ceil_div(self.ho, self.strip))
+                self.n_strips)
 
     def _x_rows(self) -> int:
-        """x rows read per image-channel plane pass: the rolling
-        window re-uses the (ekh - stride) shared halo rows already on
-        chip, so every touched row is read once."""
-        return (self.ho - 1) * self.sy + self.ekh
+        """x rows *fetched* per image-channel plane pass, measured off
+        the executing kernel's disjoint-strip BlockSpec: ``n_strips +
+        lag`` fetches of ``strip*stride`` rows each (the warm-up
+        fetches fill the carry before the first compute step)."""
+        return (self.n_strips + self.lag) * self.strip * self.sy
 
     def traffic(self, batch: int) -> Traffic:
         """HBM words one wgrad pass moves at ``batch`` images: x is
@@ -657,7 +784,7 @@ class WgradPlan:
         ci_pad = nci * self.ci_b
         co_pad = nco * self.co_b
         reads_x = nco * batch * ci_pad * self._x_rows() * self.wp
-        reads_dy = nci * batch * co_pad * self.ho * self.wo
+        reads_dy = nci * batch * co_pad * self.ho_pad * self.wo
         writes = self.hk * self.wk * ci_pad * co_pad
         return Traffic(reads_in=float(reads_x), reads_w=float(reads_dy),
                        reads_out=0.0, writes_out=float(writes))
@@ -689,14 +816,18 @@ def plan_conv_wgrad(plan: ConvPlan, *, dtype_bytes: int = 4,
 
     budget = VMEM_BYTES // 2 if vmem_budget is None else vmem_budget
     db = dtype_bytes
-    sy = plan.stride[0]
+    sy, sx = plan.stride
     ekh = (plan.hk - 1) * plan.dilation[0] + 1
+    ekw = (plan.wk - 1) * plan.dilation[1] + 1
     wp = plan.w + 2 * plan.px
 
     def mk(cib, cob, s):
         return WgradPlan(hk=plan.hk, wk=plan.wk, ci=plan.ci, co=plan.co,
                          ho=plan.ho, wo=plan.wo, wp=wp, ekh=ekh, sy=sy,
-                         ci_b=cib, co_b=cob, strip=s)
+                         ci_b=cib, co_b=cob, strip=s,
+                         sx=sx, ekw=ekw,
+                         dly=plan.dilation[0], dlx=plan.dilation[1],
+                         py=plan.py, px=plan.px, h=plan.h)
 
     def vmem_bytes(cib, cob, s):
         xrows = (s - 1) * sy + ekh
@@ -750,9 +881,10 @@ class ConvTrainingPlan:
     """The three planned convs of one layer's training step.
 
     ``dgrad_kernel`` records whether dx executes through the planned
-    conv_lb kernel (unit-stride layers) or falls back to lax while
-    remaining planned and accounted (strided layers — see ROADMAP's
-    compiled-mode follow-up)."""
+    conv_lb kernel — unit-stride layers as a plain conv, strided
+    layers via the lhs-dilated compact-plane walk — or falls back to
+    lax while remaining planned and accounted (grouped layers, or a
+    forward padding past the full-padding transform)."""
 
     fwd: ConvPlan
     dgrad: ConvPlan
@@ -820,8 +952,16 @@ def _conv_one_group(x, w, bias, residual, plan: ConvPlan, py: int,
     b = x.shape[0]
     co = w.shape[3]
     blk = plan.blocks
-    x = jnp.pad(x, ((0, 0), (py, plan.hp_pad - x.shape[1] - py),
-                    (px, plan.wp_pad - x.shape[2] - px), (0, 0)))
+    if plan.lhs_dilated:
+        # x is the compact plane: pad with ceil(p/ld) leading zero-rows
+        # and a tail up to the last tile's compact fetch
+        (_, _, pc_y, rows_y), (_, _, pc_x, rows_x) = \
+            plan.compact_geometry()
+        x = jnp.pad(x, ((0, 0), (pc_y, rows_y - x.shape[1] - pc_y),
+                        (pc_x, rows_x - x.shape[2] - pc_x), (0, 0)))
+    else:
+        x = jnp.pad(x, ((0, 0), (py, plan.hp_pad - x.shape[1] - py),
+                        (px, plan.wp_pad - x.shape[2] - px), (0, 0)))
     x = _pad_axis(_pad_axis(x, 3, plan.ci_pad), 0, round_up(b, blk.b))
     w = _pad_axis(_pad_axis(w, 2, plan.ci_pad), 3, plan.co_pad)
     bias2d = None
@@ -838,19 +978,51 @@ def _conv_one_group(x, w, bias, residual, plan: ConvPlan, py: int,
     out = conv_lb_call(x, w, bias=bias2d, residual=residual, relu=relu,
                        pool=plan.pool,
                        stride=plan.stride, dilation=plan.dilation,
+                       lhs_dilation=plan.lhs_dilation,
+                       pad=(plan.py, plan.px),
+                       out_plane=((plan.ho_pad, plan.wo_pad)
+                                  if plan.lhs_dilated else None),
                        b_block=blk.b, y_block=blk.y, x_block=blk.x,
                        ci_block=blk.ci, co_block=blk.co,
                        out_dtype=out_dtype, interpret=interpret)
     return out[:b, :plan.ho // plan.pool, :plan.wo // plan.pool, :co]
 
 
-def _lax_conv(x, w, sy, sx, py, px, dy, dx, groups):
+def _lax_conv(x, w, sy, sx, py, px, dy, dx, groups, ldy=1, ldx=1):
     return jax.lax.conv_general_dilated(
         x, w, window_strides=(sy, sx),
         padding=[(py, py), (px, px)], rhs_dilation=(dy, dx),
+        lhs_dilation=(ldy, ldx),
         feature_group_count=groups,
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
         preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# process-wide exec.fallback tally, keyed by pass ("fwd", "dgrad",
+# "wgrad", "bwd" — the last is the wholesale backward fallback).
+# Incremented at trace time alongside each loud ``exec.fallback``
+# event (once per distinct traced geometry, like the events), so
+# ledgers and benches can surface fallback counts instead of letting
+# a silently-degraded path regress unnoticed.
+FALLBACK_COUNTS: dict[str, int] = {}
+
+
+def record_fallback(conv_pass: str, reason: str, *, target: str,
+                    layer: str) -> None:
+    """One loud fallback: traced ``exec.fallback`` event + tally."""
+    FALLBACK_COUNTS[conv_pass] = FALLBACK_COUNTS.get(conv_pass, 0) + 1
+    active_tracer().event("exec.fallback", target=target, to="lax",
+                          layer=layer, reason=reason,
+                          **{"pass": conv_pass})
+
+
+def exec_fallback_counts() -> dict[str, int]:
+    """Snapshot of the per-pass fallback tally (ledger summaries)."""
+    return dict(FALLBACK_COUNTS)
+
+
+def reset_fallback_counts() -> None:
+    FALLBACK_COUNTS.clear()
 
 
 def _lax_epilogue(y, bias, relu, pool, residual=None):
@@ -872,6 +1044,7 @@ def _lax_epilogue(y, bias, relu, pool, residual=None):
 
 
 @partial(jax.jit, static_argnames=("stride", "padding", "dilation",
+                                   "lhs_dilation",
                                    "groups", "relu", "pool",
                                    "interpret", "fallback", "autotune",
                                    "target",
@@ -879,7 +1052,8 @@ def _lax_epilogue(y, bias, relu, pool, residual=None):
                                    "ci_block", "co_block"))
 def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
               residual: jax.Array | None = None,
-              *, stride=1, padding=0, dilation=1, groups: int = 1,
+              *, stride=1, padding=0, dilation=1, lhs_dilation=1,
+              groups: int = 1,
               relu: bool = False, pool: int = 1,
               b_block: int | None = None,
               y_block: int | None = None, x_block: int | None = None,
@@ -891,7 +1065,12 @@ def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
     x: (B, H, W, Ci); w: (Hk, Wk, Ci/groups, Co)
     -> (B, Ho/pool, Wo/pool, Co).
     ``stride``/``padding``/``dilation`` take an int or an (h, w) pair;
-    ``dilation`` is kernel (rhs) dilation.  ``bias`` (shape (Co,)),
+    ``dilation`` is kernel (rhs) dilation.  ``lhs_dilation`` inserts
+    ``ld - 1`` zeros between input rows/cols *logically*: x stays the
+    compact plane in HBM and the kernel re-dilates VMEM-resident
+    fetches in-register, so the dilated-plane walk (a strided layer's
+    dgrad, a transposed conv) never materializes or streams the zeros
+    — the compact-fetch accounting :class:`ConvPlan` charges.  ``bias`` (shape (Co,)),
     ``residual`` (a (B, Ho, Wo, Co) pre-pool tensor — the shortcut
     join of a residual block, added after bias and before the ReLU),
     ``relu`` and ``pool`` (an aligned pool x pool max-pool, stride =
@@ -913,15 +1092,18 @@ def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
     its dgrad conv re-negotiates per-layer (the dgrad geometry may be
     mosaic-legal when the forward is not, and vice versa).
 
-    Differentiable, with a *planned* backward: for unit-stride
-    ungrouped layers (the whole VGG stack) dx is computed by the
-    batch-folded Pallas kernel itself — the dgrad conv of dy against
-    the spatially-flipped ``(Hk, Wk, Co, Ci)`` weights at full padding
-    (:func:`plan_conv_dgrad`) — and dW/db come from the exact ``lax``
-    counterparts (wgrad execution is accounted analytically via
-    :func:`plan_conv_wgrad`).  Strided or grouped layers fall back to
-    the ``lax`` VJP wholesale but remain planned and accounted through
-    the same handles.
+    Differentiable, with a *kernel* backward: for ungrouped layers
+    (strided included) dx is computed by the batch-folded Pallas
+    kernel itself — the dgrad conv of dy against the spatially-flipped
+    ``(Hk, Wk, Co, Ci)`` weights at full padding, with
+    ``lhs_dilation=stride`` re-dilating the compact dy plane in-VMEM
+    (:func:`plan_conv_dgrad`) — and dW executes through the
+    dW-stationary Pallas kernel (:func:`plan_conv_wgrad` /
+    :func:`~repro.kernels.conv_lb.wgrad.wgrad_lb_call`); db comes from
+    the epilogue pullback.  Grouped or lhs-dilated layers fall back to
+    the ``lax`` VJP wholesale, loudly (``exec.fallback`` events +
+    :func:`exec_fallback_counts`), but remain planned and accounted
+    through the same handles.
     """
     tgt = None if target is None else resolve_target(target)
     if tgt is not None:
@@ -934,16 +1116,20 @@ def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
     sy, sx = _pair(stride)
     py, px = _pair(padding)
     dy, dx = _pair(dilation)
+    ldy, ldx = _pair(lhs_dilation)
     b, h, wd, ci = x.shape
     hk, wk, ci_g, co = w.shape
     if ci_g * groups != ci or co % groups:
         raise ValueError(f"groups={groups} incompatible with "
                          f"Ci={ci}, w Ci={ci_g}, Co={co}")
+    # the plan sees the logically dilated plane; x stays compact
+    h_d = (h - 1) * ldy + 1
+    wd_d = (wd - 1) * ldx + 1
 
     def _lax_full(x, w, bias=None, residual=None):
         return _lax_epilogue(_lax_conv(x, w, sy, sx, py, px, dy, dx,
-                                       groups), bias, relu, pool,
-                             residual=residual)
+                                       groups, ldy=ldy, ldx=ldx),
+                             bias, relu, pool, residual=residual)
 
     if fallback:
         return _lax_full(x, w, bias, residual)
@@ -951,18 +1137,18 @@ def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
     plan_target = tgt.plan_target if tgt is not None else "interpret"
 
     def _loud_fallback(reason: str) -> jax.Array:
-        # a COMPILED request this geometry can't honor degrades to lax
-        # with a traced event — never to a silent interpreter run
-        active_tracer().event("exec.fallback",
-                              target=tgt.name, to="lax",
-                              layer=f"{ci}->{co}k{hk}x{wk}",
-                              reason=reason)
+        # a request this geometry can't honor degrades to lax with a
+        # traced event + counter — never a silent interpreter run
+        record_fallback("fwd", reason,
+                        target=tgt.name if tgt is not None else "legacy",
+                        layer=f"{ci}->{co}k{hk}x{wk}")
         return _lax_full(x, w, bias, residual)
 
     try:
-        plan = plan_conv(h, wd, ci_g, co // groups, hk, wk, batch=b,
+        plan = plan_conv(h_d, wd_d, ci_g, co // groups, hk, wk, batch=b,
                          stride=(sy, sx), padding=(py, px),
-                         dilation=(dy, dx), pool=pool,
+                         dilation=(dy, dx), lhs_dilation=(ldy, ldx),
+                         pool=pool,
                          residual=residual is not None,
                          dtype_bytes=x.dtype.itemsize,
                          autotune=autotune, target=plan_target)
@@ -986,9 +1172,10 @@ def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
             ci=bk.ci if ci_block is None else ci_block,
             halo_y=0, halo_x=0,
             b=bk.b if b_block is None else b_block)
-        plan = plan_conv(h, wd, ci_g, co // groups, hk, wk, batch=b,
+        plan = plan_conv(h_d, wd_d, ci_g, co // groups, hk, wk, batch=b,
                          stride=(sy, sx), padding=(py, px),
-                         dilation=(dy, dx), pool=pool,
+                         dilation=(dy, dx), lhs_dilation=(ldy, ldx),
+                         pool=pool,
                          residual=residual is not None, blocks=override,
                          target=plan_target)
         if plan_target != "interpret":
@@ -1032,16 +1219,41 @@ def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
     def _fwd(x, w, bias, residual):
         return kernel_conv(x, w, bias, residual), (x, w, bias, residual)
 
+    _tgt_name = tgt.name if tgt is not None else "legacy"
+    _layer_tag = f"{ci}->{co}k{hk}x{wk}"
+
+    def _bwd_lax_fallback(res, g, reason):
+        # grouped/lhs-dilated forwards: lax VJP wholesale (still
+        # planned and accounted via plan_conv_dgrad/plan_conv_wgrad
+        # handles).  bias/residual=None are leafless pytree primals:
+        # jax.vjp hands back matching None cotangents, so one scaffold
+        # covers every arity
+        record_fallback("bwd", reason, target=_tgt_name,
+                        layer=_layer_tag)
+        _, vjp = jax.vjp(_lax_full, *res)
+        return vjp(g)
+
+    def _dgrad_lax_fallback(x, w, gy, reason):
+        record_fallback("dgrad", reason, target=_tgt_name,
+                        layer=_layer_tag)
+        _, vjp = jax.vjp(
+            lambda xx: _lax_conv(xx, w, sy, sx, py, px, dy, dx, 1), x)
+        (gx,) = vjp(gy)
+        return gx
+
+    def _wgrad_lax_fallback(x, w, gy, reason):
+        record_fallback("wgrad", reason, target=_tgt_name,
+                        layer=_layer_tag)
+        _, vjp = jax.vjp(
+            lambda ww: _lax_conv(x, ww, sy, sx, py, px, dy, dx, 1), w)
+        (gw,) = vjp(gy)
+        return gw
+
     def _bwd(res, g):
         x, w, bias, residual = res
-        if not (dgrad_rides_kernel(plan) and groups == 1):
-            # strided/grouped: lax VJP wholesale (still planned and
-            # accounted via plan_conv_dgrad/plan_conv_wgrad handles).
-            # bias/residual=None are leafless pytree primals: jax.vjp
-            # hands back matching None cotangents, so one scaffold
-            # covers every arity
-            _, vjp = jax.vjp(_lax_full, *res)
-            return vjp(g)
+        if groups != 1 or ldy > 1 or ldx > 1:
+            return _bwd_lax_fallback(
+                res, g, "grouped or lhs-dilated forward")
         # 1) peel the epilogue: recompute the pre-epilogue conv output
         #    (cheaper than spilling it from the fused kernel, whose
         #    whole point is the single post-epilogue write) and pull g
@@ -1054,18 +1266,53 @@ def conv2d_lb(x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
             y, bias, residual)
         gy, db, dres = epi_vjp(g)
         # 2) dgrad through the planned kernel: dy * flipped weights at
-        #    full padding rides the same batch-folded u x z dataflow
-        # the dgrad conv re-negotiates the target per-layer: its
-        # geometry may be mosaic-legal when the forward is not
-        gx = conv2d_lb(gy, _flip_w(w), None, stride=1,
-                       padding=((hk - 1) * dy - py, (wk - 1) * dx - px),
-                       dilation=(dy, dx), interpret=interpret,
-                       autotune=autotune, target=tgt)
-        # 3) wgrad via the exact lax counterpart (accounted off
-        #    plan_conv_wgrad; kernel execution is a ROADMAP follow-up)
-        _, w_vjp = jax.vjp(
-            lambda ww: _lax_conv(x, ww, sy, sx, py, px, dy, dx, 1), w)
-        (gw,) = w_vjp(gy)
+        #    full padding rides the same batch-folded u x z dataflow;
+        #    a strided forward hands the *compact* dy plane to the
+        #    kernel with lhs_dilation = stride.  The dgrad conv
+        #    re-negotiates the target per-layer: its geometry may be
+        #    mosaic-legal when the forward is not
+        if dgrad_rides_kernel(plan):
+            # a strided forward's dilated dy plane ends (h + 2p - ekh)
+            # % s rows short of covering the last real input rows; one
+            # appended compact zero row/col (s dilated positions, all
+            # zero) covers any such remainder, and the crop below
+            # drops the surplus
+            gyp = (jnp.pad(gy, ((0, 0), (0, int(sy > 1)),
+                                (0, int(sx > 1)), (0, 0)))
+                   if sy > 1 or sx > 1 else gy)
+            gx = conv2d_lb(gyp, _flip_w(w), None, stride=1,
+                           padding=((hk - 1) * dy - py,
+                                    (wk - 1) * dx - px),
+                           dilation=(dy, dx), lhs_dilation=(sy, sx),
+                           interpret=interpret,
+                           autotune=autotune, target=tgt)
+            gx = gx[:, :h, :wd]
+        else:
+            gx = _dgrad_lax_fallback(
+                x, w, gy, "padding past the full-padding transform")
+        # 3) wgrad through the dW-stationary Pallas kernel executing
+        #    the planned blocks (legality-gated, like the forward)
+        wplan = plan_conv_wgrad(plan, dtype_bytes=x.dtype.itemsize)
+        from repro.analysis.plan_check import check_wgrad_plan, errors
+        werrs = errors(check_wgrad_plan(wplan, batch=b,
+                                        dtype_bytes=x.dtype.itemsize,
+                                        target=plan_target))
+        wsteps = None
+        if tgt is not None and not tgt.interpret \
+                and jax.default_backend() == "cpu":
+            from repro.kernels.pallas_cpu import COMPILED_MAX_GRID_STEPS
+            nci_w, nco_w, ns_w = wplan.grid
+            wsteps = nci_w * nco_w * b * (ns_w + wplan.lag)
+            if wsteps > COMPILED_MAX_GRID_STEPS:
+                werrs = werrs or [
+                    f"grid of {wsteps} steps exceeds the unrolled CPU "
+                    f"lowering budget"]
+        if werrs:
+            gw = _wgrad_lax_fallback(x, w, gy, "; ".join(werrs))
+        else:
+            gw = wgrad_lb_call(x, gy, wplan,
+                               interpret=interpret)[..., :ci, :co]
+            gw = gw.astype(w.dtype)
         return gx, gw, db, dres
 
     kernel_conv.defvjp(_fwd, _bwd)

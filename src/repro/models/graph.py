@@ -387,6 +387,7 @@ def graph_training_step_report(graph: ConvGraph, h: int, w: int, *,
             "model": graph.name,
             "layers": n_stages,
             "dgrad_kernel_layers": kernel_layers,
+            "dgrad_kernel_frac": kernel_layers / max(1, len(handles)),
             "bytes_per_step": words * dtype_bytes,
             "bound_bytes_per_step": bound * dtype_bytes,
             "train_vs_bound_x": words / max(bound, 1e-30),

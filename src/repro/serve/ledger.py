@@ -265,9 +265,17 @@ class TrafficLedger:
     def _health(self) -> dict:
         """Terminal-state reconciliation: every submitted request is
         served, shed, or failed — goodput/shed fractions are over that
-        total, in the same currency as the traffic rows."""
+        total, in the same currency as the traffic rows.  The kernel
+        layer's process-wide fallback tally rides along: a nonzero
+        ``exec_fallbacks`` means some conv pass quietly left the
+        planned dataflow for lax, and the ledger's vs-bound rows no
+        longer describe what actually executed."""
+        from repro.kernels.conv_lb.ops import exec_fallback_counts
+
         submitted = self.submitted_requests
         return {
+            "exec_fallbacks": sum(exec_fallback_counts().values()),
+            "exec_fallbacks_by_pass": dict(exec_fallback_counts()),
             "served_requests": self._n_requests,
             "shed_requests": self.shed_requests,
             "failed_requests": self.failed_requests,
@@ -350,6 +358,12 @@ class TrafficLedger:
                 f"shed / {s['failed_requests']} failed)")
         if s["degraded_dispatches"]:
             line += f", {s['degraded_dispatches']} degraded dispatches"
+        if s["exec_fallbacks"]:
+            by = ", ".join(f"{k} x{v}" for k, v in
+                           sorted(s["exec_fallbacks_by_pass"].items()))
+            line += (f"\n  exec fallbacks: {s['exec_fallbacks']} "
+                     f"conv pass(es) left the planned kernel for lax "
+                     f"({by})")
         return line
 
     def _gauge_lines(self) -> str:

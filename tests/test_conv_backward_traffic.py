@@ -76,11 +76,11 @@ def test_kernel_gradients_match_lax_vjp(kw):
         assert float(jnp.max(jnp.abs(a - c))) < 1e-4
 
 
-def test_stride1_dgrad_rides_kernel_strided_falls_back():
-    """A unit-stride layer's grad-through jaxpr contains the dgrad
-    pallas_call (2 kernel calls: fwd + dgrad); a strided layer's
-    backward falls back to the lax VJP (1 kernel call — fwd only),
-    while still being planned via plan_conv_dgrad."""
+def test_dgrad_rides_kernel_at_any_stride():
+    """Every supported layer's grad-through jaxpr contains three
+    pallas_calls — fwd, dgrad (lhs-dilated at stride > 1) and the
+    dW-stationary wgrad — and ``dgrad_rides_kernel`` accepts strided
+    plans now that the compact-plane walk executes them."""
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (2, 9, 9, 4))
     w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 4, 6)) * 0.2
@@ -91,13 +91,13 @@ def test_stride1_dgrad_rides_kernel_strided_falls_back():
                        ).sum()))(x)
         return str(jaxpr).count("pallas_call")
 
-    assert count(1) == 2                      # fwd + planned dgrad
-    assert count(2) == 1                      # fwd only; dgrad via lax
+    assert count(1) == 3                      # fwd + dgrad + wgrad
+    assert count(2) == 3                      # strided rides too
     p1 = plan_conv(9, 9, 4, 6, 3, 3, batch=2, stride=(1, 1),
                    padding=(1, 1), vmem_budget=S_1M)
     p2 = plan_conv(9, 9, 4, 6, 3, 3, batch=2, stride=(2, 2),
                    padding=(1, 1), vmem_budget=S_1M)
-    assert dgrad_rides_kernel(p1) and not dgrad_rides_kernel(p2)
+    assert dgrad_rides_kernel(p1) and dgrad_rides_kernel(p2)
 
 
 def test_strided_and_grouped_fallback_gradients_match_lax():

@@ -232,6 +232,42 @@ def test_L007_exempts_kernels_tree_and_from_flags(tmp_path):
         """)
 
 
+def test_L008_flags_lax_conv_in_backward_paths(tmp_path):
+    findings = _lint_snippet(tmp_path, """
+        import jax
+
+        def _bwd(res, g):
+            y = jax.lax.conv_general_dilated(res, g, (1, 1), "SAME")
+
+            def inner():                  # closure is still backward
+                return jax.lax.conv(res, g, (1, 1), "SAME")
+
+            return y, inner()
+
+        def wgrad_helper(x, w):
+            return jax.lax.conv(x, w, (1, 1), "SAME")
+        """)
+    assert [f.rule for f in findings] == ["L008", "L008", "L008"]
+
+
+def test_L008_exempts_lax_fallbacks_and_forward_paths(tmp_path):
+    assert not _lint_snippet(tmp_path, """
+        import jax
+
+        def _dgrad_lax_fallback(x, w, gy):
+            return jax.lax.conv_general_dilated(x, w, (1, 1), "SAME")
+
+        def _bwd(res, g):
+            def esc_lax_fallback():       # enclosing suffix sanctions
+                return jax.lax.conv(res, g, (1, 1), "SAME")
+
+            return esc_lax_fallback()
+
+        def forward(x, w):                # not a backward path at all
+            return jax.lax.conv(x, w, (1, 1), "SAME")
+        """)
+
+
 def test_syntax_errors_are_findings_not_crashes(tmp_path):
     findings = _lint_snippet(tmp_path, "def broken(:\n")
     assert findings and findings[0].rule == "parse"
